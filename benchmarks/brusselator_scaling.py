@@ -1,0 +1,82 @@
+"""Figs. 7/8/9 analog: brusselator scaling study, task-local vs global.
+
+Paper: weak scaling on Summit, task-local+CUDA 3.7-4.9x over serial,
+global scales worse than task-local; Fig. 9 breaks time into advection /
+reaction / linear-solve / other.  On one CPU we (a) scale nx, (b) compare
+the two solver configurations, (c) produce the Fig.-9 region breakdown
+by timing the operators standalone at matched call counts.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps import brusselator as br
+from repro.configs.brusselator import BrusselatorConfig
+
+SIZES = [64, 256, 1024]
+TF = 0.25
+
+
+def _wall(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out[0] if isinstance(out, tuple) else out)
+    return out, time.perf_counter() - t0
+
+
+def run():
+    rows = []
+    breakdown_cfg = None
+    for nx in SIZES:
+        stats = {}
+        for solver in ("task-local", "global"):
+            cfg = BrusselatorConfig(nx=nx, t_final=TF, solver=solver)
+            (y, st), wall = _wall(lambda c=cfg: br.integrate(c))
+            # exclude compile: run again
+            (y, st), wall2 = _wall(lambda c=cfg: br.integrate(c))
+            stats[solver] = (wall2, st)
+            rows.append((f"brusselator.nx{nx}.{solver}", wall2 * 1e6,
+                         f"steps={int(st.steps)},newton={int(st.nni)},"
+                         f"netf={int(st.netf)}"))
+        sp = stats["global"][0] / stats["task-local"][0]
+        rows.append((f"brusselator.nx{nx}.speedup_tasklocal_vs_global",
+                     sp, "paper_fig8_analog"))
+        breakdown_cfg = BrusselatorConfig(nx=SIZES[-1], t_final=TF)
+
+    # Fig. 9 region breakdown at the largest size (per-call us, x calls)
+    cfg = breakdown_cfg
+    y0 = br.initial_state(cfg)
+    fe = jax.jit(br.advection_rhs(cfg))
+    fi = jax.jit(br.reaction_rhs(cfg))
+    lin = br.task_local_lin_solver(cfg)
+    jlin = jax.jit(lambda z, rhs: lin(0.0, z, 1e-4, rhs))
+    _, st = br.integrate(cfg)
+    n_stage = 4 * int(st.attempts)
+    n_newton = int(st.nni)
+
+    def t_of(f, *a):
+        jax.block_until_ready(f(*a))
+        t0 = time.perf_counter()
+        for _ in range(20):
+            r = f(*a)
+        jax.block_until_ready(r)
+        return (time.perf_counter() - t0) / 20
+
+    t_adv = t_of(fe, 0.0, y0) * n_stage
+    t_rea = t_of(fi, 0.0, y0) * (n_stage + n_newton)
+    t_lin = t_of(jlin, y0, y0) * n_newton
+    total = max(stats["task-local"][0], 1e-9)
+    other = max(total - t_adv - t_rea - t_lin, 0.0)
+    for name, val in (("advection", t_adv), ("reaction", t_rea),
+                      ("linear_solve", t_lin), ("other", other)):
+        rows.append((f"brusselator.breakdown.{name}", val * 1e6,
+                     f"frac={val/total:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

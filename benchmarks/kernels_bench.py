@@ -1,0 +1,56 @@
+"""Kernel-path microbenchmarks: batched block solve & fused vecops.
+
+Times the pure-jnp (XLA) implementations — the performance-relevant
+backend on this host — and runs the Pallas kernels in interpret mode for
+a correctness spot-check under benchmark shapes (their TPU performance
+is modeled in EXPERIMENTS.md §Perf from BlockSpec arithmetic).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import direct, matrix
+from repro.kernels import ops, ref
+
+
+def _t(fn, *a, reps=20):
+    jax.block_until_ready(fn(*a))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*a)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for nb, b in ((1024, 3), (8192, 3), (4096, 8)):
+        A = jax.random.normal(key, (nb, b, b)) + (b + 2.0) * jnp.eye(b)
+        r = jax.random.normal(jax.random.PRNGKey(1), (nb, b))
+        gj = jax.jit(direct.gauss_jordan_batched)
+        t_gj = _t(gj, A, r)
+        lu = jax.jit(lambda A, r: direct.block_lu_solve(
+            direct.block_lu_factor(matrix.BlockDiagMatrix(A)), r, b))
+        t_lu = _t(lu, A, r)
+        x = ops.block_solve(A, r, batch_tile=128)   # pallas interpret check
+        err = float(jnp.max(jnp.abs(x - ref.block_solve_ref(A, r))))
+        rows.append((f"block_solve.nb{nb}.b{b}.gj_xla", t_gj,
+                     f"lu_us={t_lu:.1f},pallas_interp_err={err:.1e}"))
+    for K, N in ((5, 2 ** 20),):
+        c = jnp.arange(1.0, K + 1)
+        X = jax.random.normal(key, (K, N))
+        fused = jax.jit(lambda c, X: jnp.einsum("k,kn->n", c, X))
+        pairwise = jax.jit(lambda c, X: sum(c[i] * X[i] for i in range(K)))
+        rows.append((f"lincomb.K{K}.N{N}.fused", _t(fused, c, X),
+                     f"pairwise_us={_t(pairwise, c, X):.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

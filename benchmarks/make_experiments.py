@@ -1,0 +1,105 @@
+"""Render the EXPERIMENTS.md §Dry-run + §Roofline tables from results."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f}TB"
+    if b >= 1e9:
+        return f"{b/1e9:.1f}GB"
+    return f"{b/1e6:.0f}MB"
+
+
+def rows(mesh=None, tagged=False):
+    out = []
+    for f in sorted(glob.glob(os.path.join(DIR, "*.json"))):
+        base = os.path.basename(f)[:-5]
+        if (base.count("__") != 2) != tagged:
+            continue
+        r = json.load(open(f))
+        if mesh and r.get("mesh") != mesh:
+            continue
+        out.append(r)
+    return out
+
+
+def dryrun_table():
+    print("| arch | shape | 16x16 (256) | 2x16x16 (512) | per-chip state+args | notes |")
+    print("|---|---|---|---|---|---|")
+    singles = {(r["arch"], r["shape"]): r for r in rows("single")}
+    multis = {(r["arch"], r["shape"]): r for r in rows("multi")}
+    skips = {(r["arch"], r["shape"]): r for r in rows()
+             if r.get("skipped")}
+    keys = sorted(set(singles) | set(multis) | set(skips))
+    for k in keys:
+        a, s = k
+        if k in skips:
+            print(f"| {a} | {s} | SKIP | SKIP | - | sub-quadratic-only shape |")
+            continue
+        rs, rm = singles.get(k), multis.get(k)
+        def st(r):
+            if r is None:
+                return "-"
+            return ("compiled" if r.get("ok") else "FAIL") + \
+                f" ({r.get('compile_s', 0):.0f}s)"
+        mem = "-"
+        if rs and rs.get("memory", {}).get("argument_size_in_bytes"):
+            m = rs["memory"]
+            mem = fmt_bytes(m["argument_size_in_bytes"]) + " + " + \
+                fmt_bytes(m.get("temp_size_in_bytes", 0)) + " temp"
+        print(f"| {a} | {s} | {st(rs)} | {st(rm)} | {mem} | |")
+
+
+def roofline_table():
+    print("| arch | shape | t_compute | t_memory | t_collective | bottleneck"
+          " | useful | MFU-bound |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows("single"):
+        if "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {rl['t_compute']:.3g}s | "
+              f"{rl['t_memory']:.3g}s | {rl['t_collective']:.3g}s | "
+              f"{rl['bottleneck']} | {rl['useful_ratio']:.2f} | "
+              f"{rl['mfu_bound']:.2%} |")
+
+
+def perf_table():
+    print("| run | t_compute | t_memory | t_collective | bottleneck | "
+          "MFU-bound | AG/AR/A2A (GB per chip) |")
+    print("|---|---|---|---|---|---|---|")
+    for r in rows(tagged=True):
+        if "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        hc = r.get("hlocost", {})
+        tag = os.path.basename(
+            [f for f in glob.glob(os.path.join(DIR, "*.json"))
+             if json.load(open(f)) == r][0])
+        name = f"{r['arch'][:12]} {r['shape']} {r.get('profile','')}"
+        coll = (f"{hc.get('coll_all-gather',0)/1e9:.0f}/"
+                f"{hc.get('coll_all-reduce',0)/1e9:.0f}/"
+                f"{hc.get('coll_all-to-all',0)/1e9:.0f}")
+        print(f"| {name} | {rl['t_compute']:.3g}s | {rl['t_memory']:.3g}s | "
+              f"{rl['t_collective']:.3g}s | {rl['bottleneck']} | "
+              f"{rl['mfu_bound']:.2%} | {coll} |")
+
+
+if __name__ == "__main__":
+    import sys
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("dryrun", "all"):
+        print("### Dry-run matrix\n")
+        dryrun_table()
+    if which in ("roofline", "all"):
+        print("\n### Roofline (single pod)\n")
+        roofline_table()
+    if which in ("perf", "all"):
+        print("\n### Perf iterations\n")
+        perf_table()

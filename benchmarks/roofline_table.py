@@ -1,0 +1,43 @@
+"""Aggregate the dry-run results into the §Roofline table (derived, not
+timed): reads benchmarks/results/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_rows(mesh="single", tagged=False):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DIR, "*.json"))):
+        base = os.path.basename(f)[:-5]
+        if (base.count("__") != 2) != tagged:
+            continue  # untagged = baseline table; tagged = perf iterations
+        r = json.load(open(f))
+        if r.get("skipped") or not r.get("ok") or "roofline" not in r:
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        rows.append(r)
+    return rows
+
+
+def run():
+    out = []
+    for r in load_rows("single"):
+        rl = r["roofline"]
+        dom = {"compute": rl["t_compute"], "memory": rl["t_memory"],
+               "collective": rl["t_collective"]}[rl["bottleneck"]]
+        out.append((f"roofline.{r['arch']}.{r['shape']}", dom * 1e6,
+                    f"bneck={rl['bottleneck']},mfu_bound={rl['mfu_bound']:.4f},"
+                    f"useful={rl['useful_ratio']:.2f}"))
+    n_multi = len(load_rows("multi"))
+    out.append(("dryrun.multi_pod_cells_ok", float(n_multi), "2x16x16"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

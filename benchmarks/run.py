@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (per the repo contract).
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run vector_ops # one module
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+MODULES = [
+    "vector_ops",            # paper Fig. 3
+    "meshvector_overhead",   # paper Fig. 4
+    "brusselator_scaling",   # paper Figs. 7/8/9
+    "linear_sum_bandwidth",  # paper Table 1
+    "kernels_bench",         # kernel-path microbenchmarks
+    "roofline_table",        # EXPERIMENTS §Roofline (derived from dry-run)
+]
+
+
+def main() -> None:
+    picked = sys.argv[1:] or MODULES
+    print("name,us_per_call,derived")
+    for name in picked:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # keep the harness going
+            print(f"{name}.ERROR,0,{type(e).__name__}:{e}")
+            continue
+        for r in rows:
+            print(",".join(str(x) for x in r), flush=True)
+        print(f"{name}.total_wall_s,{time.time()-t0:.1f},-", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Fig.-3 analog: node-local vector operation performance vs length.
+
+Paper: serial vs CUDA/HIP/RAJA/OpenMPDEV vectors; crossover at ~1e4
+elements set by the ~8us kernel-launch latency.  Here: numpy-serial vs
+jit-jnp (XLA) vs Pallas(interpret excluded from timing claims — we time
+the jnp backend the TPU deployment would JIT) — the crossover is set by
+the XLA dispatch overhead, which we measure the same way the paper
+measured launch latency (timing an empty kernel).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import vector as nv
+
+LENGTHS = [10 ** 3, 10 ** 4, 10 ** 5, 10 ** 6]
+REPS = 30
+
+STREAMING = {
+    "linear_sum": (lambda x, y: nv.linear_sum(2.0, x, -1.0, y),
+                   lambda x, y: 2.0 * x - 1.0 * y),
+    "prod": (nv.prod, lambda x, y: x * y),
+    "scale": (lambda x, y: nv.scale(3.0, x), lambda x, y: 3.0 * x),
+    "abs": (lambda x, y: nv.vabs(x), lambda x, y: np.abs(x)),
+}
+REDUCTION = {
+    "dot": (nv.dot, lambda x, y: np.dot(x, y)),
+    "wrms": (lambda x, y: nv.wrms_norm(x, y),
+             lambda x, y: np.sqrt(np.mean((x * y) ** 2))),
+    "max_norm": (lambda x, y: nv.max_norm(x), lambda x, y: np.abs(x).max()),
+    "l1_norm": (lambda x, y: nv.l1_norm(x), lambda x, y: np.abs(x).sum()),
+}
+
+
+def _time(fn, *args, reps=REPS):
+    fn(*args)  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    if hasattr(r, "block_until_ready"):
+        r.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run():
+    rows = []
+    # dispatch overhead (paper's empty-kernel launch-latency measurement)
+    empty = jax.jit(lambda x: x)
+    x0 = jnp.zeros((8,))
+    overhead = _time(lambda: empty(x0).block_until_ready(), reps=200)
+    rows.append(("dispatch_overhead_us", overhead, "paper_analog=8us_launch"))
+
+    for n in LENGTHS:
+        xj = jnp.arange(n, dtype=jnp.float64) / n
+        yj = jnp.ones((n,), jnp.float64) * 0.5
+        xn, yn = np.asarray(xj), np.asarray(yj)
+        for fam, table in (("stream", STREAMING), ("reduce", REDUCTION)):
+            for name, (jfn, nfn) in table.items():
+                jitted = jax.jit(jfn)
+                t_jax = _time(lambda: jax.block_until_ready(jitted(xj, yj)))
+                t_np = _time(nfn, xn, yn)
+                rows.append((f"{fam}.{name}.n{n}.jnp", t_jax,
+                             f"numpy_us={t_np:.2f}"))
+    # crossover estimate for linear_sum
+    jitted = jax.jit(STREAMING["linear_sum"][0])
+    for n in LENGTHS:
+        xj = jnp.zeros((n,)); yj = jnp.ones((n,))
+        t_jax = _time(lambda: jax.block_until_ready(jitted(xj, yj)))
+        t_np = _time(STREAMING["linear_sum"][1], np.zeros(n), np.ones(n))
+        if t_jax <= t_np:
+            rows.append(("crossover_linear_sum", float(n),
+                         "first_n_where_jit_wins"))
+            break
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

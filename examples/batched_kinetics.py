@@ -1,0 +1,80 @@
+"""Submodel use case (paper §2, Fig. 5): many small independent stiff
+kinetics systems integrated concurrently.
+
+On GPUs the paper bundles cell groups into CVODE instances on CUDA
+streams; the TPU-native expression is ONE vectorized adaptive integrator
+(masked while_loop) whose Newton step solves the Fig.-1 block-diagonal
+Jacobian with the batched Gauss-Jordan / Pallas kernel.
+
+Each system is a Robertson-like problem with per-cell rate constants
+(the "large variations in stiffness" the paper warns about): per-system
+adaptive steps absorb it.
+
+Run:  PYTHONPATH=src python examples/batched_kinetics.py [--cells 512]
+"""
+import argparse
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from repro.core import batched, butcher
+from repro.core.arkode import ODEOptions
+from repro.core.policies import ExecPolicy, XLA_FUSED
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", type=int, default=512)
+    ap.add_argument("--tf", type=float, default=10.0)
+    ap.add_argument("--pallas", action="store_true")
+    args = ap.parse_args()
+
+    n = args.cells
+    key = jax.random.PRNGKey(0)
+    # per-cell stiffness: k3 spans two orders of magnitude
+    k1 = 0.04 * jnp.ones((n,))
+    k2 = 1e4 * (0.5 + jax.random.uniform(key, (n,)))
+    k3 = 3e7 * 10.0 ** jax.random.uniform(jax.random.PRNGKey(1), (n,),
+                                          minval=-1.0, maxval=1.0)
+
+    def f(t, y):  # y: (n, 3)
+        a, b, c = y[:, 0], y[:, 1], y[:, 2]
+        r1 = k1 * a
+        r2 = k2 * b * c
+        r3 = k3 * b * b
+        return jnp.stack([-r1 + r2, r1 - r2 - r3, r3], axis=1)
+
+    def jac(t, y):
+        a, b, c = y[:, 0], y[:, 1], y[:, 2]
+        z = jnp.zeros_like(a)
+        return jnp.stack([
+            jnp.stack([-k1, k2 * c, k2 * b], axis=1),
+            jnp.stack([k1, -k2 * c - 2 * k3 * b, -k2 * b], axis=1),
+            jnp.stack([z, 2 * k3 * b, z], axis=1)], axis=1)
+
+    y0 = jnp.concatenate([jnp.ones((n, 1)), jnp.zeros((n, 2))], axis=1)
+    policy = (ExecPolicy(backend="pallas", interpret=True) if args.pallas
+              else XLA_FUSED)
+    print(f"integrating {n} independent stiff kinetics systems "
+          f"(block-diagonal Jacobian: {n} blocks of 3x3) to t={args.tf}")
+    t0 = time.time()
+    y, st = batched.ensemble_dirk_integrate(
+        f, jac, y0, 0.0, args.tf, butcher.SDIRK2,
+        ODEOptions(rtol=1e-5, atol=1e-10, max_steps=100_000), policy=policy)
+    wall = time.time() - t0
+    steps = jax.device_get(st.steps)
+    print(f"  all converged: {bool(jnp.all(st.success))}   wall={wall:.2f}s")
+    print(f"  per-system adaptive steps: min={steps.min()} "
+          f"median={int(jnp.median(jnp.asarray(steps)))} max={steps.max()}"
+          f"   (stiffer cells take more steps)")
+    mass = jnp.sum(y, axis=1)
+    print(f"  mass conservation: max |1 - sum(y)| = "
+          f"{float(jnp.max(jnp.abs(mass - 1.0))):.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""repro.core — SUNDIALS-on-TPU: the paper's contribution in JAX.
+
+Layers (mirroring the SUNDIALS class structure):
+  vector     — N_Vector ops, MeshVector (MPIPlusX), ManyVector
+  memory     — SUNMemoryHelper analog
+  policies   — ExecPolicy analogs (jnp vs Pallas, tile shapes)
+  butcher    — ERK/DIRK/IMEX Butcher tables
+  controller — step-size controllers
+  arkode     — adaptive ERK / DIRK / IMEX-ARK integrators
+  cvode      — adaptive BDF + functional Adams
+  kinsol     — Newton + Anderson fixed-point
+  krylov     — GMRES/FGMRES/BiCGStab/TFQMR/PCG (matrix-free)
+  matrix     — dense + low-storage block-diagonal matrices
+  direct     — batched block-diagonal direct solver
+  batched    — vmap'd ensemble integration (submodel use case)
+"""
+from . import (arkode, batched, butcher, controller, cvode, direct, events,
+               kinsol, krylov, matrix, memory, policies, vector)
+
+__all__ = ["arkode", "batched", "butcher", "controller", "cvode", "direct",
+           "events", "kinsol", "krylov", "matrix", "memory", "policies",
+           "vector"]

@@ -1,0 +1,413 @@
+"""ARKODE analog: adaptive explicit / implicit / IMEX additive Runge-Kutta.
+
+The integrator control logic is written **only** against the vector-ops
+layer (streaming ops + WRMS reductions) and solver callbacks — the
+paper's core design point: the same integrator source runs on any data
+layout / parallel backend, because every hardware-specific detail lives
+in the vector / solver implementations.
+
+Public entry points:
+* :func:`erk_integrate`  — adaptive explicit RK (embedded pairs).
+* :func:`dirk_integrate` — adaptive diagonally-implicit RK + Newton.
+* :func:`imex_integrate` — adaptive additive IMEX-ARK (ARKODE's IMEX).
+* ``*_fixed`` variants   — fixed-step (for convergence-order tests).
+
+All are jit-, vmap- and shard-compatible: state is a flat NamedTuple of
+scalars + the solution pytree; loops are ``lax.while_loop``/``scan``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import controller as ctrl
+from . import kinsol
+from . import vector as nv
+from .butcher import ButcherTable, IMEXTable
+
+Pytree = Any
+
+
+class IntegratorStats(NamedTuple):
+    steps: jnp.ndarray          # accepted steps
+    attempts: jnp.ndarray       # step attempts
+    nfe: jnp.ndarray            # explicit RHS evals
+    nfi: jnp.ndarray            # implicit RHS evals
+    nni: jnp.ndarray            # Newton iterations
+    netf: jnp.ndarray           # error-test failures
+    ncfn: jnp.ndarray           # nonlinear convergence failures
+    last_h: jnp.ndarray
+    t: jnp.ndarray
+    success: jnp.ndarray
+
+
+class ODEOptions(NamedTuple):
+    rtol: float = 1e-6
+    atol: float = 1e-9
+    h0: float = 0.0             # 0 -> auto
+    hmin: float = 0.0
+    hmax: float = jnp.inf
+    max_steps: int = 100_000
+    newton_max: int = 4
+    newton_tol_fac: float = 0.1   # Newton tol = fac * (error-test tol 1.0)
+    controller: ctrl.ControllerConfig = ctrl.ControllerConfig()
+    eta_cf: float = 0.25          # h reduction after a Newton failure
+
+
+def _tree_where(pred, a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _ewt(y: Pytree, rtol, atol) -> Pytree:
+    """SUNDIALS error weights: ewt_i = 1/(rtol*|y_i| + atol)."""
+    return jax.tree_util.tree_map(
+        lambda yl: 1.0 / (rtol * jnp.abs(yl) + atol), y)
+
+
+def _initial_h(f, t0, y0, tf, rtol, atol):
+    """Cheap h0 heuristic (Hairer-Wanner-style, simplified)."""
+    w = _ewt(y0, rtol, atol)
+    f0 = f(t0, y0)
+    d0 = nv.wrms_norm(y0, w)
+    d1 = nv.wrms_norm(f0, w)
+    h = jnp.where(d1 > 1e-10, 0.01 * d0 / jnp.maximum(d1, 1e-10),
+                  1e-6 * (tf - t0))
+    h = jnp.clip(h, 1e-12 * (tf - t0), 0.1 * (tf - t0))
+    return jnp.maximum(h, 1e-14)
+
+
+# ----------------------------------------------------------------------------
+# Explicit RK
+# ----------------------------------------------------------------------------
+
+
+def _erk_step(f, t, y, h, table: ButcherTable):
+    """One explicit step: returns (y_new, y_err, nfe)."""
+    s = table.stages
+    ks = []
+    for i in range(s):
+        if i == 0:
+            yi = y
+        else:
+            coeffs = [1.0] + [h * table.A[i][j] for j in range(i)]
+            yi = nv.linear_combination(coeffs, [y] + ks)
+        ks.append(f(t + table.c[i] * h, yi))
+    y_new = nv.linear_combination([1.0] + [h * bi for bi in table.b], [y] + ks)
+    if table.b_emb is not None:
+        dcoef = [h * (bi - bh) for bi, bh in zip(table.b, table.b_emb)]
+        y_err = nv.linear_combination(dcoef, ks)
+    else:
+        y_err = nv.const_like(0.0, y)
+    return y_new, y_err, s
+
+
+def erk_integrate(f: Callable, y0: Pytree, t0, tf,
+                  table: ButcherTable, opts: ODEOptions = ODEOptions()):
+    """Adaptive explicit RK from t0 to tf. Returns (y(tf), stats)."""
+    t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
+    tf = jnp.asarray(tf, dtype=t0.dtype)
+    h0 = jnp.where(opts.h0 > 0, opts.h0, _initial_h(f, t0, y0, tf,
+                                                    opts.rtol, opts.atol))
+    p = max(table.emb_order + 1, 2)  # controller exponent (ARKODE style)
+
+    class Carry(NamedTuple):
+        t: jnp.ndarray
+        y: Pytree
+        h: jnp.ndarray
+        cst: ctrl.ControllerState
+        stats: IntegratorStats
+        after_fail: jnp.ndarray
+        give_up: jnp.ndarray
+
+    def cond(c: Carry):
+        return ((c.t < tf * (1 - 1e-12) - 1e-300) &
+                (c.stats.attempts < opts.max_steps) & (~c.give_up))
+
+    def body(c: Carry) -> Carry:
+        h = jnp.minimum(c.h, tf - c.t)
+        y_new, y_err, nfe = _erk_step(f, c.t, c.y, h, table)
+        w = _ewt(c.y, opts.rtol, opts.atol)
+        err = nv.wrms_norm(y_err, w)
+        # guard NaN/Inf: treat as failed step
+        bad = ~jnp.isfinite(err)
+        err = jnp.where(bad, 2.0, err)
+        accept = (err <= 1.0) & ~bad
+        eta, cst = ctrl.eta_from_error(opts.controller, c.cst, err, p,
+                                       after_failure=~accept)
+        cst = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(accept, a, b), cst, c.cst)
+        t_n = jnp.where(accept, c.t + h, c.t)
+        y_n = _tree_where(accept, y_new, c.y)
+        h_n = jnp.clip(h * eta, opts.hmin, opts.hmax)
+        give_up = (h_n <= opts.hmin) & (opts.hmin > 0) | (h * eta < 1e-14)
+        st = c.stats
+        st = st._replace(
+            steps=st.steps + accept.astype(jnp.int32),
+            attempts=st.attempts + 1,
+            nfe=st.nfe + nfe,
+            netf=st.netf + (~accept).astype(jnp.int32),
+            last_h=h, t=t_n)
+        return Carry(t_n, y_n, h_n, cst, st, ~accept, give_up)
+
+    zero = jnp.zeros((), jnp.int32)
+    stats0 = IntegratorStats(zero, zero, zero, zero, zero, zero, zero,
+                             h0, t0, jnp.zeros((), bool))
+    c = Carry(t0, y0, h0, ctrl.init_state(t0.dtype), stats0,
+              jnp.zeros((), bool), jnp.zeros((), bool))
+    c = lax.while_loop(cond, body, c)
+    stats = c.stats._replace(success=c.t >= tf * (1 - 1e-10))
+    return c.y, stats
+
+
+def erk_fixed(f: Callable, y0: Pytree, t0, tf, n_steps: int,
+              table: ButcherTable):
+    """Fixed-step ERK via scan (for convergence-order tests)."""
+    h = (tf - t0) / n_steps
+
+    def step(carry, i):
+        t, y = carry
+        y_new, _, _ = _erk_step(f, t, y, h, table)
+        return (t + h, y_new), None
+
+    (t, y), _ = lax.scan(step, (jnp.asarray(t0, jnp.result_type(float)), y0),
+                         jnp.arange(n_steps))
+    return y
+
+
+# ----------------------------------------------------------------------------
+# Implicit stage machinery (shared by DIRK and IMEX)
+# ----------------------------------------------------------------------------
+
+
+def default_lin_solver(fi: Callable):
+    """Matrix-free Newton linear solver: solves (I - gamma*J_fi) dz = rhs
+    with GMRES, J_fi v computed by jvp.  This is the SPGMR default of
+    ARKODE; swap in a batched block direct solver via ``lin_solver=``."""
+    from . import krylov
+
+    def solve(t, z, gamma, rhs):
+        def matvec(v):
+            _, jv = jax.jvp(lambda zz: fi(t, zz), (z,), (v,))
+            return nv.linear_sum(1.0, v, -gamma, jv)
+
+        dz, _ = krylov.gmres(matvec, rhs, tol=1e-4, restart=20,
+                             max_restarts=2)
+        return dz
+
+    return solve
+
+
+def dense_lin_solver(fi: Callable):
+    """Direct dense Newton solver via jacfwd (small systems)."""
+    from jax.flatten_util import ravel_pytree
+
+    def solve(t, z, gamma, rhs):
+        z_flat, unravel = ravel_pytree(z)
+        rhs_flat, _ = ravel_pytree(rhs)
+
+        def f_flat(zf):
+            return ravel_pytree(fi(t, unravel(zf)))[0]
+
+        J = jax.jacfwd(f_flat)(z_flat)
+        M = jnp.eye(J.shape[0], dtype=J.dtype) - gamma * J
+        return unravel(jnp.linalg.solve(M, rhs_flat))
+
+    return solve
+
+
+def _implicit_stage(fi, t_i, r, h_aii, z0, lin_solve, wnorm, opts):
+    """Solve z = r + h*aii*fi(t_i, z) by Newton; returns (z, iters, ok)."""
+    gamma = h_aii
+
+    def gfun(z):
+        return nv.linear_combination([1.0, -gamma, -1.0], [z, fi(t_i, z), r])
+
+    def nlin_solve(z, rhs):
+        return lin_solve(t_i, z, gamma, rhs)
+
+    z, st = kinsol.newton_solve(gfun, z0, nlin_solve, wnorm=wnorm,
+                                tol=opts.newton_tol_fac,
+                                max_iters=opts.newton_max)
+    return z, st.iters, st.converged
+
+
+# ----------------------------------------------------------------------------
+# IMEX-ARK (and DIRK as the fe=0 special case)
+# ----------------------------------------------------------------------------
+
+
+def _ark_step(fe, fi, t, y, h, tab: IMEXTable, lin_solve, wnorm, opts):
+    """One additive RK step. Returns (y_new, y_err, nfe, nfi, nni, ok)."""
+    AE, AI = tab.expl.A, tab.impl.A
+    bE, bI = tab.expl.b, tab.impl.b
+    cE, cI = tab.expl.c, tab.impl.c
+    s = tab.impl.stages
+    kE, kI = [], []
+    nni = jnp.zeros((), jnp.int32)
+    ok = jnp.ones((), bool)
+    for i in range(s):
+        coeffs, vecs = [1.0], [y]
+        for j in range(i):
+            if AE[i][j] != 0.0:
+                coeffs.append(h * AE[i][j]); vecs.append(kE[j])
+            if AI[i][j] != 0.0:
+                coeffs.append(h * AI[i][j]); vecs.append(kI[j])
+        r = nv.linear_combination(coeffs, vecs)
+        aii = AI[i][i]
+        if aii == 0.0:
+            z = r
+        else:
+            z, it, conv = _implicit_stage(fi, t + cI[i] * h, r, h * aii,
+                                          r, lin_solve, wnorm, opts)
+            nni = nni + it
+            ok = ok & conv
+        kE.append(fe(t + cE[i] * h, z))
+        kI.append(fi(t + cI[i] * h, z))
+    y_new = nv.linear_combination(
+        [1.0] + [h * b for b in bE] + [h * b for b in bI],
+        [y] + kE + kI)
+    if tab.expl.b_emb is not None:
+        dE = [h * (b - bh) for b, bh in zip(bE, tab.expl.b_emb)]
+        dI = [h * (b - bh) for b, bh in zip(bI, tab.impl.b_emb)]
+        y_err = nv.linear_combination(dE + dI, kE + kI)
+    else:
+        y_err = nv.const_like(0.0, y)
+    # fi evals: one per stage k_I plus one per Newton iteration (G eval).
+    return y_new, y_err, s, s + nni, nni, ok
+
+
+def imex_integrate(fe: Callable, fi: Callable, y0: Pytree, t0, tf,
+                   tab: IMEXTable, opts: ODEOptions = ODEOptions(),
+                   lin_solver: Optional[Callable] = None):
+    """Adaptive IMEX-ARK: y' = fe(t,y) + fi(t,y); fe explicit, fi implicit.
+
+    ``lin_solver(t, z, gamma, rhs) -> dz`` solves (I - gamma*J_fi) dz = rhs.
+    Defaults to matrix-free GMRES with jvp.
+    """
+    lin_solve = lin_solver or default_lin_solver(fi)
+    t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
+    tf = jnp.asarray(tf, dtype=t0.dtype)
+
+    def ftot(t, y):
+        return nv.linear_sum(1.0, fe(t, y), 1.0, fi(t, y))
+
+    h0 = jnp.where(opts.h0 > 0, opts.h0,
+                   _initial_h(ftot, t0, y0, tf, opts.rtol, opts.atol))
+    p = max(tab.emb_order + 1, 2)
+
+    class Carry(NamedTuple):
+        t: jnp.ndarray
+        y: Pytree
+        h: jnp.ndarray
+        cst: ctrl.ControllerState
+        stats: IntegratorStats
+        give_up: jnp.ndarray
+
+    def cond(c):
+        return ((c.t < tf * (1 - 1e-12) - 1e-300) &
+                (c.stats.attempts < opts.max_steps) & (~c.give_up))
+
+    def body(c):
+        h = jnp.minimum(c.h, tf - c.t)
+        w = _ewt(c.y, opts.rtol, opts.atol)
+
+        def wnorm(v):
+            return nv.wrms_norm(v, w)
+
+        y_new, y_err, nfe, nfi, nni, nl_ok = _ark_step(
+            fe, fi, c.t, c.y, h, tab, lin_solve, wnorm, opts)
+        err = nv.wrms_norm(y_err, w)
+        bad = ~jnp.isfinite(err) | ~nl_ok
+        err = jnp.where(bad, 2.0, err)
+        accept = (err <= 1.0) & ~bad
+        eta, cst = ctrl.eta_from_error(opts.controller, c.cst, err, p,
+                                       after_failure=(~accept) & nl_ok)
+        # Newton failure: fixed shrink factor (ARKODE's etacf)
+        eta = jnp.where(nl_ok, eta, opts.eta_cf)
+        cst = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(accept, a, b), cst, c.cst)
+        t_n = jnp.where(accept, c.t + h, c.t)
+        y_n = _tree_where(accept, y_new, c.y)
+        h_n = jnp.clip(h * eta, opts.hmin, opts.hmax)
+        give_up = h * eta < 1e-14
+        st = c.stats
+        st = st._replace(
+            steps=st.steps + accept.astype(jnp.int32),
+            attempts=st.attempts + 1,
+            nfe=st.nfe + nfe, nfi=st.nfi + nfi, nni=st.nni + nni,
+            netf=st.netf + ((~accept) & nl_ok).astype(jnp.int32),
+            ncfn=st.ncfn + (~nl_ok).astype(jnp.int32),
+            last_h=h, t=t_n)
+        return Carry(t_n, y_n, h_n, cst, st, give_up)
+
+    zero = jnp.zeros((), jnp.int32)
+    stats0 = IntegratorStats(zero, zero, zero, zero, zero, zero, zero,
+                             h0, t0, jnp.zeros((), bool))
+    c = Carry(t0, y0, h0, ctrl.init_state(t0.dtype), stats0,
+              jnp.zeros((), bool))
+    c = lax.while_loop(cond, body, c)
+    stats = c.stats._replace(success=c.t >= tf * (1 - 1e-10))
+    return c.y, stats
+
+
+def dirk_integrate(fi: Callable, y0: Pytree, t0, tf, table: ButcherTable,
+                   opts: ODEOptions = ODEOptions(),
+                   lin_solver: Optional[Callable] = None):
+    """Adaptive DIRK for stiff y' = fi(t, y) (zero explicit part)."""
+    def fe(t, y):
+        return nv.const_like(0.0, y)
+
+    tab = IMEXTable(expl=ButcherTable(A=[[0.0] * table.stages
+                                         for _ in range(table.stages)],
+                                      b=[0.0] * table.stages,
+                                      c=table.c, order=table.order,
+                                      b_emb=([0.0] * table.stages
+                                             if table.b_emb is not None
+                                             else None),
+                                      emb_order=table.emb_order),
+                    impl=table, order=table.order,
+                    emb_order=table.emb_order)
+    return imex_integrate(fe, fi, y0, t0, tf, tab, opts, lin_solver)
+
+
+def imex_fixed(fe, fi, y0, t0, tf, n_steps: int, tab: IMEXTable,
+               lin_solver: Optional[Callable] = None,
+               opts: ODEOptions = ODEOptions(newton_max=12)):
+    """Fixed-step IMEX (convergence tests).  Newton tol tightened so the
+    nonlinear-solve error never pollutes the measured order."""
+    lin_solve = lin_solver or default_lin_solver(fi)
+    h = (tf - t0) / n_steps
+
+    def wnorm(v):
+        return jnp.sqrt(nv.dot(v, v) / nv.tree_size(v))
+
+    o = opts._replace(newton_tol_fac=1e-10, newton_max=12)
+
+    def step(carry, _):
+        t, y = carry
+        y_new, *_ = _ark_step(fe, fi, t, y, h, tab, lin_solve, wnorm, o)
+        return (t + h, y_new), None
+
+    (t, y), _ = lax.scan(step, (jnp.asarray(t0, jnp.result_type(float)), y0),
+                         jnp.arange(n_steps))
+    return y
+
+
+def dirk_fixed(fi, y0, t0, tf, n_steps, table: ButcherTable,
+               lin_solver=None):
+    def fe(t, y):
+        return nv.const_like(0.0, y)
+
+    s = table.stages
+    tab = IMEXTable(expl=ButcherTable(A=[[0.0] * s for _ in range(s)],
+                                      b=[0.0] * s, c=table.c,
+                                      order=table.order,
+                                      b_emb=([0.0] * s if table.b_emb
+                                             is not None else None),
+                                      emb_order=table.emb_order),
+                    impl=table, order=table.order, emb_order=table.emb_order)
+    return imex_fixed(fe, fi, y0, t0, tf, n_steps, tab, lin_solver)

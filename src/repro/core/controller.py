@@ -1,0 +1,67 @@
+"""Step-size controllers (SUNAdaptController analogs).
+
+SUNDIALS controls the step with eta = h_new/h_old computed from the WRMS
+error estimate of the embedded pair, with safety factor, growth clamps
+and special-casing of the first step / post-failure steps.  We implement
+the I, PI and PID controllers with ARKODE's default constants.
+
+All functions are pure and jit-safe: state is a small NamedTuple.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class ControllerState(NamedTuple):
+    err_prev: jnp.ndarray      # eps_{n-1}
+    err_prev2: jnp.ndarray     # eps_{n-2}
+
+
+def init_state(dtype=jnp.float64) -> ControllerState:
+    one = jnp.ones((), dtype=dtype)
+    return ControllerState(err_prev=one, err_prev2=one)
+
+
+class ControllerConfig(NamedTuple):
+    kind: str = "pi"           # 'i' | 'pi' | 'pid'
+    safety: float = 0.96       # ARKODE default
+    eta_max_first: float = 10000.0
+    eta_max: float = 20.0      # ARKODE growth clamp
+    eta_min: float = 0.1
+    eta_max_fail: float = 0.3  # shrink cap after an error-test failure
+    small_nef: int = 2
+    # PI gains (ARKODE defaults k1=0.8, k2=0.31 applied with 1/(p+1))
+    k1: float = 0.8
+    k2: float = 0.31
+    k3: float = 0.1
+
+
+def eta_from_error(cfg: ControllerConfig, state: ControllerState,
+                   err: jnp.ndarray, order: int,
+                   after_failure: jnp.ndarray) -> tuple:
+    """Compute eta = h_new/h and the updated controller state.
+
+    ``err`` is the WRMS norm of the scaled local error (<=1 means accept).
+    ``order`` is the order of the *embedded* estimate + 1 (method order
+    used for the exponent, per ARKODE convention p = emb_order + 1).
+    """
+    e = jnp.maximum(err, 1e-10)
+    p = jnp.asarray(order, dtype=e.dtype)  # may be traced (BDF order ramp)
+    e1 = jnp.maximum(state.err_prev, 1e-10)
+    e2 = jnp.maximum(state.err_prev2, 1e-10)
+
+    if cfg.kind == "i":
+        eta = e ** (-1.0 / p)
+    elif cfg.kind == "pi":
+        eta = e ** (-cfg.k1 / p) * e1 ** (cfg.k2 / p)
+    else:  # pid
+        eta = e ** (-cfg.k1 / p) * e1 ** (cfg.k2 / p) * e2 ** (-cfg.k3 / p)
+
+    eta = cfg.safety * eta
+    eta = jnp.clip(eta, cfg.eta_min, cfg.eta_max)
+    # after an error-test failure only allow shrinking (ARKODE etamxf)
+    eta = jnp.where(after_failure, jnp.minimum(eta, cfg.eta_max_fail), eta)
+    new_state = ControllerState(err_prev=e, err_prev2=e1)
+    return eta, new_state

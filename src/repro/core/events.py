@@ -1,0 +1,155 @@
+"""Root-finding / event detection (CVodeRootInit analog).
+
+SUNDIALS integrators can monitor user functions g_i(t, y) and stop at
+their roots (event detection: ignition, zero-crossings, switching
+surfaces).  The classic algorithm: after each accepted step check for a
+sign change of any g_i over [t_n, t_{n+1}]; if found, localize the root
+with bisection/regula-falsi on the dense-output interpolant.
+
+Here the integrator is jittable, so we implement event detection as a
+wrapper around the adaptive ERK integrator: a while_loop that advances
+step-by-step, detects the first sign change, then bisects on a cubic
+Hermite interpolant (y, f available at both ends — the same dense output
+CVODE uses between mesh points).  Everything stays pure-jax.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import vector as nv
+from .arkode import ODEOptions, _erk_step, _ewt, _initial_h
+from . import controller as ctrl
+from .butcher import ButcherTable
+
+
+class EventResult(NamedTuple):
+    t_event: jnp.ndarray      # time of the first root (or tf if none)
+    y_event: jnp.ndarray      # state at the root
+    found: jnp.ndarray        # bool
+    which: jnp.ndarray        # index of the triggered g_i
+    steps: jnp.ndarray
+
+
+def _hermite(t0, y0, f0, t1, y1, f1, t):
+    """Cubic Hermite dense output on [t0, t1] (CVODE's interpolant)."""
+    h = t1 - t0
+    s = (t - t0) / h
+    h00 = (1 + 2 * s) * (1 - s) ** 2
+    h10 = s * (1 - s) ** 2
+    h01 = s * s * (3 - 2 * s)
+    h11 = s * s * (s - 1)
+    return jax.tree_util.tree_map(
+        lambda a, fa, b, fb: h00 * a + h10 * h * fa + h01 * b + h11 * h * fb,
+        y0, f0, y1, f1)
+
+
+def erk_integrate_with_events(f: Callable, g: Callable, y0, t0, tf,
+                              table: ButcherTable,
+                              opts: ODEOptions = ODEOptions(),
+                              n_bisect: int = 40) -> EventResult:
+    """Integrate y' = f(t,y), stopping at the first root of any component
+    of g(t, y) (vector-valued).  Returns the event (or tf, found=False).
+    """
+    t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
+    tf = jnp.asarray(tf, dtype=t0.dtype)
+    h0 = jnp.where(opts.h0 > 0, opts.h0,
+                   _initial_h(f, t0, y0, tf, opts.rtol, opts.atol))
+    p = max(table.emb_order + 1, 2)
+    g0 = jnp.atleast_1d(g(t0, y0))
+    ng = g0.shape[0]
+
+    class Carry(NamedTuple):
+        t: jnp.ndarray
+        y: jnp.ndarray
+        gv: jnp.ndarray
+        h: jnp.ndarray
+        cst: ctrl.ControllerState
+        steps: jnp.ndarray
+        attempts: jnp.ndarray
+        hit_t: jnp.ndarray
+        hit_which: jnp.ndarray
+        found: jnp.ndarray
+
+    def cond(c: Carry):
+        return ((c.t < tf * (1 - 1e-12) - 1e-300) & (~c.found) &
+                (c.attempts < opts.max_steps))
+
+    def body(c: Carry):
+        h = jnp.minimum(c.h, tf - c.t)
+        y_new, y_err, _ = _erk_step(f, c.t, c.y, h, table)
+        w = _ewt(c.y, opts.rtol, opts.atol)
+        err = nv.wrms_norm(y_err, w)
+        bad = ~jnp.isfinite(err)
+        err = jnp.where(bad, 2.0, err)
+        accept = (err <= 1.0) & ~bad
+        eta, cst = ctrl.eta_from_error(opts.controller, c.cst, err, p,
+                                       after_failure=~accept)
+        cst = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(accept, a, b), cst, c.cst)
+        t1 = c.t + h
+        g1 = jnp.atleast_1d(g(t1, y_new))
+        # a root exists in (t, t1] iff some component changes sign
+        crossed = (jnp.sign(c.gv) * jnp.sign(g1) < 0) | (g1 == 0.0)
+        any_cross = accept & jnp.any(crossed)
+        which = jnp.argmax(crossed).astype(jnp.int32)
+
+        def localize(_):
+            f0 = f(c.t, c.y)
+            f1v = f(t1, y_new)
+
+            def bisect(i, ab):
+                lo, hi = ab
+                mid = 0.5 * (lo + hi)
+                ym = _hermite(c.t, c.y, f0, t1, y_new, f1v, mid)
+                gm = jnp.atleast_1d(g(mid, ym))[which]
+                glo_y = _hermite(c.t, c.y, f0, t1, y_new, f1v, lo)
+                glo = jnp.atleast_1d(g(lo, glo_y))[which]
+                same = jnp.sign(gm) == jnp.sign(glo)
+                return (jnp.where(same, mid, lo), jnp.where(same, hi, mid))
+
+            lo, hi = lax.fori_loop(0, n_bisect, bisect, (c.t, t1))
+            return 0.5 * (lo + hi)
+
+        hit_t = lax.cond(any_cross, localize, lambda _: c.hit_t,
+                         operand=None)
+        t_n = jnp.where(accept, t1, c.t)
+        y_n = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(accept, a, b), y_new, c.y)
+        g_n = jnp.where(accept, g1, c.gv)
+        h_n = jnp.clip(h * eta, opts.hmin, opts.hmax)
+        return Carry(t_n, y_n, g_n, h_n, cst,
+                     c.steps + accept.astype(jnp.int32),
+                     c.attempts + 1,
+                     jnp.where(any_cross, hit_t, c.hit_t),
+                     jnp.where(any_cross, which, c.hit_which),
+                     c.found | any_cross)
+
+    c0 = Carry(t0, y0, g0, h0, ctrl.init_state(t0.dtype),
+               jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+               tf, jnp.zeros((), jnp.int32), jnp.zeros((), bool))
+    c = lax.while_loop(cond, body, c0)
+    # state at the event via one final dense-output evaluation: re-take a
+    # small exact step to hit_t from the last accepted point <= hit_t
+    # (cheap: the integrator state is already just past the root)
+    y_event = c.y
+
+    def refine(_):
+        # integrate precisely from the last point BEFORE the event is not
+        # tracked; use Hermite between the bracketing states we kept:
+        # c.y is post-step; take a fixed small ERK step backward
+        hback = c.hit_t - c.t
+
+        def fneg(t, y):
+            return f(t, y)
+
+        ye, _, _ = _erk_step(fneg, c.t, c.y, hback, table)
+        return ye
+
+    y_event = lax.cond(c.found, refine, lambda _: c.y, operand=None)
+    return EventResult(t_event=jnp.where(c.found, c.hit_t, tf),
+                       y_event=y_event, found=c.found,
+                       which=c.hit_which, steps=c.steps)

@@ -1,0 +1,112 @@
+"""SUNMemoryHelper analog for JAX/TPU.
+
+The paper's SUNMemoryHelper is a *minimal* memory abstraction — not a
+full resource manager — with three jobs: allocate, deallocate, and copy
+between memory spaces (host / device / UVM / pinned), plus an ownership
+flag so user-provided buffers are never freed by the library.
+
+On TPU under JAX the analogous spaces are JAX *memory kinds*:
+
+* ``device``       — chip HBM (the default),
+* ``pinned_host``  — host RAM addressable for fast DMA (≙ CUDA pinned),
+* UVM has no TPU analog (single per-chip HBM space); we map it to
+  ``device`` and record the request so callers can introspect.
+
+Deallocation is delegated to JAX (buffer refcounts + donation); the
+helper exposes :meth:`donate` to mark arrays for buffer reuse, which is
+the XLA-native version of returning memory to a pool.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class MemoryType(enum.Enum):
+    HOST = "host"            # plain host memory (numpy / CPU jax buffer)
+    DEVICE = "device"        # chip HBM
+    UVM = "uvm"              # no TPU analog -> mapped to DEVICE (recorded)
+    PINNED = "pinned_host"   # host memory pinned for DMA
+
+
+@dataclass
+class SUNMemory:
+    """Wraps an array with its memory type and ownership flag (paper §3)."""
+
+    data: Any
+    mem_type: MemoryType
+    own: bool = True
+    requested_type: Optional[MemoryType] = None  # e.g. UVM downgraded to DEVICE
+
+
+@dataclass
+class MemoryHelper:
+    """Minimal alloc/copy interface the native data structures build on.
+
+    ``stats`` counts bytes allocated/copied per space — the
+    SUNMemoryHelper bookkeeping that lets applications audit data motion
+    (the paper's "minimize host<->device transfers" guidance becomes
+    checkable).
+    """
+
+    device: Optional[jax.Device] = None
+    stats: dict = field(default_factory=lambda: {
+        "alloc_bytes": 0, "copy_bytes": 0, "copies_h2d": 0, "copies_d2h": 0})
+
+    # -- allocation --------------------------------------------------------
+    def alloc(self, shape, dtype=jnp.float32,
+              mem_type: MemoryType = MemoryType.DEVICE) -> SUNMemory:
+        requested = mem_type
+        if mem_type == MemoryType.UVM:
+            mem_type = MemoryType.DEVICE  # single HBM space on TPU
+        arr = jnp.zeros(shape, dtype=dtype)
+        arr = self._place(arr, mem_type)
+        nbytes = arr.size * arr.dtype.itemsize
+        self.stats["alloc_bytes"] += int(nbytes)
+        return SUNMemory(arr, mem_type, own=True,
+                         requested_type=requested)
+
+    def wrap(self, data, mem_type: MemoryType = MemoryType.DEVICE) -> SUNMemory:
+        """Wrap a user-provided buffer — ownership stays with the user."""
+        return SUNMemory(data, mem_type, own=False)
+
+    # -- copy between spaces -------------------------------------------------
+    def copy(self, dst: SUNMemory, src: SUNMemory) -> SUNMemory:
+        """Copy src contents into dst's memory space (returns new SUNMemory
+        since JAX arrays are immutable; dst identity = space + shape)."""
+        arr = self._place(jnp.asarray(src.data), dst.mem_type)
+        nbytes = arr.size * arr.dtype.itemsize
+        self.stats["copy_bytes"] += int(nbytes)
+        if src.mem_type in (MemoryType.HOST, MemoryType.PINNED) and \
+           dst.mem_type == MemoryType.DEVICE:
+            self.stats["copies_h2d"] += 1
+        if src.mem_type == MemoryType.DEVICE and \
+           dst.mem_type in (MemoryType.HOST, MemoryType.PINNED):
+            self.stats["copies_d2h"] += 1
+        return SUNMemory(arr, dst.mem_type, own=dst.own,
+                         requested_type=dst.requested_type)
+
+    def _place(self, arr, mem_type: MemoryType):
+        """Move to the right memory kind; degrade gracefully on CPU-only."""
+        if mem_type == MemoryType.DEVICE:
+            return arr if self.device is None else jax.device_put(arr, self.device)
+        kind = "pinned_host" if mem_type == MemoryType.PINNED else None
+        if kind is not None:
+            try:
+                dev = self.device or jax.devices()[0]
+                sharding = jax.sharding.SingleDeviceSharding(dev, memory_kind=kind)
+                return jax.device_put(arr, sharding)
+            except Exception:
+                return arr  # backend lacks the memory kind (CPU): keep default
+        return arr
+
+    # -- donation (pool-reuse analog) -----------------------------------------
+    @staticmethod
+    def donate_argnums_for(fn, *argnums):
+        """Return jit(fn) with donated args — XLA reuses their buffers, the
+        TPU-native equivalent of handing memory back to an application pool."""
+        return jax.jit(fn, donate_argnums=argnums)

@@ -1,0 +1,44 @@
+"""Execution policies — the *ExecPolicy analog (paper §4.1).
+
+SUNDIALS lets users swap kernel-launch policies (ThreadDirect /
+GridStride / BlockReduce) per vector without touching integrator code.
+On TPU the tunable quantities are (a) whether an op runs as plain jnp
+(XLA-fused) or as a hand-written Pallas kernel, and (b) the Pallas
+BlockSpec tile shape (the VMEM working set — the analog of grid/block
+size).  A policy object carries those choices; native data structures
+accept one and thread it through to the kernels.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ExecPolicy:
+    """Execution policy for vector/matrix/solver operations.
+
+    backend       : 'jnp'    — plain jnp ops, XLA fuses (default; used by
+                                the dry-run path since XLA:CPU cannot
+                                lower TPU pallas_call);
+                    'pallas' — hand-written kernels from repro.kernels.
+    block_elems   : streaming-kernel tile length (lane-aligned, /128).
+    reduce_tile   : reduction-kernel tile length (BlockReduce analog).
+    batch_tile    : batched block-solver tile (systems per program).
+    interpret     : run Pallas in interpret mode (CPU validation).
+    """
+
+    backend: str = "jnp"
+    block_elems: int = 8 * 128
+    reduce_tile: int = 64 * 128
+    batch_tile: int = 128
+    interpret: bool = True  # flipped to False on real TPU deployments
+
+
+# ThreadDirect analog: one element per "thread" -> smallest aligned tiles.
+THREAD_DIRECT = ExecPolicy(backend="pallas", block_elems=128)
+# GridStride analog: each program strides over a large tile.
+GRID_STRIDE = ExecPolicy(backend="pallas", block_elems=64 * 128)
+# BlockReduce analog for reductions.
+BLOCK_REDUCE = ExecPolicy(backend="pallas", reduce_tile=64 * 128)
+# Pure-XLA default.
+XLA_FUSED = ExecPolicy(backend="jnp")

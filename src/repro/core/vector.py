@@ -1,0 +1,382 @@
+"""N_Vector analog: streaming + reduction operations over JAX pytrees.
+
+The SUNDIALS ``N_Vector`` class defines two families of operations:
+
+* **streaming** ops (elementwise, no communication): ``N_VLinearSum``,
+  ``N_VConst``, ``N_VProd``, ``N_VDiv``, ``N_VScale``, ``N_VAbs``,
+  ``N_VInv``, ``N_VAddConst``, ``N_VCompare`` and the fused variants
+  (``N_VLinearCombination``, ``N_VScaleAddMulti``, ...).
+* **reduction** ops (produce a scalar, require a global reduction in the
+  distributed setting): ``N_VDotProd``, ``N_VMaxNorm``, ``N_VWrmsNorm``,
+  ``N_VMin``, ``N_VL1Norm``, ``N_VWL2Norm``, ``N_VConstrMask``,
+  ``N_VMinQuotient``, ``N_VInvTest``.
+
+Here a "vector" is any JAX pytree of arrays (a flat ``jnp.ndarray``, a
+tuple of arrays — the ManyVector case — or a full parameter pytree).
+Streaming ops map elementwise over leaves; reductions reduce over every
+leaf and combine.
+
+The :class:`MeshVector` mirrors the paper's ``MPIPlusX`` vector: it pairs
+pytree data with the *name of a mesh axis*. Streaming ops remain purely
+node-local; reduction ops perform the node-local partial reduction and
+then a single collective (``lax.psum`` etc.) over the mesh axis — exactly
+the MPI_Allreduce the MPIPlusX vector appends. Two execution modes exist:
+
+* ``gspmd`` — data are global arrays with ``NamedSharding``; the ops are
+  ordinary jnp code and XLA's SPMD partitioner inserts the collectives.
+* ``explicit`` — ops run inside ``shard_map`` and issue ``lax.psum`` /
+  ``lax.pmax`` themselves (the literal MPIPlusX structure).
+
+Both modes produce bit-identical math; tests assert so.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax, tree_util
+
+Pytree = Any
+
+# ---------------------------------------------------------------------------
+# Leaf helpers
+# ---------------------------------------------------------------------------
+
+
+def _tmap(f: Callable, *trees: Pytree) -> Pytree:
+    return tree_util.tree_map(f, *trees)
+
+
+def _treduce(per_leaf: Callable, combine: Callable, tree: Pytree, init):
+    leaves = tree_util.tree_leaves(tree)
+    acc = init
+    for leaf in leaves:
+        acc = combine(acc, per_leaf(leaf))
+    return acc
+
+
+def tree_size(tree: Pytree) -> int:
+    """Global number of elements (static)."""
+    return sum(int(x.size) for x in tree_util.tree_leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Streaming operations (N_V* analogs).  Pure elementwise jnp — XLA fuses.
+# ---------------------------------------------------------------------------
+
+
+def _keep_dtype(out, *operands):
+    """SUNDIALS realtype semantics: ops preserve the operand dtype — a
+    float64 scalar coefficient (e.g. the integrator's step size under
+    x64) must not upcast a float32 state pytree (while_loop carries would
+    change type)."""
+    want = jnp.result_type(*operands)
+    return out.astype(want) if out.dtype != want else out
+
+
+def linear_sum(a, x: Pytree, b, y: Pytree) -> Pytree:
+    """z = a*x + b*y   (N_VLinearSum)."""
+    return _tmap(lambda xl, yl: _keep_dtype(a * xl + b * yl, xl, yl), x, y)
+
+
+def const_like(c, x: Pytree) -> Pytree:
+    """z_i = c   (N_VConst)."""
+    return _tmap(lambda xl: jnp.full_like(xl, c), x)
+
+
+def prod(x: Pytree, y: Pytree) -> Pytree:
+    """z = x .* y   (N_VProd)."""
+    return _tmap(jnp.multiply, x, y)
+
+
+def div(x: Pytree, y: Pytree) -> Pytree:
+    """z = x ./ y   (N_VDiv)."""
+    return _tmap(jnp.divide, x, y)
+
+
+def scale(c, x: Pytree) -> Pytree:
+    """z = c*x   (N_VScale)."""
+    return _tmap(lambda xl: _keep_dtype(c * xl, xl), x)
+
+
+def vabs(x: Pytree) -> Pytree:
+    """z = |x|   (N_VAbs)."""
+    return _tmap(jnp.abs, x)
+
+
+def inv(x: Pytree) -> Pytree:
+    """z = 1./x   (N_VInv)."""
+    return _tmap(lambda xl: 1.0 / xl, x)
+
+
+def add_const(x: Pytree, b) -> Pytree:
+    """z = x + b   (N_VAddConst)."""
+    return _tmap(lambda xl: _keep_dtype(xl + b, xl), x)
+
+
+def compare(c, x: Pytree) -> Pytree:
+    """z_i = 1 if |x_i| >= c else 0   (N_VCompare)."""
+    return _tmap(lambda xl: (jnp.abs(xl) >= c).astype(xl.dtype), x)
+
+
+def axpy(a, x: Pytree, y: Pytree) -> Pytree:
+    return _tmap(lambda xl, yl: _keep_dtype(a * xl + yl, xl, yl), x, y)
+
+
+# Fused streaming ops (the paper's N_VLinearCombination & friends).
+
+
+def linear_combination(coeffs: Sequence, vecs: Sequence[Pytree]) -> Pytree:
+    """z = sum_k c_k * X_k   (N_VLinearCombination), fused in one pass."""
+    assert len(coeffs) == len(vecs) and len(vecs) >= 1
+
+    def leaf_comb(*leaves):
+        acc = coeffs[0] * leaves[0]
+        for c, l in zip(coeffs[1:], leaves[1:]):
+            acc = acc + c * l
+        return _keep_dtype(acc, *leaves)
+
+    return _tmap(leaf_comb, *vecs)
+
+
+def scale_add_multi(coeffs: Sequence, x: Pytree, ys: Sequence[Pytree]):
+    """Z_k = c_k * x + Y_k   (N_VScaleAddMulti)."""
+    return [_tmap(lambda xl, yl, c=c: _keep_dtype(c * xl + yl, xl, yl),
+                  x, y) for c, y in zip(coeffs, ys)]
+
+
+# ---------------------------------------------------------------------------
+# Reduction operations.
+# ---------------------------------------------------------------------------
+
+
+def dot(x: Pytree, y: Pytree):
+    """<x, y>   (N_VDotProd).
+
+    Implemented as an all-axis sum of the elementwise product — NOT
+    ``jnp.vdot`` — because vdot reshapes to 1-D, and under GSPMD a
+    reshape of a tensor sharded on an interior dim cannot be partitioned:
+    the partitioner replicates it (a full all-gather of e.g. the 917 GB
+    stacked expert gradients; see EXPERIMENTS §Perf 'grad-norm-reshape').
+    A shape-preserving reduction partitions cleanly into local reduce +
+    one psum.
+    """
+    leaves_x = tree_util.tree_leaves(x)
+    leaves_y = tree_util.tree_leaves(y)
+    acc = jnp.zeros((), dtype=jnp.result_type(*(l.dtype for l in leaves_x)))
+    for xl, yl in zip(leaves_x, leaves_y):
+        acc = acc + jnp.sum(xl * yl)
+    return acc
+
+
+def max_norm(x: Pytree):
+    """max |x_i|   (N_VMaxNorm)."""
+    return _treduce(lambda l: jnp.max(jnp.abs(l)), jnp.maximum, x,
+                    jnp.zeros(()))
+
+
+def vmin(x: Pytree):
+    """min x_i   (N_VMin)."""
+    return _treduce(jnp.min, jnp.minimum, x, jnp.full((), jnp.inf))
+
+
+def l1_norm(x: Pytree):
+    """sum |x_i|   (N_VL1Norm)."""
+    return _treduce(lambda l: jnp.sum(jnp.abs(l)), jnp.add, x, jnp.zeros(()))
+
+
+def wrms_norm(x: Pytree, w: Pytree):
+    """sqrt( (1/N) sum (x_i w_i)^2 )   (N_VWrmsNorm) — THE integrator norm."""
+    n = tree_size(x)
+    ss = dot(prod(x, w), prod(x, w))
+    return jnp.sqrt(ss / n)
+
+
+def wrms_norm_mask(x: Pytree, w: Pytree, mask: Pytree):
+    """N_VWrmsNormMask: only entries with mask>0 contribute."""
+    n = tree_size(x)
+    xm = prod(prod(x, w), mask)
+    return jnp.sqrt(dot(xm, xm) / n)
+
+
+def wl2_norm(x: Pytree, w: Pytree):
+    """sqrt( sum (x_i w_i)^2 )   (N_VWL2Norm)."""
+    xw = prod(x, w)
+    return jnp.sqrt(dot(xw, xw))
+
+
+def constr_mask(c: Pytree, x: Pytree):
+    """N_VConstrMask: returns (all_ok, mask of violations).
+
+    c_i =  2 : x_i >  0 required;  1 : x_i >= 0;  0 : none;
+    c_i = -1 : x_i <= 0;          -2 : x_i <  0.
+    """
+    def leaf(cl, xl):
+        viol = jnp.where(jnp.abs(cl) > 1.5,
+                         xl * cl <= 0.0,          # strict
+                         jnp.where(jnp.abs(cl) > 0.5, xl * cl < 0.0, False))
+        return viol.astype(xl.dtype)
+
+    m = _tmap(leaf, c, x)
+    ok = l1_norm(m) == 0
+    return ok, m
+
+
+def min_quotient(num: Pytree, den: Pytree):
+    """min num_i/den_i over den_i != 0   (N_VMinQuotient)."""
+    def leaf(nl, dl):
+        q = jnp.where(dl != 0, nl / jnp.where(dl != 0, dl, 1.0), jnp.inf)
+        return jnp.min(q)
+
+    return functools.reduce(
+        jnp.minimum,
+        [leaf(nl, dl) for nl, dl in zip(tree_util.tree_leaves(num),
+                                        tree_util.tree_leaves(den))],
+        jnp.full((), jnp.inf))
+
+
+def inv_test(x: Pytree):
+    """N_VInvTest: z = 1/x where x != 0; returns (no_zero_found, z)."""
+    def leaf(xl):
+        return jnp.where(xl != 0, 1.0 / jnp.where(xl != 0, xl, 1.0), 0.0)
+
+    z = _tmap(leaf, x)
+    has_zero = _treduce(lambda l: jnp.any(l == 0), jnp.logical_or, x,
+                        jnp.zeros((), dtype=bool))
+    return jnp.logical_not(has_zero), z
+
+
+def dot_prod_multi(x: Pytree, ys: Sequence[Pytree]):
+    """d_k = <x, Y_k>   (N_VDotProdMulti) — one fused pass."""
+    return jnp.stack([dot(x, y) for y in ys])
+
+
+# ---------------------------------------------------------------------------
+# MeshVector — the MPIPlusX analog.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshVectorSpec:
+    """Pairs node-local vector data with mesh axes for global reductions.
+
+    ``axis_names`` lists the mesh axes across which this vector's data is
+    *distributed* (the "MPI communicator").  Streaming ops never touch
+    them; reduction ops finish with one collective over these axes.
+
+    ``mode`` selects 'gspmd' (rely on jit+NamedSharding to insert the
+    collectives) or 'explicit' (ops must run inside shard_map and issue
+    lax collectives themselves — the literal MPIPlusX structure).
+    """
+
+    axis_names: tuple = ()
+    mode: str = "gspmd"
+
+
+class MeshVector:
+    """MPIPlusX analog: node-local data + mesh-axis 'communicator'.
+
+    In 'explicit' mode, the reduction methods must execute inside a
+    ``shard_map`` context over ``spec.axis_names`` — they perform a
+    node-local partial reduction followed by exactly one collective, just
+    as MPIPlusX performs the node-local op then ``MPI_Allreduce``.
+    """
+
+    def __init__(self, data: Pytree, spec: MeshVectorSpec = MeshVectorSpec()):
+        self.data = data
+        self.spec = spec
+
+    # -- plumbing so MeshVector is itself a pytree ------------------------
+    def tree_flatten(self):
+        return (self.data,), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, spec, children):
+        return cls(children[0], spec)
+
+    def wrap(self, data: Pytree) -> "MeshVector":
+        return MeshVector(data, self.spec)
+
+    # -- streaming ops: purely node-local ---------------------------------
+    def linear_sum(self, a, b, other: "MeshVector") -> "MeshVector":
+        return self.wrap(linear_sum(a, self.data, b, other.data))
+
+    def scale(self, c) -> "MeshVector":
+        return self.wrap(scale(c, self.data))
+
+    def const(self, c) -> "MeshVector":
+        return self.wrap(const_like(c, self.data))
+
+    def prod(self, other: "MeshVector") -> "MeshVector":
+        return self.wrap(prod(self.data, other.data))
+
+    def div(self, other: "MeshVector") -> "MeshVector":
+        return self.wrap(div(self.data, other.data))
+
+    def abs(self) -> "MeshVector":
+        return self.wrap(vabs(self.data))
+
+    def inv(self) -> "MeshVector":
+        return self.wrap(inv(self.data))
+
+    def add_const(self, b) -> "MeshVector":
+        return self.wrap(add_const(self.data, b))
+
+    # -- reductions: node-local partial + one collective -------------------
+    def _finish_sum(self, partial):
+        if self.spec.mode == "explicit" and self.spec.axis_names:
+            return lax.psum(partial, self.spec.axis_names)
+        return partial  # gspmd mode: jit/GSPMD already made this global
+
+    def _finish_max(self, partial):
+        if self.spec.mode == "explicit" and self.spec.axis_names:
+            return lax.pmax(partial, self.spec.axis_names)
+        return partial
+
+    def _finish_min(self, partial):
+        if self.spec.mode == "explicit" and self.spec.axis_names:
+            return lax.pmin(partial, self.spec.axis_names)
+        return partial
+
+    def dot(self, other: "MeshVector"):
+        return self._finish_sum(dot(self.data, other.data))
+
+    def l1_norm(self):
+        return self._finish_sum(l1_norm(self.data))
+
+    def max_norm(self):
+        return self._finish_max(max_norm(self.data))
+
+    def min(self):
+        return self._finish_min(vmin(self.data))
+
+    def wrms_norm(self, w: "MeshVector", global_size: int | None = None):
+        """WRMS norm; in explicit mode the caller must pass the GLOBAL
+        element count (node-local tree_size is the shard size only)."""
+        n = global_size if global_size is not None else tree_size(self.data)
+        xw = prod(self.data, w.data)
+        ss = self._finish_sum(dot(xw, xw))
+        return jnp.sqrt(ss / n)
+
+
+tree_util.register_pytree_node(
+    MeshVector, MeshVector.tree_flatten, MeshVector.tree_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# ManyVector — wrap n vectors into one cohesive vector (paper §4).
+# In pytree land a ManyVector is simply a tuple of subvector pytrees; we
+# provide a thin named wrapper for API parity and provenance.
+# ---------------------------------------------------------------------------
+
+
+def many_vector(*subvectors: Pytree) -> tuple:
+    """Combine subvectors into a single cohesive vector (tuple pytree)."""
+    return tuple(subvectors)
+
+
+def many_vector_num_subvectors(mv: tuple) -> int:
+    return len(mv)

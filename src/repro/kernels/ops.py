@@ -1,0 +1,123 @@
+"""jit'd public wrappers for the Pallas kernels (padding, layout, dispatch).
+
+Callers use these; the raw kernels live in their own modules and the
+pure-jnp oracles in ref.py.  On this CPU container ``interpret=True``
+runs the kernel bodies in Python for validation; on TPU deployments the
+same entry points compile to Mosaic (``interpret=False`` via ExecPolicy).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import block_solve as _bs
+from . import blockdiag_spmv as _sp
+from . import vecops as _vo
+
+LANE = 128
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int, fill=0.0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill), n
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "interpret",
+                                             "scale_rows"))
+def block_solve(A: jnp.ndarray, r: jnp.ndarray, *, batch_tile: int = 4 * LANE,
+                interpret: bool = True, scale_rows: bool = True):
+    """Batched block solve, AoS API: A:(nb,b,b), r:(nb,b) -> x:(nb,b).
+
+    Transposes to the SoA lane-major layout, pads the batch to the tile
+    (padding blocks are identity so the no-pivot elimination is safe),
+    runs the kernel, and transposes back.  TPU callers holding SoA data
+    should call :func:`block_solve_soa` directly and skip the transposes.
+    """
+    nb, b, _ = A.shape
+    tile = min(batch_tile, max(LANE, 1))
+    Asoa = jnp.transpose(A, (1, 2, 0))          # (b, b, nb)
+    rsoa = jnp.transpose(r, (1, 0))             # (b, nb)
+    Ap, _ = _pad_to(Asoa, tile, axis=2)
+    # make padded blocks identity to keep the elimination well-defined
+    if Ap.shape[2] != nb:
+        eye = jnp.eye(b, dtype=A.dtype)[:, :, None]
+        padmask = (jnp.arange(Ap.shape[2]) >= nb)[None, None, :]
+        Ap = jnp.where(padmask, eye, Ap)
+    rp, _ = _pad_to(rsoa, tile, axis=1)
+    x = _bs.block_solve_soa(Ap, rp, batch_tile=tile, interpret=interpret,
+                            scale_rows=scale_rows)
+    return jnp.transpose(x[:, :nb], (1, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "interpret",
+                                             "scale_rows"))
+def block_solve_soa(A: jnp.ndarray, r: jnp.ndarray, *,
+                    batch_tile: int = 4 * LANE, interpret: bool = True,
+                    scale_rows: bool = True):
+    """SoA API (lane-major batch): A:(b,b,NB), r:(b,NB) -> x:(b,NB)."""
+    b, _, nb = A.shape
+    tile = min(batch_tile, max(LANE, 1))
+    Ap, _ = _pad_to(A, tile, axis=2)
+    if Ap.shape[2] != nb:
+        eye = jnp.eye(b, dtype=A.dtype)[:, :, None]
+        padmask = (jnp.arange(Ap.shape[2]) >= nb)[None, None, :]
+        Ap = jnp.where(padmask, eye, Ap)
+    rp, _ = _pad_to(r, tile, axis=1)
+    x = _bs.block_solve_soa(Ap, rp, batch_tile=tile, interpret=interpret,
+                            scale_rows=scale_rows)
+    return x[:, :nb]
+
+
+@functools.partial(jax.jit, static_argnames=("block_elems", "interpret"))
+def linear_combination(coeffs: jnp.ndarray, X: jnp.ndarray, *,
+                       block_elems: int = 8 * LANE, interpret: bool = True):
+    """Fused Z = sum_k coeffs[k] X[k];  X:(K, N) any N (padded inside)."""
+    K, N = X.shape
+    Xp, _ = _pad_to(X, block_elems, axis=1)
+    z = _vo.linear_combination(coeffs, Xp, block_elems=block_elems,
+                               interpret=interpret)
+    return z[:N]
+
+
+@functools.partial(jax.jit, static_argnames=("reduce_tile", "interpret"))
+def wrms_norm(x: jnp.ndarray, w: jnp.ndarray, *, reduce_tile: int = 64 * LANE,
+              interpret: bool = True):
+    """Fused WRMS norm of 1-D x with weights w (BlockReduce policy)."""
+    (N,) = x.shape
+    tile = min(reduce_tile, max(LANE, 1))
+    xp, _ = _pad_to(x, tile, axis=0)
+    wp, _ = _pad_to(w, tile, axis=0)   # pad weights with 0 -> no contribution
+    parts = _vo.wrms_partial(xp, wp, reduce_tile=tile, interpret=interpret)
+    return jnp.sqrt(jnp.sum(parts) / N)
+
+
+@functools.partial(jax.jit, static_argnames=("reduce_tile", "interpret"))
+def dot(x: jnp.ndarray, y: jnp.ndarray, *, reduce_tile: int = 64 * LANE,
+        interpret: bool = True):
+    (N,) = x.shape
+    tile = min(reduce_tile, max(LANE, 1))
+    xp, _ = _pad_to(x, tile, axis=0)
+    yp, _ = _pad_to(y, tile, axis=0)
+    parts = _vo.dot_partial(xp, yp, reduce_tile=tile, interpret=interpret)
+    return jnp.sum(parts)
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "interpret"))
+def blockdiag_spmv(A: jnp.ndarray, x: jnp.ndarray, *,
+                   batch_tile: int = 4 * LANE, interpret: bool = True):
+    """AoS API: A:(nb,b,b), x:(nb,b) -> y:(nb,b)."""
+    nb, b, _ = A.shape
+    tile = min(batch_tile, max(LANE, 1))
+    Asoa = jnp.transpose(A, (1, 2, 0))
+    xsoa = jnp.transpose(x, (1, 0))
+    Ap, _ = _pad_to(Asoa, tile, axis=2)
+    xp, _ = _pad_to(xsoa, tile, axis=1)
+    y = _sp.blockdiag_spmv_soa(Ap, xp, batch_tile=tile, interpret=interpret)
+    return jnp.transpose(y[:, :nb], (1, 0))

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the ref.py contract).
+
+Each function must be the semantic ground truth the kernels are tested
+against with assert_allclose over shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def block_solve_ref(A: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """Batched solve, AoS layout A:(nb,b,b), r:(nb,b) -> (nb,b)."""
+    return jnp.linalg.solve(A, r[..., None])[..., 0]
+
+
+def block_solve_soa_ref(A: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """SoA layout A:(b,b,NB), r:(b,NB) -> x:(b,NB)."""
+    Aaos = jnp.transpose(A, (2, 0, 1))
+    raos = jnp.transpose(r, (1, 0))
+    x = jnp.linalg.solve(Aaos, raos[..., None])[..., 0]
+    return jnp.transpose(x, (1, 0))
+
+
+def linear_combination_ref(coeffs: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+    """Z = sum_k c_k X[k];  X:(K,N), coeffs:(K,) -> (N,)."""
+    return jnp.einsum("k,kn->n", coeffs, X)
+
+
+def wrms_partial_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """sum((x*w)^2) over the whole array -> scalar."""
+    return jnp.sum((x * w) ** 2)
+
+
+def dot_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.vdot(x, y)
+
+
+def blockdiag_spmv_soa_ref(A: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y = blockdiag(A) @ x in SoA; A:(b,b,NB), x:(b,NB) -> y:(b,NB)."""
+    return jnp.einsum("ijn,jn->in", A, x)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernels for the hot N_Vector operations.
+
+The paper's Fig. 9/Table 1 show that for time integration the dominant
+cost is the *vector* operations (``N_VLinearSum`` above all), which are
+memory-bandwidth-bound.  Two kernels:
+
+* :func:`linear_combination` — Z = sum_k c_k X_k in ONE pass over the
+  operands.  ARKODE evaluates y_new = y + h*sum b_i k_i (s+1 operands);
+  done with pairwise N_VLinearSum this reads/writes 3 vectors per pair
+  (2(s+1) vector reads + s+1 writes); fused it is s+1 reads + 1 write —
+  the SUNDIALS "fused vector operation" realized as a single VMEM-tiled
+  kernel.  Streaming op -> ThreadDirect/GridStride policy sets the tile.
+
+* :func:`wrms_partial` / :func:`dot_partial` — BlockReduce-policy
+  reductions: each grid program reduces its tile to one partial in a
+  (grid,) output; the final (tiny) sum happens in XLA.  One pass, no
+  intermediate (x*w)^2 vector materialized in HBM.
+
+Layouts are 1-D with LANE*k tiles; ops.py pads ragged tails.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _lincomb_kernel(c_ref, x_ref, z_ref, *, K: int):
+    """z tile = sum_k c[k] * x[k] tile.  x_ref: (K, TN), z_ref: (TN,)."""
+    acc = c_ref[0] * x_ref[0, :]
+    for k in range(1, K):
+        acc = acc + c_ref[k] * x_ref[k, :]
+    z_ref[:] = acc
+
+
+def linear_combination(coeffs: jnp.ndarray, X: jnp.ndarray, *,
+                       block_elems: int = 8 * LANE,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Fused Z = sum_k coeffs[k] * X[k];  X: (K, N) with N % tile == 0."""
+    K, N = X.shape
+    assert N % block_elems == 0, (N, block_elems)
+    grid = (N // block_elems,)
+    kernel = functools.partial(_lincomb_kernel, K=K)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K,), lambda g: (0,)),           # coeffs: whole
+            pl.BlockSpec((K, block_elems), lambda g: (0, g)),
+        ],
+        out_specs=pl.BlockSpec((block_elems,), lambda g: (g,)),
+        out_shape=jax.ShapeDtypeStruct((N,), X.dtype),
+        interpret=interpret,
+    )(coeffs, X)
+
+
+def _wrms_kernel(x_ref, w_ref, out_ref):
+    xw = x_ref[:] * w_ref[:]
+    out_ref[0] = jnp.sum(xw * xw)
+
+
+def wrms_partial(x: jnp.ndarray, w: jnp.ndarray, *,
+                 reduce_tile: int = 64 * LANE,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Per-tile partials of sum((x*w)^2); final sum done by the caller."""
+    (N,) = x.shape
+    assert N % reduce_tile == 0
+    grid = (N // reduce_tile,)
+    return pl.pallas_call(
+        _wrms_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((reduce_tile,), lambda g: (g,)),
+            pl.BlockSpec((reduce_tile,), lambda g: (g,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda g: (g,)),
+        out_shape=jax.ShapeDtypeStruct((grid[0],), x.dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def _dot_kernel(x_ref, y_ref, out_ref):
+    out_ref[0] = jnp.sum(x_ref[:] * y_ref[:])
+
+
+def dot_partial(x: jnp.ndarray, y: jnp.ndarray, *,
+                reduce_tile: int = 64 * LANE,
+                interpret: bool = True) -> jnp.ndarray:
+    (N,) = x.shape
+    assert N % reduce_tile == 0
+    grid = (N // reduce_tile,)
+    return pl.pallas_call(
+        _dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((reduce_tile,), lambda g: (g,)),
+            pl.BlockSpec((reduce_tile,), lambda g: (g,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda g: (g,)),
+        out_shape=jax.ShapeDtypeStruct((grid[0],), x.dtype),
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,287 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_DRYRUN_XLA_FLAGS",
+    "--xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, with ZERO real allocation (abstract params
+via ShapeDtypeStructs):
+  * compiled = jit(step).lower(...).compile()  on the production mesh,
+  * compiled.memory_analysis()  -> per-chip bytes (does it fit HBM?),
+  * compiled.cost_analysis()    -> per-chip FLOPs / bytes accessed,
+  * collective operand bytes parsed from the post-SPMD HLO,
+  * the three roofline terms (analysis/roofline.py).
+
+Results land in benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json;
+EXPERIMENTS.md §Dry-run / §Roofline are generated from them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.analysis import roofline as rf
+from repro.models import Model, SHAPES, ParallelCtx
+from repro.parallel import sharding as shd
+from repro.serve.decode import make_serve_step
+from repro.train import step as tstep
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "targets": ("batch", "seq"),
+    "vis_embeds": ("batch", "seq", "embed"),
+    "frames": ("batch", "seq", "embed"),
+    "enc_out": ("batch", "seq", "embed"),
+    "pos": (),
+}
+
+
+def batch_shardings(batch_specs, mesh):
+    return {k: NamedSharding(mesh, shd.spec_for(v.shape, BATCH_AXES[k],
+                                                mesh, shd.ACT_RULES))
+            for k, v in batch_specs.items()}
+
+
+def make_pctx(cfg, mesh, shape_kind: str, profile: str = "tp_fsdp"):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    # weights-stationary EP when the experts divide model*data (§Perf);
+    # REPRO_EP_MULTI=0 forces single-axis EP for A/B comparisons
+    ep_axis = "model"
+    if (cfg.is_moe and os.environ.get("REPRO_EP_MULTI", "1") != "0"
+            and cfg.n_experts % (sizes["model"] *
+                                 sizes.get("data", 1)) == 0):
+        ep_axis = ("model", "data")
+    _, act_rules = shd.PROFILES[profile]
+    return ParallelCtx(
+        mesh=mesh, cst=shd.make_cst(mesh, act_rules),
+        moe_impl="ep" if cfg.is_moe else "dense",
+        dp_axes=dp, ep_axis=ep_axis,
+        moe_token_layout="split" if shape_kind != "decode" else "replicated")
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               ocfg=None, compile_it: bool = True,
+               profile: str = "tp_fsdp",
+               microbatches: int = 1) -> Dict[str, Any]:
+    from repro.optim import adamw
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    model = Model(cfg)
+    pctx = make_pctx(cfg, mesh, shape.kind, profile)
+    param_rules, act_rules = shd.PROFILES[profile]
+    ocfg = ocfg or adamw.AdamWConfig(
+        moment_dtype=jnp.bfloat16 if cfg.is_moe else jnp.float32)
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    batch_specs = model.input_specs(shape)
+    b_shd = {k: NamedSharding(mesh, shd.spec_for(v.shape, BATCH_AXES[k],
+                                                 mesh, act_rules))
+             for k, v in batch_specs.items()}
+
+    if shape.kind in ("train", "prefill"):
+        if shape.kind == "train":
+            astate = tstep.abstract_state(model, ocfg)
+            saxes = tstep.state_axes(model)
+            s_shd = shd.param_shardings(astate, saxes, mesh, param_rules)
+            step_fn = tstep.make_train_step(
+                model, pctx, ocfg, microbatches=microbatches,
+                grad_shardings=None if os.environ.get("REPRO_GRAD_RS",
+                                                      "1") == "0"
+                else s_shd.params)
+            # out_shardings pinned to the (donated) input state shardings:
+            # otherwise the partitioner may choose different output
+            # layouts and emit full resharding all-gathers of the biggest
+            # tensors in the module (§Perf 'out-shardings' finding).
+            jfn = jax.jit(step_fn, in_shardings=(s_shd, b_shd),
+                          out_shardings=(s_shd, None),
+                          donate_argnums=(0,))
+            lowered = jfn.lower(astate, batch_specs)
+        else:
+            # prefill = forward loss only (inference prefill cost proxy)
+            fwd = lambda params, batch: model.loss(params, batch, pctx)
+            aparams = model.abstract_params()
+            p_shd = shd.param_shardings(aparams, model.param_axes(), mesh,
+                                        param_rules)
+            jfn = jax.jit(fwd, in_shardings=(p_shd, b_shd))
+            lowered = jfn.lower(aparams, batch_specs)
+    else:  # decode
+        serve_fn = make_serve_step(model, pctx)
+        aparams = model.abstract_params()
+        p_shd = shd.param_shardings(aparams, model.param_axes(), mesh,
+                                    param_rules)
+        cspecs = model.cache_specs(shape.global_batch, shape.seq_len)
+        caxes = shd.cache_axes_like(cspecs, cfg)
+        c_shd = shd.param_shardings(cspecs, caxes, mesh,
+                                    shd.cache_rules_from(act_rules))
+        jfn = jax.jit(serve_fn, in_shardings=(p_shd, b_shd, c_shd),
+                      donate_argnums=(2,))
+        lowered = jfn.lower(aparams, batch_specs, cspecs)
+
+    t_lower = time.time() - t0
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": chips, "lower_s": t_lower, "ok": False}
+    if not compile_it:
+        result["ok"] = True
+        return result
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    result["compile_s"] = time.time() - t0
+
+    # ---- memory ----
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:  # CPU backend may not support it
+        mem["error"] = str(e)
+    result["memory"] = mem
+
+    # ---- cost ----
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        for k in ("flops", "bytes accessed", "transcendentals",
+                  "utilization operand 0 {}"):
+            if k in ca:
+                cost[k.replace(" ", "_")] = float(ca[k])
+        # keep all bytes-accessed subkeys summed implicitly via main key
+    except Exception as e:
+        cost["error"] = str(e)
+    result["cost"] = cost
+
+    # ---- loop-aware HLO cost walk (flops / bytes / collectives) ----
+    from repro.analysis import hlocost
+    try:
+        hlo = compiled.as_text()
+        hc = hlocost.analyze(hlo, chips)
+    except Exception as e:
+        hc = {"error": str(e), "flops": 0.0, "bytes": 0.0, "coll_total": 0.0}
+    result["hlocost"] = hc
+
+    # ---- roofline (per-chip terms from the loop-aware walk; XLA's own
+    # cost_analysis is kept in result["cost"] as a cross-check — it
+    # counts while bodies once, so it undercounts scan-over-layers) ----
+    row = rf.Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=hc.get("flops", 0.0),
+        hlo_bytes=hc.get("bytes", 0.0),
+        coll_bytes=float(hc.get("coll_total", 0.0)),
+        model_flops=rf.model_flops_for(cfg, shape),
+        coll_detail={k: v for k, v in hc.items() if k.startswith("coll")},
+        memory_per_chip=mem or None,
+    ).finalize()
+    result["roofline"] = row.to_dict()
+    result["ok"] = True
+    return result
+
+
+def run_cells(archs, shapes, meshes, out_dir: str, compile_it=True,
+              profile: str = "tp_fsdp", microbatches: int = 1,
+              tag: str = ""):
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_objs = {}
+    if "single" in meshes:
+        mesh_objs["single"] = make_production_mesh(multi_pod=False)
+    if "multi" in meshes:
+        mesh_objs["multi"] = make_production_mesh(multi_pod=True)
+    summary = []
+    for arch in archs:
+        for shape_name in shapes:
+            if not configs.cell_is_runnable(arch, shape_name):
+                row = {"arch": arch, "shape": shape_name, "mesh": "-",
+                       "skipped": "long_500k needs sub-quadratic attention",
+                       "ok": True}
+                summary.append(row)
+                _write(out_dir, arch, shape_name, "skipped", row, tag)
+                print(f"SKIP {arch} {shape_name} (full attention)")
+                continue
+            for mesh_name, mesh in mesh_objs.items():
+                label = f"{arch} {shape_name} {mesh_name}"
+                try:
+                    res = lower_cell(arch, shape_name, mesh, mesh_name,
+                                     compile_it=compile_it, profile=profile,
+                                     microbatches=microbatches)
+                    res["profile"] = profile
+                    res["microbatches"] = microbatches
+                    summary.append(res)
+                    _write(out_dir, arch, shape_name, mesh_name, res, tag)
+                    rl = res.get("roofline", {})
+                    print(f"OK   {label}: lower={res['lower_s']:.1f}s "
+                          f"compile={res.get('compile_s', 0):.1f}s "
+                          f"bottleneck={rl.get('bottleneck', '?')}",
+                          flush=True)
+                except Exception as e:
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "ok": False,
+                           "error": f"{type(e).__name__}: {e}"}
+                    summary.append(res)
+                    _write(out_dir, arch, shape_name, mesh_name, res, tag)
+                    print(f"FAIL {label}: {e}", flush=True)
+    return summary
+
+
+def _write(out_dir, arch, shape, mesh, res, tag: str = ""):
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{arch}__{shape}__{mesh}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--profile", default="tp_fsdp",
+                    choices=["tp_fsdp", "fsdp"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="",
+                    help="suffix for result filenames (perf iterations)")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    args = ap.parse_args()
+
+    archs = configs.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    summary = run_cells(archs, shapes, meshes, args.out,
+                        compile_it=not args.no_compile,
+                        profile=args.profile, microbatches=args.microbatches,
+                        tag=args.tag)
+    n_ok = sum(1 for r in summary if r.get("ok"))
+    print(f"\n{n_ok}/{len(summary)} cells OK")
+    if n_ok < len(summary):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""End-to-end training driver (example application + production launcher).
+
+Runs real steps on whatever devices exist: on this CPU container use a
+smoke config; on a TPU pod slice pass --arch <full> --mesh production.
+Features exercised: sharded state, data pipeline, checkpoint/restart
+(resume is automatic), straggler/fault bookkeeping, metrics logging.
+
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b-smoke \
+      --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data import pipeline
+from repro.models import Model, ParallelCtx
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+from repro.train import checkpoint as ckpt
+from repro.train import fault
+from repro.train import step as tstep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b-smoke")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "production", "production-multi"])
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "gradflow"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    model = Model(cfg)
+    mesh = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=args.mesh.endswith("multi"))
+    pctx = ParallelCtx(mesh=mesh, cst=shd.make_cst(mesh),
+                       moe_impl="ep" if (cfg.is_moe and mesh is not None)
+                       else "dense",
+                       dp_axes=tuple(a for a in ("pod", "data")
+                                     if mesh and a in mesh.axis_names) or
+                       ("data",))
+    ocfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                             warmup_steps=max(args.steps // 20, 1))
+
+    # --- init or resume ---
+    start_step = 0
+    state = tstep.init_state(model, jax.random.PRNGKey(args.seed), ocfg)
+    if args.ckpt_dir:
+        last = ckpt.latest_step(args.ckpt_dir)
+        if last is not None:
+            print(f"resuming from checkpoint step {last}")
+            state = ckpt.restore(
+                jax.tree_util.tree_map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state),
+                args.ckpt_dir, last)
+            start_step = last
+
+    dcfg = pipeline.DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                               global_batch=args.batch, seed=args.seed)
+    train_step = jax.jit(tstep.make_train_step(
+        model, pctx, ocfg, microbatches=args.microbatches),
+        donate_argnums=(0,))
+
+    if args.optimizer == "gradflow":
+        from repro.optim import gradflow
+        gf = gradflow.GradFlowConfig(tau=0.5, max_steps=10)
+
+    mon = fault.HeartbeatMonitor(n_workers=jax.process_count())
+    hist = []
+    t_ckpt = 0.0
+    for step_i, batch_np in zip(range(start_step, args.steps),
+                                pipeline.batches(dcfg, start_step)):
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        t0 = time.time()
+        if args.optimizer == "gradflow":
+            lf = lambda p: model.loss(p, batch, pctx)
+            new_params, st = gradflow.step(lf, state.params, gf)
+            state = state._replace(params=new_params)
+            metrics = {"loss": model.loss(state.params, batch, pctx),
+                       "ode_steps": st.steps}
+        else:
+            state, metrics = train_step(state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.time() - t0
+        mon.heartbeat(jax.process_index())
+        mon.record_step(jax.process_index(), dt)
+        hist.append(metrics["loss"])
+        print(f"step {step_i:5d} loss={metrics['loss']:.4f} "
+              f"dt={dt*1e3:.1f}ms " +
+              " ".join(f"{k}={v:.3g}" for k, v in metrics.items()
+                       if k != "loss"), flush=True)
+        if args.ckpt_dir and (step_i + 1) % args.ckpt_every == 0:
+            tc = time.time()
+            ckpt.save(state, args.ckpt_dir, step_i + 1)
+            ckpt.prune(args.ckpt_dir, keep=3)
+            t_ckpt = time.time() - tc
+    if args.ckpt_dir:
+        ckpt.save(state, args.ckpt_dir, args.steps)
+    print(f"done. first loss={hist[0]:.4f} last={hist[-1]:.4f} "
+          f"(ckpt write {t_ckpt:.2f}s)")
+    return hist
+
+
+if __name__ == "__main__":
+    main()

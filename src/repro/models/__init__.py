@@ -1,0 +1,6 @@
+from . import config, layers, moe_ep, spec, ssm, transformer
+from .config import ArchConfig, ShapeConfig, SHAPES
+from .transformer import Model, ParallelCtx
+
+__all__ = ["config", "layers", "moe_ep", "spec", "ssm", "transformer",
+           "ArchConfig", "ShapeConfig", "SHAPES", "Model", "ParallelCtx"]

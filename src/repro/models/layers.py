@@ -1,0 +1,430 @@
+"""Transformer / SSM building blocks shared by every assigned architecture.
+
+Conventions:
+* params are nested dicts of arrays; specs built by ``*_spec`` functions
+  (single source of truth, see models/spec.py);
+* every ``*_apply`` takes a ``cst(x, axes)`` callback that applies a
+  logical sharding constraint (identity on a single device);
+* activations use cfg.dtype (bf16); norms/softmax accumulate in f32.
+
+Logical activation axes used throughout:
+  'batch'   -> data axes,  'seq' -> sequence (SP where enabled),
+  'heads'/'mlp'/'experts' -> model axis, 'embed'/'head_dim'/'state' -> none.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ArchConfig
+from .spec import ParamSpec
+
+Params = Dict[str, Any]
+
+
+def _id_cst(x, axes):
+    return x
+
+
+def dus_seq(buf: jnp.ndarray, upd: jnp.ndarray, pos, axis: int = 1):
+    """dynamic_update_slice at position ``pos`` along ``axis`` (index dtypes
+    unified — x64 mode would otherwise mix int32/int64 literals)."""
+    z = jnp.zeros((), dtype=jnp.asarray(pos).dtype)
+    idx = tuple(jnp.asarray(pos) if i == axis else z
+                for i in range(buf.ndim))
+    return lax.dynamic_update_slice(buf, upd.astype(buf.dtype), idx)
+
+
+# ----------------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int) -> Params:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm_apply(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_spec(d: int) -> Params:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones"),
+            "bias": ParamSpec((d,), ("embed",), init="zeros")}
+
+
+def layernorm_apply(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Rotary embeddings (standard + 3-component M-RoPE for qwen2-vl)
+# ----------------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float, positions: jnp.ndarray) -> Tuple:
+    """positions: (..., S) int -> cos/sin of shape (..., S, dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def mrope_cos_sin(dim: int, theta: float, pos3: jnp.ndarray):
+    """Simplified M-RoPE: pos3 (B, S, 3) = (t, h, w) position components.
+
+    The rotary dim is split 2:1:1 between temporal/height/width components
+    (qwen2-vl's mrope_section), then the per-section cos/sin are
+    concatenated — equivalent to rotating disjoint channel groups by
+    different position ids.
+    """
+    half = dim // 2
+    sec = (half // 2, half // 4, half - half // 2 - half // 4)
+    parts_c, parts_s = [], []
+    start = 0
+    for comp in range(3):
+        inv = 1.0 / (theta ** (jnp.arange(start, start + sec[comp],
+                                          dtype=jnp.float32) * 2 / dim))
+        ang = pos3[..., comp].astype(jnp.float32)[..., None] * inv
+        parts_c.append(jnp.cos(ang))
+        parts_s.append(jnp.sin(ang))
+        start += sec[comp]
+    return jnp.concatenate(parts_c, -1), jnp.concatenate(parts_s, -1)
+
+
+# ----------------------------------------------------------------------------
+# GQA attention (with optional bias, sliding window, KV cache)
+# ----------------------------------------------------------------------------
+
+
+def attention_spec(cfg: ArchConfig, d_in: Optional[int] = None,
+                   d_out: Optional[int] = None) -> Params:
+    d = d_in or cfg.d_model
+    do = d_out or cfg.d_model
+    hd = cfg.hd
+    p = {
+        "wq": ParamSpec((d, cfg.n_heads, hd), ("embed", "heads", "head_dim"),
+                        cfg.dtype, init="scaled"),
+        "wk": ParamSpec((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"),
+                        cfg.dtype, init="scaled"),
+        "wv": ParamSpec((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim"),
+                        cfg.dtype, init="scaled"),
+        "wo": ParamSpec((cfg.n_heads, hd, do), ("heads", "head_dim", "embed"),
+                        cfg.dtype, init="scaled"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamSpec((cfg.n_heads, hd), ("heads", "head_dim"),
+                            cfg.dtype, init="zeros")
+        p["bk"] = ParamSpec((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"),
+                            cfg.dtype, init="zeros")
+        p["bv"] = ParamSpec((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"),
+                            cfg.dtype, init="zeros")
+    return p
+
+
+ATTN_KV_CHUNK = 1024  # blockwise-softmax KV chunk (memory/perf knob)
+
+
+def _sdpa(q, k, v, *, causal: bool, window: int = 0,
+          q_offset: Optional[jnp.ndarray] = None,
+          kv_len: Optional[jnp.ndarray] = None,
+          kv_chunk: int = 0):
+    """Blockwise (flash-style) attention: q (B,Sq,H,Dq), k (B,Sk,KVH,Dq),
+    v (B,Sk,KVH,Dv) -> (B,Sq,H,Dv).  f32 running softmax over KV chunks —
+    never materializes the (Sq, Sk) score matrix, so 32k prefill and 500k
+    caches stay within HBM.
+
+    q_offset: absolute position of q[0] (decode); kv_len: number of valid
+    cache entries (the rest are masked).
+    """
+    B, Sq, H, Dq = q.shape
+    KVH = k.shape[2]
+    Dv = v.shape[-1]
+    rep = H // KVH
+    Sk = k.shape[1]
+    C = kv_chunk or min(ATTN_KV_CHUNK, Sk)
+    # pad KV to a multiple of the chunk (masked off via kv_len logic)
+    pad = (-Sk) % C
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (Sk + pad) // C
+    valid_len = kv_len if kv_len is not None else Sk
+
+    qf = (q.astype(jnp.float32) / math.sqrt(Dq)).reshape(B, Sq, KVH, rep, Dq)
+    qpos = jnp.arange(Sq)[:, None] + (q_offset if q_offset is not None else 0)
+
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, C, KVH, Dq), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, C, KVH, Dv), 1, 0)
+
+    def chunk_step(carry, inputs):
+        m, l, acc = carry
+        ci, kb, vb = inputs                      # kb: (B,C,KVH,Dq)
+        logits = jnp.einsum("bqgrd,bkgd->bgrqk", qf,
+                            kb.astype(jnp.float32))   # (B,KVH,rep,Sq,C)
+        kpos = ci * C + jnp.arange(C)[None, :]        # (1, C)
+        mask = kpos < valid_len
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window > 0:
+            mask = mask & (kpos > qpos - window)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        scale_old = jnp.exp(m - m_new)
+        l = l * scale_old + jnp.sum(p, axis=-1)
+        acc = acc * scale_old[..., None] + jnp.einsum(
+            "bgrqk,bkgd->bgrqd", p, vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KVH, rep, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KVH, rep, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KVH, rep, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = lax.scan(chunk_step, (m0, l0, a0),
+                              (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, Dv)
+    return out.astype(q.dtype)
+
+
+def attention_apply(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                    cos: jnp.ndarray, sin: jnp.ndarray, *,
+                    cst: Callable = _id_cst, causal: bool = True,
+                    cache: Optional[Dict] = None,
+                    use_rope: bool = True):
+    """Returns (out, new_cache).  cache = {'k','v','pos'} for decode."""
+    B, S, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"][None, None]
+        k = k + p["bk"][None, None]
+        v = v + p["bv"][None, None]
+    q = cst(q, ("batch", "seq", "heads", "head_dim"))
+    k = cst(k, ("batch", "seq", "kv_heads", "head_dim"))
+    if use_rope:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    new_cache = None
+    if cache is not None:
+        pos = cache["pos"]                      # scalar int: filled length
+        ck = dus_seq(cache["k"], k, pos)
+        cv = dus_seq(cache["v"], v, pos)
+        out = _sdpa(q, ck, cv, causal=causal, window=cfg.sliding_window,
+                    q_offset=pos, kv_len=pos + S)
+        new_cache = {"k": ck, "v": cv, "pos": pos + S}
+    else:
+        out = _sdpa(q, k, v, causal=causal, window=cfg.sliding_window)
+    out = cst(out, ("batch", "seq", "heads", "head_dim"))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return cst(y, ("batch", "seq", "embed")), new_cache
+
+
+def cross_attention_apply(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                          kv_src: jnp.ndarray, *, cst: Callable = _id_cst):
+    """Encoder-decoder cross attention (whisper); no rope, no cache mask."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"])
+    out = _sdpa(q, k, v, causal=False)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return cst(y, ("batch", "seq", "embed"))
+
+
+# ----------------------------------------------------------------------------
+# MLA — multi-head latent attention (deepseek-v3), with latent KV cache
+# ----------------------------------------------------------------------------
+
+
+def mla_spec(cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": ParamSpec((d, qr), ("embed", "q_lora"), cfg.dtype, "scaled"),
+        "q_norm": rmsnorm_spec(qr),
+        "wq_b": ParamSpec((qr, H, dn + dr), ("q_lora", "heads", "head_dim"),
+                          cfg.dtype, "scaled"),
+        "wkv_a": ParamSpec((d, kvr + dr), ("embed", "kv_lora"), cfg.dtype,
+                           "scaled"),
+        "kv_norm": rmsnorm_spec(kvr),
+        "wkv_b": ParamSpec((kvr, H, dn + dv), ("kv_lora", "heads", "head_dim"),
+                           cfg.dtype, "scaled"),
+        "wo": ParamSpec((H, dv, d), ("heads", "head_dim", "embed"),
+                        cfg.dtype, "scaled"),
+    }
+
+
+def mla_apply(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+              positions: jnp.ndarray, *, cst: Callable = _id_cst,
+              cache: Optional[Dict] = None):
+    """MLA with decoupled RoPE.  cache stores the *latent* c_kv (+ rope key)
+    — the low-storage KV cache that is MLA's whole point: (kvr + dr) per
+    token instead of 2*H*hd."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    # --- queries ---
+    q_lat = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    q_lat = rmsnorm_apply(p["q_norm"], q_lat, cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, p["wq_b"])      # (B,S,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    # --- compressed kv + decoupled rope key ---
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])          # (B,S,kvr+dr)
+    c_kv, k_rope = ckv[..., :kvr], ckv[..., kvr:]
+    cos, sin = rope_freqs(dr, cfg.rope_theta, positions)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)    # (B,S,1,dr)
+    new_cache = None
+    if cache is not None:
+        pos = cache["pos"]
+        c_all = dus_seq(cache["c_kv"], c_kv, pos)
+        kr_all = dus_seq(cache["k_rope"], k_rope[:, :, 0, :], pos)
+        new_cache = {"c_kv": c_all, "k_rope": kr_all, "pos": pos + S}
+        c_use, kr_use, kv_len, q_off = c_all, kr_all, pos + S, pos
+    else:
+        c_use, kr_use, kv_len, q_off = c_kv, k_rope[:, :, 0, :], None, None
+    c_use = rmsnorm_apply(p["kv_norm"], c_use, cfg.norm_eps)
+    k_nope = jnp.einsum("btr,rhk->bthk", c_use, p["wkv_b"][..., :dn])
+    vv = jnp.einsum("btr,rhk->bthk", c_use, p["wkv_b"][..., dn:])
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_use[:, :, None, :],
+                                  (*kr_use.shape[:2], H, dr))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q_full = cst(q_full, ("batch", "seq", "heads", "head_dim"))
+    out = _sdpa(q_full, k_full, vv, causal=True,
+                q_offset=q_off, kv_len=kv_len)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return cst(y, ("batch", "seq", "embed")), new_cache
+
+
+# ----------------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------------
+
+
+def swiglu_spec(cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w1": ParamSpec((d, f), ("embed", "mlp"), cfg.dtype, "scaled"),
+        "w3": ParamSpec((d, f), ("embed", "mlp"), cfg.dtype, "scaled"),
+        "w2": ParamSpec((f, d), ("mlp", "embed"), cfg.dtype, "scaled"),
+    }
+
+
+def swiglu_apply(p: Params, x: jnp.ndarray, *, cst: Callable = _id_cst):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w1"])) * \
+        jnp.einsum("bsd,df->bsf", x, p["w3"])
+    h = cst(h, ("batch", "seq", "mlp"))
+    return cst(jnp.einsum("bsf,fd->bsd", h, p["w2"]),
+               ("batch", "seq", "embed"))
+
+
+def gelu_mlp_spec(cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w1": ParamSpec((d, f), ("embed", "mlp"), cfg.dtype, "scaled"),
+        "b1": ParamSpec((f,), ("mlp",), cfg.dtype, "zeros"),
+        "w2": ParamSpec((f, d), ("mlp", "embed"), cfg.dtype, "scaled"),
+        "b2": ParamSpec((d,), ("embed",), cfg.dtype, "zeros"),
+    }
+
+
+def gelu_mlp_apply(p: Params, x: jnp.ndarray, *, cst: Callable = _id_cst):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]) + p["b1"])
+    h = cst(h, ("batch", "seq", "mlp"))
+    return cst(jnp.einsum("bsf,fd->bsd", h, p["w2"]) + p["b2"],
+               ("batch", "seq", "embed"))
+
+
+# ----------------------------------------------------------------------------
+# MoE — specs + the reference dense path.  The scalable EP path (shard_map
+# + all_to_all) lives in moe_ep.py; both consume these specs.
+# ----------------------------------------------------------------------------
+
+
+def moe_spec(cfg: ArchConfig) -> Params:
+    d, f = cfg.d_model, cfg.moe_d_ff or cfg.d_ff
+    E = cfg.n_experts
+    p = {
+        "router": ParamSpec((d, E), ("embed", None), jnp.float32, "scaled"),
+        "w1": ParamSpec((E, d, f), ("experts", "embed", "expert_mlp"),
+                        cfg.dtype, "scaled"),
+        "w3": ParamSpec((E, d, f), ("experts", "embed", "expert_mlp"),
+                        cfg.dtype, "scaled"),
+        "w2": ParamSpec((E, f, d), ("experts", "expert_mlp", "embed"),
+                        cfg.dtype, "scaled"),
+    }
+    if cfg.n_shared_experts > 0:
+        fs = f * cfg.n_shared_experts
+        p["shared"] = {
+            "w1": ParamSpec((d, fs), ("embed", "mlp"), cfg.dtype, "scaled"),
+            "w3": ParamSpec((d, fs), ("embed", "mlp"), cfg.dtype, "scaled"),
+            "w2": ParamSpec((fs, d), ("mlp", "embed"), cfg.dtype, "scaled"),
+        }
+    return p
+
+
+def router_topk(logits: jnp.ndarray, k: int, impl: str):
+    """logits (T, E) -> (weights (T,k), ids (T,k)); weights sum to 1."""
+    if impl == "sigmoid":                    # deepseek-v3 style scoring
+        scores = jax.nn.sigmoid(logits.astype(jnp.float32))
+        w, ids = lax.top_k(scores, k)
+        w = w / (jnp.sum(w, -1, keepdims=True) + 1e-20)
+    else:
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        w, ids = lax.top_k(probs, k)
+        w = w / (jnp.sum(w, -1, keepdims=True) + 1e-20)
+    return w, ids
+
+
+def moe_dense_apply(p: Params, cfg: ArchConfig, x: jnp.ndarray, *,
+                    cst: Callable = _id_cst):
+    """Reference dense MoE: every expert computed on every token, combined
+    with routing weights.  Exact (no capacity drops) — the oracle for the
+    EP path, and the smoke-test path for tiny configs."""
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    w, ids = router_topk(logits, cfg.experts_per_tok, cfg.router_impl)
+    E = cfg.n_experts
+    # dense: (T, E) combine weights
+    comb = jnp.zeros((T, E), jnp.float32)
+    comb = comb.at[jnp.arange(T)[:, None], ids].add(w)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, p["w1"])) * \
+        jnp.einsum("td,edf->tef", xt, p["w3"])
+    y = jnp.einsum("tef,efd->ted", h, p["w2"])
+    out = jnp.einsum("ted,te->td", y.astype(jnp.float32), comb)
+    out = out.astype(x.dtype).reshape(B, S, d)
+    if "shared" in p:
+        out = out + swiglu_apply(p["shared"], x, cst=cst)
+    return cst(out, ("batch", "seq", "embed"))

@@ -1,0 +1,73 @@
+"""Parameter-spec system: one source of truth for shape/dtype/sharding/init.
+
+A model definition builds a pytree of :class:`ParamSpec`.  From it we derive
+  * materialized parameters   (init_params)
+  * abstract parameters       (ShapeDtypeStructs, for the dry-run)
+  * the logical-axes tree     (for sharding rules)
+without any risk of the three drifting apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis name per dim
+    dtype: Any = jnp.float32
+    init: str = "normal"                 # 'normal' | 'zeros' | 'ones' | 'scaled'
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _materialize(spec: ParamSpec, key) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "scaled":  # fan-in scaled normal
+        fan_in = spec.shape[0] if spec.shape else 1
+        std = (1.0 / max(fan_in, 1)) ** 0.5
+        return (std * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    return (spec.scale * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+
+
+def init_params(specs, key) -> Any:
+    """Materialize a spec tree into a parameter pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_materialize(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(specs) -> Any:
+    """ShapeDtypeStruct tree (no allocation) for .lower()."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=is_spec)
+
+
+def axes_tree(specs) -> Any:
+    return jax.tree_util.tree_map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    total = 0
+    for s in leaves:
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total

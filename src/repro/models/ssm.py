@@ -1,0 +1,370 @@
+"""Recurrent sequence-mixing blocks: Mamba2 (zamba2) and xLSTM (sLSTM/mLSTM).
+
+These give the two sub-quadratic architectures their O(1)-state decode
+path (long_500k).  Both are written as a *scan* (train/prefill) plus a
+*single-step* form (decode) sharing the same cell function — the same
+structure the paper's integrators use (one step function, outer loop
+owned by the driver).
+
+State-of-the-art chunked/blocked forms (SSD) are a perf optimization on
+real hardware; the recurrence here is the semantic reference and lowers
+compactly (one scan body) for the dry-run.  Sharding: heads over 'model'.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ArchConfig
+from .spec import ParamSpec
+from . import layers
+
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------------------
+# Mamba2
+# ----------------------------------------------------------------------------
+
+
+def mamba2_dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return d_in, nheads, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def mamba2_spec(cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    d_in, nh, ds, hd = mamba2_dims(cfg)
+    conv_dim = d_in + 2 * ds
+    return {
+        "in_proj": ParamSpec((d, 2 * d_in + 2 * ds + nh),
+                             ("embed", "mlp"), cfg.dtype, "scaled"),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_dim), (None, "mlp"),
+                            cfg.dtype, "scaled"),
+        "conv_b": ParamSpec((conv_dim,), ("mlp",), cfg.dtype, "zeros"),
+        "A_log": ParamSpec((nh,), ("heads",), jnp.float32, "zeros"),
+        "D": ParamSpec((nh,), ("heads",), jnp.float32, "ones"),
+        "dt_bias": ParamSpec((nh,), ("heads",), jnp.float32, "zeros"),
+        "norm": layers.rmsnorm_spec(d_in),
+        "out_proj": ParamSpec((d_in, d), ("mlp", "embed"), cfg.dtype,
+                              "scaled"),
+    }
+
+
+def _mamba2_inner(p, cfg, xz, conv_state):
+    """Split in_proj output and run the causal conv.
+
+    xz: (B, S, 2*d_in + 2*ds + nh).  conv_state: (B, K-1, conv_dim) or None.
+    Returns (z, xBC_conved, dt, new_conv_state).
+    """
+    d_in, nh, ds, hd = mamba2_dims(cfg)
+    z = xz[..., :d_in]
+    xBC = xz[..., d_in:d_in + d_in + 2 * ds]
+    dt = xz[..., -nh:]
+    K = cfg.ssm_conv
+    if conv_state is None:
+        pad = jnp.zeros_like(xBC[:, : K - 1])
+        seq = jnp.concatenate([pad, xBC], axis=1)
+        new_state = seq[:, -(K - 1):]
+    else:
+        seq = jnp.concatenate([conv_state, xBC], axis=1)
+        new_state = seq[:, -(K - 1):]
+    # causal depthwise conv, kernel K
+    out = jnp.zeros_like(xBC)
+    for k in range(K):
+        out = out + seq[:, k:k + xBC.shape[1]] * p["conv_w"][k][None, None]
+    xBC = jax.nn.silu(out + p["conv_b"][None, None])
+    return z, xBC, dt, new_state
+
+
+MAMBA2_CHUNK = 128  # SSD chunk length (perf knob; see EXPERIMENTS §Perf)
+
+
+def _ssm_scan_stepwise(xs, Bmat, Cmat, decay, dt, h0):
+    """Reference per-timestep recurrence.  xs:(B,S,nh,hd) f32,
+    Bmat/Cmat:(B,S,ds), decay/dt:(B,S,nh), h0:(B,nh,hd,ds)."""
+
+    def cell(h, inputs):
+        xt, Bt, Ct, dct, dtt = inputs
+        upd = jnp.einsum("bnh,bs->bnhs", xt * dtt[..., None],
+                         Bt.astype(jnp.float32))
+        h = h * dct[..., None, None] + upd
+        yt = jnp.einsum("bnhs,bs->bnh", h, Ct.astype(jnp.float32))
+        return h, yt
+
+    seq_inputs = (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(Bmat, 1, 0),
+                  jnp.moveaxis(Cmat, 1, 0), jnp.moveaxis(decay, 1, 0),
+                  jnp.moveaxis(dt, 1, 0))
+    hT, ys = lax.scan(cell, h0, seq_inputs)
+    return jnp.moveaxis(ys, 0, 1), hT
+
+
+def _ssm_scan_chunked(xs, Bmat, Cmat, logdecay, dt, h0, chunk: int):
+    """Chunked SSD (Mamba-2's blocked algorithm) — mathematically equal to
+    the per-step recurrence but with O(S/chunk) state round-trips and
+    MXU-friendly (C x C) matmuls.  This is the paper-style hardware
+    adaptation of §Perf: state stays in VMEM for a whole chunk.
+
+    xs: (B,S,nh,hd) f32; Bmat/Cmat: (B,S,ds); logdecay/dt: (B,S,nh);
+    h0: (B,nh,hd,ds).  Requires S % chunk == 0.
+    """
+    B, S, nh, hd = xs.shape
+    ds = Bmat.shape[-1]
+    nc = S // chunk
+    u = xs * dt[..., None]                       # effective input
+    # reshape to chunks
+    uc = u.reshape(B, nc, chunk, nh, hd)
+    Bc = Bmat.reshape(B, nc, chunk, ds).astype(jnp.float32)
+    Cc = Cmat.reshape(B, nc, chunk, ds).astype(jnp.float32)
+    ld = logdecay.reshape(B, nc, chunk, nh)
+    s = jnp.cumsum(ld, axis=2)                   # inclusive log-decay
+    # intra-chunk: M[i,j] = (C_i . B_j) * exp(s_i - s_j) for j <= i
+    G = jnp.einsum("bncs,bnks->bnck", Cc, Bc)    # (B,nc,C,C)
+    delta = s[:, :, :, None, :] - s[:, :, None, :, :]   # (B,nc,C,C,nh)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Dm = jnp.where(causal[None, None, :, :, None], jnp.exp(delta), 0.0)
+    M = G[..., None] * Dm                        # (B,nc,C,C,nh)
+    y_intra = jnp.einsum("bnckh,bnkhd->bnchd", M, uc)
+    # inter-chunk: scan over chunks carrying h (B,nh,hd,ds)
+    w_in = jnp.exp(s)                            # state->output decay
+    w_out = jnp.exp(s[:, :, -1:, :] - s)         # input->chunk-end decay
+    a_chunk = jnp.exp(s[:, :, -1, :])            # total chunk decay
+    # state ingredients per chunk: hupd = sum_j w_out_j * u_j (x) B_j
+    hupd = jnp.einsum("bnchd,bnch,bncs->bnhds",
+                      uc, w_out, Bc)             # (B,nc,nh,hd,ds)
+
+    def chunk_cell(h, inputs):
+        yi, win, hup, ac, Ci = inputs
+        # y_inter[i] = win_i * (C_i . h)
+        y_inter = jnp.einsum("bcs,bhds,bch->bchd", Ci, h, win)
+        h = h * ac[:, :, None, None] + hup
+        return h, yi + y_inter
+
+    per_chunk = (jnp.moveaxis(y_intra, 1, 0),
+                 jnp.moveaxis(w_in, 1, 0),
+                 jnp.moveaxis(hupd, 1, 0),
+                 jnp.moveaxis(a_chunk, 1, 0),
+                 jnp.moveaxis(Cc, 1, 0))
+    hT, ys = lax.scan(chunk_cell, h0, per_chunk)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, nh, hd)
+    return y, hT
+
+
+def mamba2_apply(p: Params, cfg: ArchConfig, x: jnp.ndarray, *,
+                 cst: Callable = layers._id_cst,
+                 cache: Optional[Dict] = None,
+                 chunk: Optional[int] = None):
+    """x: (B, S, d).  cache = {'conv': (B,K-1,conv_dim),
+    'ssm': (B,nh,hd,ds)} for decode; None for train (zero init).
+
+    Train/prefill uses the chunked SSD path when S % chunk == 0 (else the
+    stepwise reference); decode is a single recurrence step.
+    """
+    import os
+    if chunk is None:  # env override enables §Perf A/B comparisons
+        chunk = int(os.environ.get("REPRO_SSM_CHUNK", MAMBA2_CHUNK))
+    B, S, d = x.shape
+    d_in, nh, ds, hd = mamba2_dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    conv_state = cache["conv"] if cache is not None else None
+    z, xBC, dt, new_conv = _mamba2_inner(p, cfg, xz, conv_state)
+    xs = xBC[..., :d_in].reshape(B, S, nh, hd)
+    Bmat = xBC[..., d_in:d_in + ds]                      # (B,S,ds)
+    Cmat = xBC[..., d_in + ds:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"][None, None])       # (B,S,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))         # (nh,)
+    logdecay = dt * A[None, None]                        # (B,S,nh), <= 0
+    xs = cst(xs, ("batch", "seq", "heads", "head_dim"))
+    xs32 = xs.astype(jnp.float32)
+
+    h0 = (cache["ssm"] if cache is not None else
+          jnp.zeros((B, nh, hd, ds), jnp.float32))
+
+    if cache is None and chunk > 0 and S % chunk == 0 and S > chunk:
+        y, hT = _ssm_scan_chunked(xs32, Bmat, Cmat, logdecay, dt, h0, chunk)
+    else:
+        y, hT = _ssm_scan_stepwise(xs32, Bmat, Cmat, jnp.exp(logdecay),
+                                   dt, h0)
+    y = y + xs32 * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    y = layers.rmsnorm_apply(p["norm"], (y * jax.nn.silu(
+        z.astype(jnp.float32))).astype(x.dtype), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "ssm": hT}
+    return cst(out, ("batch", "seq", "embed")), new_cache
+
+
+def mamba2_cache_spec(cfg: ArchConfig, batch: int):
+    d_in, nh, ds, hd = mamba2_dims(cfg)
+    conv_dim = d_in + 2 * ds
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, conv_dim),
+                                     cfg.dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, nh, hd, ds), jnp.float32),
+    }
+
+
+# ----------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory w/ recurrence)
+# ----------------------------------------------------------------------------
+
+
+def mlstm_spec(cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    d_up = 2 * d      # pf=2 up-projection (xLSTM paper)
+    return {
+        "up": ParamSpec((d, 2 * d_up), ("embed", "mlp"), cfg.dtype, "scaled"),
+        "wq": ParamSpec((d_up, d_up), ("mlp", "heads_x"), cfg.dtype, "scaled"),
+        "wk": ParamSpec((d_up, d_up), ("mlp", "heads_x"), cfg.dtype, "scaled"),
+        "wv": ParamSpec((d_up, d_up), ("mlp", "heads_x"), cfg.dtype, "scaled"),
+        "wi": ParamSpec((d_up, H), ("mlp", "heads"), jnp.float32, "scaled"),
+        "wf": ParamSpec((d_up, H), ("mlp", "heads"), jnp.float32, "scaled"),
+        "bi": ParamSpec((H,), ("heads",), jnp.float32, "zeros"),
+        "bf": ParamSpec((H,), ("heads",), jnp.float32, "ones"),
+        "norm": layers.rmsnorm_spec(d_up),
+        "down": ParamSpec((d_up, d), ("mlp", "embed"), cfg.dtype, "scaled"),
+    }
+
+
+def mlstm_apply(p: Params, cfg: ArchConfig, x: jnp.ndarray, *,
+                cst: Callable = layers._id_cst,
+                cache: Optional[Dict] = None):
+    """Matrix-memory LSTM with exponential gating + stabilizer state."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    up = jnp.einsum("bsd,de->bse", x, p["up"])
+    d_up = up.shape[-1] // 2
+    u, gate_skip = up[..., :d_up], up[..., d_up:]
+    dh = d_up // H
+    q = jnp.einsum("bse,ef->bsf", u, p["wq"]).reshape(B, S, H, dh)
+    k = jnp.einsum("bse,ef->bsf", u, p["wk"]).reshape(B, S, H, dh) / \
+        math.sqrt(dh)
+    v = jnp.einsum("bse,ef->bsf", u, p["wv"]).reshape(B, S, H, dh)
+    ig = (jnp.einsum("bse,eh->bsh", u.astype(jnp.float32), p["wi"])
+          + p["bi"])                                     # log input gate
+    fg = (jnp.einsum("bse,eh->bsh", u.astype(jnp.float32), p["wf"])
+          + p["bf"])
+    logf = -jax.nn.softplus(-fg)                          # log sigmoid(f)
+
+    if cache is not None:
+        C0, n0, m0 = cache["C"], cache["n"], cache["m"]
+    else:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        # large-negative finite (NOT -inf: grads through exp(m - m_new)
+        # would be NaN); e^-30 ~ 1e-13 makes the first forget term exact 0
+        m0 = jnp.full((B, H), -30.0, jnp.float32)
+
+    def cell(carry, inputs):
+        C, n, m = carry
+        qt, kt, vt, it, lft = inputs                      # (B,H,dh)... (B,H)
+        m_new = jnp.maximum(lft + m, it)
+        fscale = jnp.exp(lft + m - m_new)                 # (B,H)
+        iscale = jnp.exp(it - m_new)
+        C = C * fscale[..., None, None] + iscale[..., None, None] * \
+            jnp.einsum("bhv,bhk->bhvk", vt.astype(jnp.float32),
+                       kt.astype(jnp.float32))
+        n = n * fscale[..., None] + iscale[..., None] * kt.astype(jnp.float32)
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt.astype(jnp.float32))
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n,
+                                             qt.astype(jnp.float32))),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    seq = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+           jnp.moveaxis(v, 1, 0), jnp.moveaxis(ig, 1, 0),
+           jnp.moveaxis(logf, 1, 0))
+    (CT, nT, mT), hs = lax.scan(cell, (C0, n0, m0), seq)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d_up).astype(x.dtype)
+    h = layers.rmsnorm_apply(p["norm"], h, cfg.norm_eps)
+    h = h * jax.nn.silu(gate_skip)
+    out = jnp.einsum("bse,ed->bsd", h, p["down"])
+    new_cache = {"C": CT, "n": nT, "m": mT} if cache is not None else None
+    return cst(out, ("batch", "seq", "embed")), new_cache
+
+
+def mlstm_cache_spec(cfg: ArchConfig, batch: int):
+    H = cfg.n_heads
+    dh = (2 * cfg.d_model) // H
+    return {"C": jax.ShapeDtypeStruct((batch, H, dh, dh), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, H, dh), jnp.float32),
+            "m": jax.ShapeDtypeStruct((batch, H), jnp.float32)}
+
+
+def slstm_spec(cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    return {
+        "W": ParamSpec((d, 4 * d), ("embed", "mlp"), cfg.dtype, "scaled"),
+        "R": ParamSpec((H, dh, 4 * dh), ("heads", "head_dim", None),
+                       cfg.dtype, "scaled"),
+        "b": ParamSpec((4 * d,), ("mlp",), jnp.float32, "zeros"),
+        "norm": layers.rmsnorm_spec(d),
+        "out": ParamSpec((d, d), ("embed", "embed_out"), cfg.dtype, "scaled"),
+    }
+
+
+def slstm_apply(p: Params, cfg: ArchConfig, x: jnp.ndarray, *,
+                cst: Callable = layers._id_cst,
+                cache: Optional[Dict] = None):
+    """Scalar-memory LSTM with exponential gating, normalizer state and
+    block-diagonal (per-head) recurrence — the truly sequential xLSTM cell."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    wx = jnp.einsum("bsd,de->bse", x, p["W"]).astype(jnp.float32) + p["b"]
+
+    if cache is not None:
+        c0, n0, h0, m0 = cache["c"], cache["n"], cache["h"], cache["m"]
+    else:
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.ones((B, d), jnp.float32)
+        h0 = jnp.zeros((B, d), jnp.float32)
+        m0 = jnp.zeros((B, d), jnp.float32)
+
+    R = p["R"].astype(jnp.float32)
+
+    def cell(carry, wxt):
+        c, n, h, m = carry
+        hh = h.reshape(B, H, dh)
+        rec = jnp.einsum("bhk,hke->bhe", hh, R).reshape(B, 4 * d)
+        # gate layout: [i, f, z, o] each (d,)
+        g = wxt + rec
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(gf + m, gi)                   # stabilizer
+        i = jnp.exp(gi - m_new)
+        f = jnp.exp(gf + m - m_new)
+        z = jnp.tanh(gz)
+        o = jax.nn.sigmoid(go)
+        c = f * c + i * z
+        n = f * n + i
+        h = o * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    (cT, nT, hT, mT), hs = lax.scan(cell, (c0, n0, h0, m0),
+                                    jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)            # (B,S,d)
+    h = layers.rmsnorm_apply(p["norm"], h, cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", h, p["out"])
+    new_cache = ({"c": cT, "n": nT, "h": hT, "m": mT}
+                 if cache is not None else None)
+    return cst(out, ("batch", "seq", "embed")), new_cache
+
+
+def slstm_cache_spec(cfg: ArchConfig, batch: int):
+    d = cfg.d_model
+    return {"c": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+            "h": jax.ShapeDtypeStruct((batch, d), jnp.float32),
+            "m": jax.ShapeDtypeStruct((batch, d), jnp.float32)}

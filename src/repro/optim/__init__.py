@@ -1,0 +1,3 @@
+from . import adamw, gradflow
+
+__all__ = ["adamw", "gradflow"]

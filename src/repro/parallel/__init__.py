@@ -1,0 +1,6 @@
+from . import sharding
+from .sharding import (ACT_RULES, PARAM_RULES, cache_axes_like, make_cst,
+                       param_shardings, spec_for)
+
+__all__ = ["sharding", "ACT_RULES", "PARAM_RULES", "cache_axes_like",
+           "make_cst", "param_shardings", "spec_for"]

@@ -1,0 +1,65 @@
+"""Serving: batched autoregressive decode over the Model decode_step.
+
+``make_serve_step`` is THE unit the dry-run lowers for decode shapes:
+one new token against a KV cache of seq_len.  ``generate`` drives it in
+a host loop (greedy or temperature sampling) for the examples.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model, ParallelCtx
+
+
+def make_serve_step(model: Model, pctx: ParallelCtx = ParallelCtx()):
+    def serve_step(params, batch, caches):
+        logits, new_caches = model.decode_step(params, batch, caches, pctx)
+        return logits, new_caches
+
+    return serve_step
+
+
+def sample_token(logits: jnp.ndarray, key, temperature: float = 0.0):
+    """logits (B, 1, V) -> (B, 1) int32."""
+    lf = logits[:, -1].astype(jnp.float32)
+    if temperature <= 0:
+        return jnp.argmax(lf, axis=-1)[:, None].astype(jnp.int32)
+    return jax.random.categorical(key, lf / temperature)[:, None].astype(
+        jnp.int32)
+
+
+def generate(model: Model, params, prompt: jnp.ndarray, max_new: int,
+             *, temperature: float = 0.0, key=None,
+             pctx: ParallelCtx = ParallelCtx(), extra_batch: Optional[Dict] = None):
+    """Greedy/temperature generation.  prompt: (B, S0) int32.
+
+    Prefill is done token-by-token through the same decode path (simple
+    and universal across cache types); a chunked prefill is a perf
+    optimization left to the serve benchmarks.
+    """
+    B, S0 = prompt.shape
+    key = key if key is not None else jax.random.PRNGKey(0)
+    caches = model.init_cache(B, S0 + max_new)
+    step_fn = jax.jit(make_serve_step(model, pctx))
+    toks = prompt
+    logits = None
+    for i in range(S0):
+        batch = {"tokens": toks[:, i:i + 1], "pos": jnp.asarray(i, jnp.int32)}
+        if extra_batch:
+            batch.update(extra_batch)
+        logits, caches = step_fn(params, batch, caches)
+    out = [toks]
+    cur = sample_token(logits, key, temperature)
+    for i in range(max_new):
+        out.append(cur)
+        batch = {"tokens": cur, "pos": jnp.asarray(S0 + i, jnp.int32)}
+        if extra_batch:
+            batch.update(extra_batch)
+        logits, caches = step_fn(params, batch, caches)
+        key, sub = jax.random.split(key)
+        cur = sample_token(logits, sub, temperature)
+    return jnp.concatenate(out, axis=1)

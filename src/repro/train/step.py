@@ -1,0 +1,102 @@
+"""Training step: loss -> grad -> (accumulate) -> AdamW, fully jittable.
+
+``make_train_step`` builds the canonical production step:
+  * optional microbatch gradient accumulation via lax.scan (keeps the
+    per-microbatch peak activation memory constant);
+  * grads/loss in f32, params in cfg.dtype (bf16);
+  * state donation so XLA reuses parameter/moment buffers in place.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.transformer import Model, ParallelCtx
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+
+
+def init_state(model: Model, key, ocfg: adamw.AdamWConfig = adamw.AdamWConfig()):
+    params = model.init(key)
+    return TrainState(params=params, opt=adamw.init(params, ocfg))
+
+
+def make_train_step(model: Model, pctx: ParallelCtx = ParallelCtx(),
+                    ocfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                    microbatches: int = 1, grad_shardings=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``grad_shardings``: optional tree of NamedShardings (the parameter
+    shardings).  Constraining grads to them makes GSPMD emit
+    reduce-scatters into the sharded optimizer state instead of full
+    all-reduces — half the gradient-sync traffic (§Perf 'grad-rs').
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, pctx)
+
+    def compute_grads(params, batch):
+        if microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        # split leading batch dim into microbatches and accumulate
+        def reshape(x):
+            b = x.shape[0]
+            assert b % microbatches == 0
+            return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+        mb = jax.tree_util.tree_map(reshape, batch)
+
+        def acc_step(carry, mbatch):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mbatch)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, g_sum), _ = lax.scan(acc_step, (jnp.zeros(()), g0), mb)
+        inv = 1.0 / microbatches
+        return loss_sum * inv, jax.tree_util.tree_map(
+            lambda g: g * inv, g_sum)
+
+    def train_step(state: TrainState, batch):
+        loss, grads = compute_grads(state.params, batch)
+        if grad_shardings is not None:
+            grads = jax.tree_util.tree_map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads, grad_shardings)
+        new_params, new_opt, ostats = adamw.update(grads, state.opt,
+                                                   state.params, ocfg)
+        metrics = {"loss": loss.astype(jnp.float32), **ostats}
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def abstract_state(model: Model, ocfg: adamw.AdamWConfig = adamw.AdamWConfig()):
+    """ShapeDtypeStruct TrainState (for the dry-run: no allocation)."""
+    aparams = model.abstract_params()
+    zeros_like = lambda p: jax.ShapeDtypeStruct(p.shape, ocfg.moment_dtype)
+    return TrainState(
+        params=aparams,
+        opt=adamw.AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            m=jax.tree_util.tree_map(zeros_like, aparams),
+            v=jax.tree_util.tree_map(zeros_like, aparams)))
+
+
+def state_axes(model: Model):
+    """Logical-axes tree matching abstract_state (opt follows params)."""
+    paxes = model.param_axes()
+    return TrainState(
+        params=paxes,
+        opt=adamw.AdamWState(step=(), m=paxes, v=paxes))

@@ -1,0 +1,72 @@
+"""Root-finding / event detection (CVodeRootInit analog) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import butcher, events
+from repro.core.arkode import ODEOptions
+
+
+def test_event_on_decay_threshold():
+    """y' = -y, y(0)=1; event y - 0.5 = 0 at t = ln 2."""
+    f = lambda t, y: -y
+    g = lambda t, y: y[0] - 0.5
+    res = events.erk_integrate_with_events(
+        f, g, jnp.ones((1,)), 0.0, 5.0, butcher.DORMAND_PRINCE,
+        ODEOptions(rtol=1e-8, atol=1e-12))
+    assert bool(res.found)
+    assert abs(float(res.t_event) - np.log(2.0)) < 1e-6
+    assert abs(float(res.y_event[0]) - 0.5) < 1e-5
+    assert int(res.which) == 0
+
+
+def test_event_oscillator_zero_crossing():
+    """Harmonic oscillator: first zero of position at t = pi/2."""
+    def f(t, y):
+        return jnp.stack([y[1], -y[0]])
+
+    g = lambda t, y: y[0]
+    res = events.erk_integrate_with_events(
+        f, g, jnp.asarray([1.0, 0.0]), 0.0, 10.0,
+        butcher.DORMAND_PRINCE, ODEOptions(rtol=1e-9, atol=1e-12))
+    assert bool(res.found)
+    assert abs(float(res.t_event) - np.pi / 2) < 1e-6
+
+
+def test_multiple_event_functions_first_wins():
+    f = lambda t, y: jnp.ones_like(y)       # y = t
+    def g(t, y):
+        return jnp.stack([y[0] - 3.0, y[0] - 1.0])  # second fires first
+
+    res = events.erk_integrate_with_events(
+        f, g, jnp.zeros((1,)), 0.0, 10.0, butcher.BOGACKI_SHAMPINE,
+        ODEOptions(rtol=1e-8, atol=1e-12))
+    assert bool(res.found)
+    assert int(res.which) == 1
+    assert abs(float(res.t_event) - 1.0) < 1e-6
+
+
+def test_no_event_runs_to_tf():
+    f = lambda t, y: -y
+    g = lambda t, y: y[0] + 1.0              # never zero (y stays > 0)
+    res = events.erk_integrate_with_events(
+        f, g, jnp.ones((1,)), 0.0, 2.0, butcher.DORMAND_PRINCE,
+        ODEOptions(rtol=1e-8, atol=1e-12))
+    assert not bool(res.found)
+    assert abs(float(res.t_event) - 2.0) < 1e-12
+
+
+def test_event_detection_is_jittable():
+    f = lambda t, y: -y
+    g = lambda t, y: y[0] - 0.25
+
+    @jax.jit
+    def run(y0):
+        return events.erk_integrate_with_events(
+            f, g, y0, 0.0, 5.0, butcher.DORMAND_PRINCE,
+            ODEOptions(rtol=1e-8, atol=1e-12))
+
+    res = run(jnp.ones((1,)))
+    assert bool(res.found)
+    assert abs(float(res.t_event) - np.log(4.0)) < 1e-6

@@ -1,0 +1,254 @@
+"""Integrator correctness: convergence orders, adaptive tolerance tracking,
+stiff problems, ensemble (submodel) mode — the paper's §7 numerics."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import arkode, batched, butcher, cvode
+from repro.core.arkode import ODEOptions
+
+
+LAM = 50.0
+
+
+def fi_stiff(t, y):
+    return -LAM * (y - jnp.cos(t))
+
+
+def exact_stiff(t):
+    a = LAM * LAM / (1 + LAM * LAM)
+    b = LAM / (1 + LAM * LAM)
+    return a * np.cos(t) + b * np.sin(t) - a * np.exp(-LAM * t)
+
+
+def _order(errs):
+    return [math.log2(errs[i] / errs[i + 1]) for i in range(len(errs) - 1)]
+
+
+# ---------------------------------------------------------------------------
+# explicit methods
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,expected", [
+    ("euler", 1), ("heun_euler", 2), ("bogacki_shampine", 3),
+    ("dormand_prince", 5)])
+def test_erk_convergence_order(name, expected):
+    tab = butcher.ERK_TABLES[name]
+    f = lambda t, y: -y + jnp.sin(3 * t)
+    y0 = jnp.ones((2,))
+    # exact via very fine DP5
+    ref = arkode.erk_fixed(f, y0, 0.0, 1.0, 2048, butcher.DORMAND_PRINCE)
+    errs = []
+    for n in (16, 32, 64):
+        y = arkode.erk_fixed(f, y0, 0.0, 1.0, n, tab)
+        errs.append(float(jnp.max(jnp.abs(y - ref))))
+    orders = _order(errs)
+    assert orders[-1] > expected - 0.45, (name, orders, errs)
+
+
+def test_erk_adaptive_hits_tolerance():
+    f = lambda t, y: -y
+    y0 = jnp.ones((4,))
+    for rtol in (1e-5, 1e-8):
+        y, st = arkode.erk_integrate(f, y0, 0.0, 2.0,
+                                     butcher.DORMAND_PRINCE,
+                                     ODEOptions(rtol=rtol, atol=1e-12))
+        err = float(jnp.max(jnp.abs(y - np.exp(-2.0))))
+        assert bool(st.success)
+        assert err < 50 * rtol * np.exp(-2.0) + 1e-12
+    # tighter tolerance must take more steps
+    _, s1 = arkode.erk_integrate(f, y0, 0.0, 2.0, butcher.DORMAND_PRINCE,
+                                 ODEOptions(rtol=1e-4, atol=1e-12))
+    _, s2 = arkode.erk_integrate(f, y0, 0.0, 2.0, butcher.DORMAND_PRINCE,
+                                 ODEOptions(rtol=1e-9, atol=1e-12))
+    assert int(s2.steps) > int(s1.steps)
+
+
+def test_erk_rejects_and_recovers_on_kick():
+    # RHS with a sharp feature: controller must reject some steps yet finish
+    f = lambda t, y: -y + 100.0 * jnp.exp(-((t - 1.0) / 0.01) ** 2)
+    y0 = jnp.ones((1,))
+    y, st = arkode.erk_integrate(f, y0, 0.0, 2.0, butcher.BOGACKI_SHAMPINE,
+                                 ODEOptions(rtol=1e-6, atol=1e-9))
+    assert bool(st.success)
+    assert int(st.netf) > 0       # the kick forces error-test failures
+
+
+# ---------------------------------------------------------------------------
+# implicit / IMEX
+# ---------------------------------------------------------------------------
+
+
+def test_dirk_stiff_adaptive():
+    ls = arkode.dense_lin_solver(fi_stiff)
+    y, st = arkode.dirk_integrate(fi_stiff, jnp.zeros((1,)), 0.0, 2.0,
+                                  butcher.SDIRK2,
+                                  ODEOptions(rtol=1e-6, atol=1e-9),
+                                  lin_solver=ls)
+    assert bool(st.success)
+    assert abs(float(y[0]) - exact_stiff(2.0)) < 1e-5
+
+
+def test_sdirk2_order():
+    ls = arkode.dense_lin_solver(fi_stiff)
+    errs = []
+    for n in (40, 80, 160):
+        y = arkode.dirk_fixed(fi_stiff, jnp.zeros((1,)), 0.0, 1.0, n,
+                              butcher.SDIRK2, lin_solver=ls)
+        errs.append(abs(float(y[0]) - exact_stiff(1.0)))
+    assert _order(errs)[-1] > 1.6, errs
+
+
+def test_ark324_imex_order3():
+    fe = lambda t, y: LAM * jnp.cos(t) * jnp.ones_like(y)
+    fi = lambda t, y: -LAM * y
+    ls = arkode.dense_lin_solver(fi)
+    errs = []
+    for n in (40, 80, 160):
+        y = arkode.imex_fixed(fe, fi, jnp.zeros((1,)), 0.0, 1.0, n,
+                              butcher.ARK324, lin_solver=ls)
+        errs.append(abs(float(y[0]) - exact_stiff(1.0)))
+    assert _order(errs)[-1] > 2.5, errs   # asymptotic 3rd order
+
+
+def test_imex_adaptive_stiff():
+    fe = lambda t, y: LAM * jnp.cos(t) * jnp.ones_like(y)
+    fi = lambda t, y: -LAM * y
+    ls = arkode.dense_lin_solver(fi)
+    y, st = arkode.imex_integrate(fe, fi, jnp.zeros((1,)), 0.0, 2.0,
+                                  butcher.ARK324,
+                                  ODEOptions(rtol=1e-7, atol=1e-10),
+                                  lin_solver=ls)
+    assert bool(st.success)
+    assert abs(float(y[0]) - exact_stiff(2.0)) < 1e-5
+    assert int(st.nni) > 0
+
+
+def test_matrix_free_gmres_newton_path():
+    """Default lin_solver (jvp+GMRES) on a 2x2 nonlinear stiff system."""
+    def fi(t, y):
+        return jnp.stack([-80.0 * y[0] + y[1] ** 2,
+                          -0.5 * y[1] - 0.1 * y[0]])
+
+    y, st = arkode.dirk_integrate(fi, jnp.asarray([1.0, 1.0]), 0.0, 1.0,
+                                  butcher.SDIRK2,
+                                  ODEOptions(rtol=1e-6, atol=1e-9))
+    assert bool(st.success)
+    ref = arkode.erk_fixed(fi, jnp.asarray([1.0, 1.0]), 0.0, 1.0, 4000,
+                           butcher.DORMAND_PRINCE)
+    np.testing.assert_allclose(y, ref, rtol=1e-4, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# BDF / Adams (CVODE)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("q", [1, 2, 3, 4])
+def test_bdf_fixed_order(q):
+    errs = []
+    for n in (40, 80, 160):
+        y = cvode.bdf_fixed(fi_stiff, jnp.zeros((1,)), 0.0, 1.0, n, order=q)
+        errs.append(abs(float(y[0]) - exact_stiff(1.0)))
+    assert _order(errs)[-1] > q - 0.5, (q, errs)
+
+
+def test_bdf_adaptive_stiff():
+    y, st = cvode.bdf_integrate(fi_stiff, jnp.zeros((1,)), 0.0, 2.0,
+                                order=5,
+                                opts=ODEOptions(rtol=1e-7, atol=1e-10),
+                                dense_jac=True)
+    assert bool(st.success)
+    assert abs(float(y[0]) - exact_stiff(2.0)) < 1e-6
+
+
+def test_bdf_robertson_like():
+    """Classic very-stiff kinetics (Robertson, rescaled horizon)."""
+    def f(t, y):
+        return jnp.stack([
+            -0.04 * y[0] + 1e4 * y[1] * y[2],
+            0.04 * y[0] - 1e4 * y[1] * y[2] - 3e7 * y[1] ** 2,
+            3e7 * y[1] ** 2])
+
+    y0 = jnp.asarray([1.0, 0.0, 0.0])
+    y, st = cvode.bdf_integrate(f, y0, 0.0, 40.0, order=5,
+                                opts=ODEOptions(rtol=1e-6, atol=1e-10,
+                                                max_steps=200_000),
+                                dense_jac=True)
+    assert bool(st.success)
+    # mass conservation + literature values at t=40
+    assert abs(float(jnp.sum(y)) - 1.0) < 1e-6
+    assert abs(float(y[0]) - 0.7158) < 5e-3
+    assert float(y[1]) < 1e-4
+
+
+def test_adams_nonstiff():
+    y, st = cvode.adams_integrate(lambda t, y: -y, jnp.ones((2,)), 0.0, 2.0,
+                                  ODEOptions(rtol=1e-6, atol=1e-9))
+    assert bool(st.success)
+    assert float(jnp.max(jnp.abs(y - np.exp(-2.0)))) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# ensemble (submodel) integration
+# ---------------------------------------------------------------------------
+
+
+def test_ensemble_erk_per_system_adaptivity():
+    rates = jnp.linspace(0.5, 3.0, 8)
+    f = lambda t, y: -rates[:, None] * y
+    y0 = jnp.ones((8, 4))
+    y, st = batched.ensemble_erk_integrate(
+        f, y0, 0.0, 1.5, butcher.BOGACKI_SHAMPINE,
+        ODEOptions(rtol=1e-7, atol=1e-10))
+    ref = np.broadcast_to(np.exp(-np.asarray(rates) * 1.5)[:, None],
+                          y.shape)
+    assert bool(jnp.all(st.success))
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-5, atol=1e-8)
+    # stiffer systems must take more steps (independent step control)
+    steps = np.asarray(st.steps)
+    assert steps[-1] > steps[0]
+
+
+def test_ensemble_dirk_blockdiag_newton():
+    nsys, n = 6, 3
+
+    def f(t, y):
+        return -50.0 * (y - jnp.cos(t)[:, None])
+
+    def jac(t, y):
+        return jnp.broadcast_to(-50.0 * jnp.eye(n), (y.shape[0], n, n))
+
+    y0 = jnp.zeros((nsys, n))
+    y, st = batched.ensemble_dirk_integrate(
+        f, jac, y0, 0.0, 2.0, butcher.SDIRK2,
+        ODEOptions(rtol=1e-5, atol=1e-8))
+    assert bool(jnp.all(st.success))
+    np.testing.assert_allclose(np.asarray(y), exact_stiff(2.0), rtol=1e-4,
+                               atol=1e-6)
+
+
+def test_ensemble_dirk_with_pallas_backend():
+    from repro.core.policies import ExecPolicy
+    nsys, n = 4, 3
+
+    def f(t, y):
+        return -20.0 * (y - jnp.sin(t)[:, None])
+
+    def jac(t, y):
+        return jnp.broadcast_to(-20.0 * jnp.eye(n), (y.shape[0], n, n))
+
+    y0 = jnp.zeros((nsys, n))
+    pol = ExecPolicy(backend="pallas", batch_tile=128, interpret=True)
+    y_pal, _ = batched.ensemble_dirk_integrate(
+        f, jac, y0, 0.0, 1.0, butcher.SDIRK2,
+        ODEOptions(rtol=1e-5, atol=1e-8), policy=pol)
+    y_jnp, _ = batched.ensemble_dirk_integrate(
+        f, jac, y0, 0.0, 1.0, butcher.SDIRK2,
+        ODEOptions(rtol=1e-5, atol=1e-8))
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_jnp),
+                               rtol=1e-10, atol=1e-12)

@@ -1,0 +1,92 @@
+"""N_Vector ops: unit + property tests (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import vector as nv
+
+
+def arrays(n):
+    return st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=n,
+                    max_size=n).map(lambda l: jnp.asarray(l, jnp.float64))
+
+
+@settings(max_examples=30, deadline=None)
+@given(arrays(8), arrays(8), st.floats(-10, 10), st.floats(-10, 10))
+def test_linear_sum_matches_numpy(x, y, a, b):
+    out = nv.linear_sum(a, x, b, y)
+    np.testing.assert_allclose(out, a * np.asarray(x) + b * np.asarray(y),
+                               rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(arrays(16), arrays(16))
+def test_dot_symmetry_and_linearity(x, y):
+    assert np.isclose(float(nv.dot(x, y)), float(nv.dot(y, x)))
+    assert np.isclose(float(nv.dot(nv.scale(2.0, x), y)),
+                      2.0 * float(nv.dot(x, y)), rtol=1e-10)
+
+
+@settings(max_examples=30, deadline=None)
+@given(arrays(12))
+def test_norm_relations(x):
+    n = x.shape[0]
+    w = jnp.ones_like(x)
+    wrms = float(nv.wrms_norm(x, w))
+    wl2 = float(nv.wl2_norm(x, w))
+    assert np.isclose(wrms, wl2 / np.sqrt(n), rtol=1e-12)
+    assert float(nv.max_norm(x)) <= wl2 + 1e-12
+    assert float(nv.l1_norm(x)) >= wl2 - 1e-9
+
+
+def test_ops_over_pytrees():
+    x = {"a": jnp.ones((3,)), "b": (jnp.full((2,), 2.0),)}
+    y = {"a": jnp.full((3,), 3.0), "b": (jnp.ones((2,)),)}
+    z = nv.linear_sum(2.0, x, 1.0, y)
+    np.testing.assert_allclose(z["a"], 5.0)
+    np.testing.assert_allclose(z["b"][0], 5.0)
+    assert nv.tree_size(x) == 5
+    assert np.isclose(float(nv.dot(x, y)), 3 * 3 + 2 * 2 * 1)
+
+
+def test_linear_combination_fused_equals_pairwise():
+    key = jax.random.PRNGKey(0)
+    vecs = [jax.random.normal(jax.random.PRNGKey(i), (32,)) for i in range(4)]
+    coeffs = [0.5, -1.5, 2.0, 0.25]
+    fused = nv.linear_combination(coeffs, vecs)
+    ref = sum(c * v for c, v in zip(coeffs, vecs))
+    np.testing.assert_allclose(fused, ref, rtol=1e-12)
+
+
+def test_constr_mask_and_min_quotient():
+    c = jnp.asarray([2.0, 1.0, 0.0, -1.0, -2.0])
+    x = jnp.asarray([1.0, 0.0, 5.0, 0.0, -3.0])
+    ok, m = nv.constr_mask(c, x)
+    assert bool(ok)  # all constraints satisfied
+    x_bad = jnp.asarray([-1.0, -0.1, 5.0, 0.1, 3.0])
+    ok, m = nv.constr_mask(c, x_bad)
+    assert not bool(ok)
+    assert np.asarray(m).sum() == 4
+    num = jnp.asarray([1.0, 4.0, 9.0])
+    den = jnp.asarray([2.0, 0.0, 3.0])
+    assert np.isclose(float(nv.min_quotient(num, den)), 0.5)
+
+
+def test_inv_test_detects_zero():
+    ok, z = nv.inv_test(jnp.asarray([1.0, 2.0]))
+    assert bool(ok)
+    np.testing.assert_allclose(z, [1.0, 0.5])
+    ok, _ = nv.inv_test(jnp.asarray([1.0, 0.0]))
+    assert not bool(ok)
+
+
+def test_mesh_vector_gspmd_mode_single_device():
+    mv = nv.MeshVector({"a": jnp.arange(4.0)})
+    got = mv.linear_sum(2.0, 1.0, mv).data["a"]
+    np.testing.assert_allclose(got, 3 * np.arange(4.0))
+    assert np.isclose(float(mv.dot(mv)), float(jnp.sum(jnp.arange(4.0) ** 2)))
+    w = mv.const(1.0)
+    assert np.isclose(float(mv.wrms_norm(w)),
+                      float(jnp.sqrt(jnp.mean(jnp.arange(4.0) ** 2))))
