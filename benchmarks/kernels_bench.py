@@ -4,9 +4,14 @@ Times the pure-jnp (XLA) implementations — the performance-relevant
 backend on this host — and runs the Pallas kernels in interpret mode for
 a correctness spot-check under benchmark shapes (their TPU performance
 is modeled in EXPERIMENTS.md §Perf from BlockSpec arithmetic).
+
+``--smoke`` runs the fast jnp-vs-pallas(interpret) A/B check over every
+dispatched vector op (the CI gate): both backends are invoked through
+the repro.core.dispatch table and must agree to tolerance.
 """
 from __future__ import annotations
 
+import sys
 import time
 
 import jax
@@ -51,6 +56,51 @@ def run():
     return rows
 
 
+def smoke(n: int = 4096, tol: float = 1e-5):
+    """Fast dispatch-layer A/B: every op, jnp vs pallas-interpret, with a
+    per-op timing row.  Exits nonzero on any mismatch (CI gate)."""
+    from repro.core import dispatch as dp
+    from repro.core import vector as nv
+    from repro.core.policies import GRID_STRIDE, XLA_FUSED
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n,))
+    y = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    z = jax.random.normal(jax.random.PRNGKey(2), (n,))
+    w = jnp.abs(y) + 0.1
+    m = (x > 0).astype(x.dtype)
+    coeffs = [0.3, -1.2, 2.5]
+    cases = {
+        "linear_sum": lambda p: dp.linear_sum(2.0, x, -0.5, y, p),
+        "linear_combination": lambda p: dp.linear_combination(
+            coeffs, [x, y, z], p),
+        "scale_add_multi": lambda p: jnp.stack(
+            dp.scale_add_multi(coeffs, x, [x, y, z], p)),
+        "axpy": lambda p: dp.axpy(1.7, x, y, p),
+        "dot": lambda p: dp.dot(x, y, p),
+        "wrms_norm": lambda p: dp.wrms_norm(x, w, p),
+        "wrms_norm_mask": lambda p: dp.wrms_norm_mask(x, w, m, p),
+        "dot_prod_multi": lambda p: dp.dot_prod_multi(x, [y, z, w], p),
+    }
+    rows, ok = [], True
+    for name, fn in cases.items():
+        a = np.asarray(fn(XLA_FUSED))
+        t0 = time.perf_counter()
+        b = np.asarray(fn(GRID_STRIDE))
+        t_p = (time.perf_counter() - t0) * 1e6
+        err = float(np.max(np.abs(a - b)))
+        good = err <= tol
+        ok &= good
+        rows.append((f"smoke.{name}", "PASS" if good else "FAIL",
+                     f"maxerr={err:.2e},pallas_us={t_p:.0f}"))
+    return rows, ok
+
+
 if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        rows, ok = smoke()
+        for r in rows:
+            print(",".join(str(x) for x in r))
+        sys.exit(0 if ok else 1)
     for r in run():
         print(",".join(str(x) for x in r))

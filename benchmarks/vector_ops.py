@@ -15,10 +15,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch as dp
 from repro.core import vector as nv
+from repro.core.policies import GRID_STRIDE, XLA_FUSED
 
 LENGTHS = [10 ** 3, 10 ** 4, 10 ** 5, 10 ** 6]
 REPS = 30
+AB_N = 2 ** 15          # modest: pallas interpret mode is CPU-emulated
+AB_REPS = 5
 
 STREAMING = {
     "linear_sum": (lambda x, y: nv.linear_sum(2.0, x, -1.0, y),
@@ -44,6 +48,39 @@ def _time(fn, *args, reps=REPS):
     if hasattr(r, "block_until_ready"):
         r.block_until_ready()
     return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def ab_table(n: int = AB_N):
+    """jnp-vs-pallas(interpret) A/B through the dispatch layer.
+
+    Paper Fig. 3 analog: per-op time for the two ExecPolicy backends.
+    On this CPU host the pallas numbers are interpret-mode (correctness
+    path, not a perf claim — TPU perf comes from the same entry points
+    with interpret=False); the table's value is (a) both backends run the
+    identical dispatch call sites and (b) the jnp column is the real
+    XLA-fused cost the deployment pays.
+    """
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for K in range(2, 9):
+        vecs = [jax.random.normal(jax.random.PRNGKey(i), (n,))
+                for i in range(K)]
+        coeffs = [1.0 / (i + 1) for i in range(K)]
+        t_j = _time(lambda: jax.block_until_ready(
+            dp.linear_combination(coeffs, vecs, XLA_FUSED)), reps=AB_REPS)
+        t_p = _time(lambda: jax.block_until_ready(
+            dp.linear_combination(coeffs, vecs, GRID_STRIDE)), reps=AB_REPS)
+        rows.append((f"ab.linear_combination.K{K}.n{n}.jnp_us", t_j,
+                     f"pallas_interpret_us={t_p:.1f}"))
+    x = jax.random.normal(key, (n,))
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (n,))) + 0.1
+    t_j = _time(lambda: jax.block_until_ready(
+        dp.wrms_norm(x, w, XLA_FUSED)), reps=AB_REPS)
+    t_p = _time(lambda: jax.block_until_ready(
+        dp.wrms_norm(x, w, GRID_STRIDE)), reps=AB_REPS)
+    rows.append((f"ab.wrms_norm.n{n}.jnp_us", t_j,
+                 f"pallas_interpret_us={t_p:.1f}"))
+    return rows
 
 
 def run():
@@ -75,6 +112,7 @@ def run():
             rows.append(("crossover_linear_sum", float(n),
                          "first_n_where_jit_wins"))
             break
+    rows.extend(ab_table())
     return rows
 
 

@@ -25,9 +25,11 @@ import jax.numpy as jnp
 from jax import lax
 
 from . import controller as ctrl
+from . import dispatch as dv
 from . import kinsol
 from . import vector as nv
 from .butcher import ButcherTable, IMEXTable
+from .policies import ExecPolicy, XLA_FUSED
 
 Pytree = Any
 
@@ -56,6 +58,7 @@ class ODEOptions(NamedTuple):
     newton_tol_fac: float = 0.1   # Newton tol = fac * (error-test tol 1.0)
     controller: ctrl.ControllerConfig = ctrl.ControllerConfig()
     eta_cf: float = 0.25          # h reduction after a Newton failure
+    policy: ExecPolicy = XLA_FUSED  # vector-op backend (dispatch table)
 
 
 def _tree_where(pred, a: Pytree, b: Pytree) -> Pytree:
@@ -68,12 +71,12 @@ def _ewt(y: Pytree, rtol, atol) -> Pytree:
         lambda yl: 1.0 / (rtol * jnp.abs(yl) + atol), y)
 
 
-def _initial_h(f, t0, y0, tf, rtol, atol):
+def _initial_h(f, t0, y0, tf, rtol, atol, policy: ExecPolicy = XLA_FUSED):
     """Cheap h0 heuristic (Hairer-Wanner-style, simplified)."""
     w = _ewt(y0, rtol, atol)
     f0 = f(t0, y0)
-    d0 = nv.wrms_norm(y0, w)
-    d1 = nv.wrms_norm(f0, w)
+    d0 = dv.wrms_norm(y0, w, policy)
+    d1 = dv.wrms_norm(f0, w, policy)
     h = jnp.where(d1 > 1e-10, 0.01 * d0 / jnp.maximum(d1, 1e-10),
                   1e-6 * (tf - t0))
     h = jnp.clip(h, 1e-12 * (tf - t0), 0.1 * (tf - t0))
@@ -85,7 +88,8 @@ def _initial_h(f, t0, y0, tf, rtol, atol):
 # ----------------------------------------------------------------------------
 
 
-def _erk_step(f, t, y, h, table: ButcherTable):
+def _erk_step(f, t, y, h, table: ButcherTable,
+              policy: ExecPolicy = XLA_FUSED):
     """One explicit step: returns (y_new, y_err, nfe)."""
     s = table.stages
     ks = []
@@ -94,12 +98,13 @@ def _erk_step(f, t, y, h, table: ButcherTable):
             yi = y
         else:
             coeffs = [1.0] + [h * table.A[i][j] for j in range(i)]
-            yi = nv.linear_combination(coeffs, [y] + ks)
+            yi = dv.linear_combination(coeffs, [y] + ks, policy)
         ks.append(f(t + table.c[i] * h, yi))
-    y_new = nv.linear_combination([1.0] + [h * bi for bi in table.b], [y] + ks)
+    y_new = dv.linear_combination([1.0] + [h * bi for bi in table.b],
+                                  [y] + ks, policy)
     if table.b_emb is not None:
         dcoef = [h * (bi - bh) for bi, bh in zip(table.b, table.b_emb)]
-        y_err = nv.linear_combination(dcoef, ks)
+        y_err = dv.linear_combination(dcoef, ks, policy)
     else:
         y_err = nv.const_like(0.0, y)
     return y_new, y_err, s
@@ -110,8 +115,9 @@ def erk_integrate(f: Callable, y0: Pytree, t0, tf,
     """Adaptive explicit RK from t0 to tf. Returns (y(tf), stats)."""
     t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
     tf = jnp.asarray(tf, dtype=t0.dtype)
-    h0 = jnp.where(opts.h0 > 0, opts.h0, _initial_h(f, t0, y0, tf,
-                                                    opts.rtol, opts.atol))
+    h0 = jnp.where(opts.h0 > 0, opts.h0,
+                   _initial_h(f, t0, y0, tf, opts.rtol, opts.atol,
+                              opts.policy))
     p = max(table.emb_order + 1, 2)  # controller exponent (ARKODE style)
 
     class Carry(NamedTuple):
@@ -129,9 +135,9 @@ def erk_integrate(f: Callable, y0: Pytree, t0, tf,
 
     def body(c: Carry) -> Carry:
         h = jnp.minimum(c.h, tf - c.t)
-        y_new, y_err, nfe = _erk_step(f, c.t, c.y, h, table)
+        y_new, y_err, nfe = _erk_step(f, c.t, c.y, h, table, opts.policy)
         w = _ewt(c.y, opts.rtol, opts.atol)
-        err = nv.wrms_norm(y_err, w)
+        err = dv.wrms_norm(y_err, w, opts.policy)
         # guard NaN/Inf: treat as failed step
         bad = ~jnp.isfinite(err)
         err = jnp.where(bad, 2.0, err)
@@ -164,13 +170,13 @@ def erk_integrate(f: Callable, y0: Pytree, t0, tf,
 
 
 def erk_fixed(f: Callable, y0: Pytree, t0, tf, n_steps: int,
-              table: ButcherTable):
+              table: ButcherTable, policy: ExecPolicy = XLA_FUSED):
     """Fixed-step ERK via scan (for convergence-order tests)."""
     h = (tf - t0) / n_steps
 
     def step(carry, i):
         t, y = carry
-        y_new, _, _ = _erk_step(f, t, y, h, table)
+        y_new, _, _ = _erk_step(f, t, y, h, table, policy)
         return (t + h, y_new), None
 
     (t, y), _ = lax.scan(step, (jnp.asarray(t0, jnp.result_type(float)), y0),
@@ -183,7 +189,7 @@ def erk_fixed(f: Callable, y0: Pytree, t0, tf, n_steps: int,
 # ----------------------------------------------------------------------------
 
 
-def default_lin_solver(fi: Callable):
+def default_lin_solver(fi: Callable, policy: ExecPolicy = XLA_FUSED):
     """Matrix-free Newton linear solver: solves (I - gamma*J_fi) dz = rhs
     with GMRES, J_fi v computed by jvp.  This is the SPGMR default of
     ARKODE; swap in a batched block direct solver via ``lin_solver=``."""
@@ -192,10 +198,10 @@ def default_lin_solver(fi: Callable):
     def solve(t, z, gamma, rhs):
         def matvec(v):
             _, jv = jax.jvp(lambda zz: fi(t, zz), (z,), (v,))
-            return nv.linear_sum(1.0, v, -gamma, jv)
+            return dv.linear_sum(1.0, v, -gamma, jv, policy)
 
         dz, _ = krylov.gmres(matvec, rhs, tol=1e-4, restart=20,
-                             max_restarts=2)
+                             max_restarts=2, policy=policy)
         return dz
 
     return solve
@@ -224,14 +230,16 @@ def _implicit_stage(fi, t_i, r, h_aii, z0, lin_solve, wnorm, opts):
     gamma = h_aii
 
     def gfun(z):
-        return nv.linear_combination([1.0, -gamma, -1.0], [z, fi(t_i, z), r])
+        return dv.linear_combination([1.0, -gamma, -1.0],
+                                     [z, fi(t_i, z), r], opts.policy)
 
     def nlin_solve(z, rhs):
         return lin_solve(t_i, z, gamma, rhs)
 
     z, st = kinsol.newton_solve(gfun, z0, nlin_solve, wnorm=wnorm,
                                 tol=opts.newton_tol_fac,
-                                max_iters=opts.newton_max)
+                                max_iters=opts.newton_max,
+                                policy=opts.policy)
     return z, st.iters, st.converged
 
 
@@ -256,7 +264,7 @@ def _ark_step(fe, fi, t, y, h, tab: IMEXTable, lin_solve, wnorm, opts):
                 coeffs.append(h * AE[i][j]); vecs.append(kE[j])
             if AI[i][j] != 0.0:
                 coeffs.append(h * AI[i][j]); vecs.append(kI[j])
-        r = nv.linear_combination(coeffs, vecs)
+        r = dv.linear_combination(coeffs, vecs, opts.policy)
         aii = AI[i][i]
         if aii == 0.0:
             z = r
@@ -267,13 +275,13 @@ def _ark_step(fe, fi, t, y, h, tab: IMEXTable, lin_solve, wnorm, opts):
             ok = ok & conv
         kE.append(fe(t + cE[i] * h, z))
         kI.append(fi(t + cI[i] * h, z))
-    y_new = nv.linear_combination(
+    y_new = dv.linear_combination(
         [1.0] + [h * b for b in bE] + [h * b for b in bI],
-        [y] + kE + kI)
+        [y] + kE + kI, opts.policy)
     if tab.expl.b_emb is not None:
         dE = [h * (b - bh) for b, bh in zip(bE, tab.expl.b_emb)]
         dI = [h * (b - bh) for b, bh in zip(bI, tab.impl.b_emb)]
-        y_err = nv.linear_combination(dE + dI, kE + kI)
+        y_err = dv.linear_combination(dE + dI, kE + kI, opts.policy)
     else:
         y_err = nv.const_like(0.0, y)
     # fi evals: one per stage k_I plus one per Newton iteration (G eval).
@@ -288,15 +296,16 @@ def imex_integrate(fe: Callable, fi: Callable, y0: Pytree, t0, tf,
     ``lin_solver(t, z, gamma, rhs) -> dz`` solves (I - gamma*J_fi) dz = rhs.
     Defaults to matrix-free GMRES with jvp.
     """
-    lin_solve = lin_solver or default_lin_solver(fi)
+    lin_solve = lin_solver or default_lin_solver(fi, opts.policy)
     t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
     tf = jnp.asarray(tf, dtype=t0.dtype)
 
     def ftot(t, y):
-        return nv.linear_sum(1.0, fe(t, y), 1.0, fi(t, y))
+        return dv.linear_sum(1.0, fe(t, y), 1.0, fi(t, y), opts.policy)
 
     h0 = jnp.where(opts.h0 > 0, opts.h0,
-                   _initial_h(ftot, t0, y0, tf, opts.rtol, opts.atol))
+                   _initial_h(ftot, t0, y0, tf, opts.rtol, opts.atol,
+                              opts.policy))
     p = max(tab.emb_order + 1, 2)
 
     class Carry(NamedTuple):
@@ -316,11 +325,11 @@ def imex_integrate(fe: Callable, fi: Callable, y0: Pytree, t0, tf,
         w = _ewt(c.y, opts.rtol, opts.atol)
 
         def wnorm(v):
-            return nv.wrms_norm(v, w)
+            return dv.wrms_norm(v, w, opts.policy)
 
         y_new, y_err, nfe, nfi, nni, nl_ok = _ark_step(
             fe, fi, c.t, c.y, h, tab, lin_solve, wnorm, opts)
-        err = nv.wrms_norm(y_err, w)
+        err = dv.wrms_norm(y_err, w, opts.policy)
         bad = ~jnp.isfinite(err) | ~nl_ok
         err = jnp.where(bad, 2.0, err)
         accept = (err <= 1.0) & ~bad
@@ -379,11 +388,11 @@ def imex_fixed(fe, fi, y0, t0, tf, n_steps: int, tab: IMEXTable,
                opts: ODEOptions = ODEOptions(newton_max=12)):
     """Fixed-step IMEX (convergence tests).  Newton tol tightened so the
     nonlinear-solve error never pollutes the measured order."""
-    lin_solve = lin_solver or default_lin_solver(fi)
+    lin_solve = lin_solver or default_lin_solver(fi, opts.policy)
     h = (tf - t0) / n_steps
 
     def wnorm(v):
-        return jnp.sqrt(nv.dot(v, v) / nv.tree_size(v))
+        return jnp.sqrt(dv.dot(v, v, opts.policy) / nv.tree_size(v))
 
     o = opts._replace(newton_tol_fac=1e-10, newton_max=12)
 

@@ -44,12 +44,21 @@ def ensemble_erk_integrate(f: Callable, y0: jnp.ndarray, t0, tf,
     f  : (t:(nsys,), y:(nsys, n)) -> (nsys, n)   vectorized RHS
     y0 : (nsys, n);  t0, tf broadcastable to (nsys,)
     Each system carries its own (t, h); the loop runs until all done.
+
+    Tables without an embedding (``table.b_emb is None``) provide no
+    error estimate, so adaptivity is impossible: the integrator falls
+    back to fixed-step semantics (every step accepted, h never grown)
+    instead of silently disabling error control and letting h run away
+    at ``eta_max``.
     """
     nsys, n = y0.shape
+    has_emb = table.b_emb is not None
     dtype = y0.dtype
     t0 = jnp.broadcast_to(jnp.asarray(t0, dtype), (nsys,))
     tf = jnp.broadcast_to(jnp.asarray(tf, dtype), (nsys,))
-    h = jnp.maximum(1e-6 * (tf - t0), 1e-12)
+    # opts.h0 seeds the step; without an embedding it IS the fixed step.
+    h = jnp.where(opts.h0 > 0, jnp.full((nsys,), opts.h0, dtype),
+                  jnp.maximum(1e-6 * (tf - t0), 1e-12))
     p = max(table.emb_order + 1, 2)
 
     def cond(c):
@@ -73,21 +82,29 @@ def ensemble_erk_integrate(f: Callable, y0: jnp.ndarray, t0, tf,
             if bi != 0.0:
                 y_new = y_new + (hs * bi)[:, None] * k
         y_err = jnp.zeros_like(y)
-        for bi, bh, k in zip(table.b, table.b_emb or table.b, ks):
-            if (bi - bh) != 0.0:
-                y_err = y_err + (hs * (bi - bh))[:, None] * k
+        if has_emb:
+            for bi, bh, k in zip(table.b, table.b_emb, ks):
+                if (bi - bh) != 0.0:
+                    y_err = y_err + (hs * (bi - bh))[:, None] * k
         w = 1.0 / (opts.rtol * jnp.abs(y) + opts.atol)
         err = jnp.sqrt(jnp.mean((y_err * w) ** 2, axis=1))  # (nsys,)
-        bad = ~jnp.isfinite(err)
+        bad = ~jnp.isfinite(err) | ~jnp.all(jnp.isfinite(y_new), axis=1)
         err = jnp.where(bad, 2.0, err)
         accept = (err <= 1.0) & ~bad & active
-        # per-system PI controller
-        e = jnp.maximum(err, 1e-10)
-        eprev = jnp.maximum(e1, 1e-10)
-        eta = opts.controller.safety * e ** (-opts.controller.k1 / p) * \
-            eprev ** (opts.controller.k2 / p)
-        eta = jnp.clip(eta, opts.controller.eta_min, opts.controller.eta_max)
-        eta = jnp.where(accept | ~active, eta, jnp.minimum(eta, 0.3))
+        if has_emb:
+            # per-system PI controller
+            e = jnp.maximum(err, 1e-10)
+            eprev = jnp.maximum(e1, 1e-10)
+            eta = opts.controller.safety * e ** (-opts.controller.k1 / p) * \
+                eprev ** (opts.controller.k2 / p)
+            eta = jnp.clip(eta, opts.controller.eta_min,
+                           opts.controller.eta_max)
+            eta = jnp.where(accept | ~active, eta, jnp.minimum(eta, 0.3))
+        else:
+            # no embedding -> no error signal: keep h fixed (shrink only
+            # on a non-finite step so the loop can still bail out)
+            e = jnp.maximum(err, 1e-10)
+            eta = jnp.where(bad & active, 0.5, 1.0)
         t = jnp.where(accept, t + hs, t)
         y = jnp.where(accept[:, None], y_new, y)
         h_next = jnp.where(active, jnp.clip(hs * eta, 1e-14, None), h)

@@ -25,8 +25,10 @@ from jax import lax
 from jax.flatten_util import ravel_pytree
 
 from . import controller as ctrl
+from . import dispatch as dv
 from . import kinsol
 from . import vector as nv
+from .policies import ExecPolicy, XLA_FUSED
 from .arkode import ODEOptions, IntegratorStats, dense_lin_solver, \
     default_lin_solver
 
@@ -111,7 +113,8 @@ def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
     from .arkode import _initial_h
     h0 = jnp.where(opts.h0 > 0, opts.h0,
                    _initial_h(lambda t, y: unravel(f_flat(t, ravel_pytree(y)[0])),
-                              t0, y0, tf, opts.rtol, opts.atol))
+                              t0, y0, tf, opts.rtol, opts.atol,
+                              opts.policy))
 
     class Carry(NamedTuple):
         t: jnp.ndarray
@@ -148,7 +151,7 @@ def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
         w_flat = 1.0 / (opts.rtol * jnp.abs(Z[0]) + opts.atol)
 
         def wnorm(v):
-            return jnp.sqrt(jnp.sum((v * w_flat) ** 2) / n)
+            return dv.wrms_norm(v, w_flat, opts.policy)
 
         def gfun(z):
             return z - gamma * f_flat(t_new, z) - psi
@@ -158,7 +161,8 @@ def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
 
         z, nst = kinsol.newton_solve(gfun, y_pred, nsolve, wnorm=wnorm,
                                      tol=opts.newton_tol_fac,
-                                     max_iters=opts.newton_max)
+                                     max_iters=opts.newton_max,
+                                     policy=opts.policy)
         nl_ok = nst.converged
         # LTE estimate ~ C_q (y - y_pred); C_q = 1/(q+1) (uniform grid)
         err = wnorm(z - y_pred) / (c.q.astype(h.dtype) + 1.0)
@@ -207,7 +211,7 @@ def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
 
 def bdf_fixed(f: Callable, y0, t0, tf, n_steps: int, *, order: int = 2,
               lin_solver: Optional[Callable] = None, dense_jac: bool = True,
-              newton_iters: int = 8):
+              newton_iters: int = 8, policy: ExecPolicy = XLA_FUSED):
     """Fixed-step BDF(order) with exact startup via high-order ERK.
 
     For convergence-order tests: global error should scale as h^order.
@@ -248,7 +252,7 @@ def bdf_fixed(f: Callable, y0, t0, tf, n_steps: int, *, order: int = 2,
         gamma = beta * h
 
         def wnorm(v):
-            return jnp.sqrt(jnp.sum(v ** 2) / n)
+            return jnp.sqrt(dv.dot(v, v, policy) / n)
 
         def gfun(z):
             return z - gamma * f_flat(t_new, z) - psi
@@ -257,7 +261,8 @@ def bdf_fixed(f: Callable, y0, t0, tf, n_steps: int, *, order: int = 2,
             return lin_solve_flat(t_new, z, gamma, rhs)
 
         z, _ = kinsol.newton_solve(gfun, Z[0], nsolve, wnorm=wnorm,
-                                   tol=1e-10, max_iters=newton_iters)
+                                   tol=1e-10, max_iters=newton_iters,
+                                   policy=policy)
         Z = jnp.roll(Z, 1, axis=0).at[0].set(z)
         return (Z,), None
 
@@ -281,7 +286,8 @@ def adams_integrate(f: Callable, y0, t0, tf,
     from .arkode import _initial_h
     h0 = jnp.where(opts.h0 > 0, opts.h0,
                    _initial_h(lambda t, y: unravel(f_flat(t, ravel_pytree(y)[0])),
-                              t0, y0, tf, opts.rtol, opts.atol))
+                              t0, y0, tf, opts.rtol, opts.atol,
+                              opts.policy))
 
     class Carry(NamedTuple):
         t: jnp.ndarray
@@ -312,7 +318,7 @@ def adams_integrate(f: Callable, y0, t0, tf,
             lambda zz: gfun(zz), y_pred, m=m_aa,
             tol=opts.newton_tol_fac * opts.atol + 1e-12, max_iters=10)
         w = 1.0 / (opts.rtol * jnp.abs(c.y) + opts.atol)
-        err = jnp.sqrt(jnp.sum(((z - y_pred) * w) ** 2) / n) / 6.0
+        err = dv.wrms_norm(z - y_pred, w, opts.policy) / 6.0
         bad = ~jnp.isfinite(err) | ~fst.converged
         err = jnp.where(bad, 2.0, err)
         accept = (err <= 1.0) & ~bad

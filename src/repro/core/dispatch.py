@@ -1,0 +1,304 @@
+"""Policy-driven N_Vector op dispatch — the ExecPolicy wiring (paper §4.1).
+
+SUNDIALS lets applications swap kernel-launch policies per vector
+without touching integrator source.  This module is the analog: a
+single **op table** maps each hot vector operation to its two
+implementations —
+
+* ``'jnp'``    — the pure-jnp oracles in :mod:`repro.core.vector`
+                 (XLA fuses; the default, and the only backend XLA:CPU
+                 can lower without ``interpret``), and
+* ``'pallas'`` — the fused Pallas kernels in :mod:`repro.kernels`
+                 (one HBM pass per fused op; tile sizes come from the
+                 :class:`~repro.core.policies.ExecPolicy`).
+
+Integrators call the module-level wrappers (``linear_combination``,
+``wrms_norm``, ...) with an optional ``policy``; ``None`` or a
+``backend='jnp'`` policy falls through to :mod:`repro.core.vector`
+unchanged, so existing callers keep bit-identical behavior.
+
+The pallas boundary handles, per pytree leaf:
+
+* **flattening** — each leaf is raveled to 1-D; fused multi-operand ops
+  stack corresponding leaves into a ``(K, n)`` operand;
+* **lane padding** — tiles are lane-aligned (multiples of 128) and
+  clamped to the leaf size so a 6-element vector pads to 128, not to the
+  policy's full streaming tile; the kernels' wrappers zero-pad ragged
+  tails (zero weights/coeffs contribute nothing to reductions);
+* **dtype preservation** — outputs keep ``jnp.result_type`` of the data
+  operands (SUNDIALS realtype semantics: a float64 step-size coefficient
+  must not upcast a float32 state), matching ``vector._keep_dtype``.
+
+Reductions return the *node-local* value; :class:`MeshVector` finishes
+them with its single collective exactly as before.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Sequence
+
+import jax.numpy as jnp
+from jax import tree_util
+
+from . import vector as nv
+from .policies import ExecPolicy, XLA_FUSED
+
+Pytree = Any
+
+LANE = 128
+
+
+# ---------------------------------------------------------------------------
+# Boundary helpers (pytree <-> flat lane-padded kernel operands)
+# ---------------------------------------------------------------------------
+
+
+def _ceil_lane(n: int) -> int:
+    return max(LANE, -(-n // LANE) * LANE)
+
+
+def _stream_tile(n: int, policy: ExecPolicy) -> int:
+    """Streaming tile: the policy's block, clamped to the (lane-padded)
+    leaf so small vectors don't pad to a full GridStride tile."""
+    return max(LANE, min(policy.block_elems, _ceil_lane(n)))
+
+
+def _reduce_tile(n: int, policy: ExecPolicy) -> int:
+    return max(LANE, min(policy.reduce_tile, _ceil_lane(n)))
+
+
+def _leaves(tree: Pytree):
+    return tree_util.tree_leaves(tree)
+
+
+def _rebuild(tree: Pytree, flat_leaves):
+    treedef = tree_util.tree_structure(tree)
+    shapes = [l.shape for l in _leaves(tree)]
+    return tree_util.tree_unflatten(
+        treedef, [f.reshape(s) for f, s in zip(flat_leaves, shapes)])
+
+
+def _coeff_array(coeffs: Sequence, dtype) -> jnp.ndarray:
+    return jnp.stack([jnp.asarray(c) for c in coeffs]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pallas-backed implementations (leaf-wise over pytrees)
+# ---------------------------------------------------------------------------
+
+
+def _pl_linear_combination(coeffs, vecs, *, policy: ExecPolicy) -> Pytree:
+    from repro.kernels import ops as kops
+    assert len(coeffs) == len(vecs) and len(vecs) >= 1
+    leaf_rows = [_leaves(v) for v in vecs]          # [K][L] leaves
+    out = []
+    for leaves in zip(*leaf_rows):                  # iterate leaf positions
+        want = jnp.result_type(*leaves)
+        X = jnp.stack([l.ravel().astype(want) for l in leaves])
+        n = X.shape[1]
+        z = kops.linear_combination(
+            _coeff_array(coeffs, want), X,
+            block_elems=_stream_tile(n, policy), interpret=policy.interpret)
+        out.append(z)
+    return _rebuild(vecs[0], out)
+
+
+def _pl_linear_sum(a, x, b, y, *, policy: ExecPolicy) -> Pytree:
+    return _pl_linear_combination([a, b], [x, y], policy=policy)
+
+
+def _pl_axpy(a, x, y, *, policy: ExecPolicy) -> Pytree:
+    return _pl_linear_combination([a, 1.0], [x, y], policy=policy)
+
+
+def _pl_scale_add_multi(coeffs, x, ys, *, policy: ExecPolicy):
+    from repro.kernels import ops as kops
+    K = len(coeffs)
+    assert len(ys) == K
+    x_leaves = _leaves(x)
+    y_rows = [_leaves(y) for y in ys]
+    per_leaf = []                                   # [L] arrays of (K, n)
+    for pos, xl in enumerate(x_leaves):
+        want = jnp.result_type(xl, *(row[pos] for row in y_rows))
+        Y = jnp.stack([row[pos].ravel().astype(want) for row in y_rows])
+        n = Y.shape[1]
+        Z = kops.scale_add_multi(
+            _coeff_array(coeffs, want), xl.ravel().astype(want), Y,
+            block_elems=_stream_tile(n, policy), interpret=policy.interpret)
+        per_leaf.append(Z)
+    return [_rebuild(x, [Z[k] for Z in per_leaf]) for k in range(K)]
+
+
+def _pl_dot(x, y, *, policy: ExecPolicy):
+    from repro.kernels import ops as kops
+    lx, ly = _leaves(x), _leaves(y)
+    acc_t = jnp.result_type(*(l.dtype for l in lx + ly))
+    acc = jnp.zeros((), dtype=acc_t)
+    for xl, yl in zip(lx, ly):
+        n = xl.size
+        acc = acc + kops.dot(
+            xl.ravel().astype(acc_t), yl.ravel().astype(acc_t),
+            reduce_tile=_reduce_tile(n, policy), interpret=policy.interpret)
+    return acc
+
+
+def _pl_wrms_norm(x, w, *, policy: ExecPolicy):
+    from repro.kernels import ops as kops
+    n_total = nv.tree_size(x)
+    lx, lw = _leaves(x), _leaves(w)
+    acc_t = jnp.result_type(*(l.dtype for l in lx + lw))
+    ss = jnp.zeros((), dtype=acc_t)
+    for xl, wl in zip(lx, lw):
+        ss = ss + kops.wrms_ss(
+            xl.ravel().astype(acc_t), wl.ravel().astype(acc_t),
+            reduce_tile=_reduce_tile(xl.size, policy),
+            interpret=policy.interpret)
+    return jnp.sqrt(ss / n_total)
+
+
+def _pl_wrms_norm_mask(x, w, mask, *, policy: ExecPolicy):
+    from repro.kernels import ops as kops
+    n_total = nv.tree_size(x)
+    lx, lw, lm = _leaves(x), _leaves(w), _leaves(mask)
+    acc_t = jnp.result_type(*(l.dtype for l in lx + lw + lm))
+    ss = jnp.zeros((), dtype=acc_t)
+    for xl, wl, ml in zip(lx, lw, lm):
+        ss = ss + kops.wrms_mask_ss(
+            xl.ravel().astype(acc_t), wl.ravel().astype(acc_t),
+            ml.ravel().astype(acc_t),
+            reduce_tile=_reduce_tile(xl.size, policy),
+            interpret=policy.interpret)
+    return jnp.sqrt(ss / n_total)
+
+
+def _pl_dot_prod_multi(x, ys, *, policy: ExecPolicy):
+    from repro.kernels import ops as kops
+    K = len(ys)
+    x_leaves = _leaves(x)
+    y_rows = [_leaves(y) for y in ys]
+    acc_t = jnp.result_type(*(l.dtype for l in x_leaves),
+                            *(l.dtype for row in y_rows for l in row))
+    acc = jnp.zeros((K,), dtype=acc_t)
+    for pos, xl in enumerate(x_leaves):
+        Y = jnp.stack([row[pos].ravel().astype(acc_t) for row in y_rows])
+        acc = acc + kops.dot_prod_multi(
+            xl.ravel().astype(acc_t), Y,
+            reduce_tile=_reduce_tile(xl.size, policy),
+            interpret=policy.interpret)
+    return acc
+
+
+def _pl_wrms_ss(x, w, *, policy: ExecPolicy):
+    """Node-local raw sum((x*w)^2) — MeshVector's partial before psum."""
+    from repro.kernels import ops as kops
+    lx, lw = _leaves(x), _leaves(w)
+    acc_t = jnp.result_type(*(l.dtype for l in lx + lw))
+    ss = jnp.zeros((), dtype=acc_t)
+    for xl, wl in zip(lx, lw):
+        ss = ss + kops.wrms_ss(
+            xl.ravel().astype(acc_t), wl.ravel().astype(acc_t),
+            reduce_tile=_reduce_tile(xl.size, policy),
+            interpret=policy.interpret)
+    return ss
+
+
+def _jnp_wrms_ss(x, w, *, policy=None):
+    xw = nv.prod(x, w)
+    return nv.dot(xw, xw)
+
+
+def _ignore_policy(fn):
+    @functools.wraps(fn)
+    def wrapped(*args, policy=None):
+        return fn(*args)
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# The op table.  Every entry has a 'jnp' and (for the hot ops) a 'pallas'
+# implementation with identical signatures plus a keyword-only `policy`.
+# ---------------------------------------------------------------------------
+
+OP_TABLE = {
+    # streaming
+    "linear_sum": {"jnp": _ignore_policy(nv.linear_sum),
+                   "pallas": _pl_linear_sum},
+    "linear_combination": {"jnp": _ignore_policy(nv.linear_combination),
+                           "pallas": _pl_linear_combination},
+    "scale_add_multi": {"jnp": _ignore_policy(nv.scale_add_multi),
+                        "pallas": _pl_scale_add_multi},
+    "axpy": {"jnp": _ignore_policy(nv.axpy), "pallas": _pl_axpy},
+    # reductions
+    "dot": {"jnp": _ignore_policy(nv.dot), "pallas": _pl_dot},
+    "wrms_norm": {"jnp": _ignore_policy(nv.wrms_norm),
+                  "pallas": _pl_wrms_norm},
+    "wrms_norm_mask": {"jnp": _ignore_policy(nv.wrms_norm_mask),
+                       "pallas": _pl_wrms_norm_mask},
+    "dot_prod_multi": {"jnp": _ignore_policy(nv.dot_prod_multi),
+                       "pallas": _pl_dot_prod_multi},
+    "wrms_ss": {"jnp": _jnp_wrms_ss, "pallas": _pl_wrms_ss},
+}
+
+
+def dispatch(op: str, policy: Optional[ExecPolicy] = None):
+    """Resolve `op` to the implementation selected by `policy`.
+
+    ``None`` means :data:`~repro.core.policies.XLA_FUSED`.  Unknown
+    backends raise; ops without a pallas implementation fall back to jnp
+    (there are none today, but the table is the extension point).
+    """
+    policy = XLA_FUSED if policy is None else policy
+    impls = OP_TABLE[op]
+    if policy.backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown ExecPolicy backend: {policy.backend!r}")
+    fn = impls.get(policy.backend, impls["jnp"])
+    return functools.partial(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# Public wrappers — what the integrators call.
+# ---------------------------------------------------------------------------
+
+
+def linear_sum(a, x: Pytree, b, y: Pytree,
+               policy: Optional[ExecPolicy] = None) -> Pytree:
+    return dispatch("linear_sum", policy)(a, x, b, y)
+
+
+def linear_combination(coeffs: Sequence, vecs: Sequence[Pytree],
+                       policy: Optional[ExecPolicy] = None) -> Pytree:
+    return dispatch("linear_combination", policy)(coeffs, vecs)
+
+
+def scale_add_multi(coeffs: Sequence, x: Pytree, ys: Sequence[Pytree],
+                    policy: Optional[ExecPolicy] = None):
+    return dispatch("scale_add_multi", policy)(coeffs, x, ys)
+
+
+def axpy(a, x: Pytree, y: Pytree,
+         policy: Optional[ExecPolicy] = None) -> Pytree:
+    return dispatch("axpy", policy)(a, x, y)
+
+
+def dot(x: Pytree, y: Pytree, policy: Optional[ExecPolicy] = None):
+    return dispatch("dot", policy)(x, y)
+
+
+def wrms_norm(x: Pytree, w: Pytree, policy: Optional[ExecPolicy] = None):
+    return dispatch("wrms_norm", policy)(x, w)
+
+
+def wrms_norm_mask(x: Pytree, w: Pytree, mask: Pytree,
+                   policy: Optional[ExecPolicy] = None):
+    return dispatch("wrms_norm_mask", policy)(x, w, mask)
+
+
+def dot_prod_multi(x: Pytree, ys: Sequence[Pytree],
+                   policy: Optional[ExecPolicy] = None):
+    return dispatch("dot_prod_multi", policy)(x, ys)
+
+
+def wrms_ss(x: Pytree, w: Pytree, policy: Optional[ExecPolicy] = None):
+    """Node-local sum((x*w)^2) (no sqrt, no /N) — the partial MeshVector
+    feeds to its collective."""
+    return dispatch("wrms_ss", policy)(x, w)

@@ -18,7 +18,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.flatten_util import ravel_pytree
 
+from . import dispatch as dv
 from . import vector as nv
+from .policies import ExecPolicy, XLA_FUSED
 
 
 class NonlinStats(NamedTuple):
@@ -29,7 +31,8 @@ class NonlinStats(NamedTuple):
 
 def newton_solve(gfun: Callable, z0, lin_solve: Callable, *,
                  wnorm: Optional[Callable] = None, tol: float = 0.1,
-                 max_iters: int = 4, damping: float = 1.0):
+                 max_iters: int = 4, damping: float = 1.0,
+                 policy: ExecPolicy = XLA_FUSED):
     """Solve G(z) = 0 by Newton iteration.
 
     gfun      : z -> G(z)                    (pytree -> pytree)
@@ -41,7 +44,7 @@ def newton_solve(gfun: Callable, z0, lin_solve: Callable, *,
     """
     if wnorm is None:
         def wnorm(v):
-            return jnp.sqrt(nv.dot(v, v) / nv.tree_size(v))
+            return jnp.sqrt(dv.dot(v, v, policy) / nv.tree_size(v))
 
     def cond(c):
         z, it, delta_norm, conv, div = c
@@ -51,7 +54,7 @@ def newton_solve(gfun: Callable, z0, lin_solve: Callable, *,
         z, it, prev_norm, conv, div = c
         g = gfun(z)
         dz = lin_solve(z, nv.scale(-1.0, g))
-        z_new = nv.axpy(damping, dz, z)
+        z_new = dv.axpy(damping, dz, z, policy)
         dn = wnorm(dz)
         # CVODE-style convergence rate estimate: crate = dn/prev
         crate = jnp.where(it > 0, dn / jnp.maximum(prev_norm, 1e-30), 1.0)

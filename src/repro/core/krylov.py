@@ -23,7 +23,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.flatten_util import ravel_pytree
 
+from . import dispatch as dv
 from . import vector as nv
+from .policies import ExecPolicy, XLA_FUSED
 
 
 class SolveStats(NamedTuple):
@@ -43,7 +45,8 @@ def _identity(v):
 
 def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
           atol: float = 0.0, restart: int = 30, max_restarts: int = 10,
-          precond: Optional[Callable] = None):
+          precond: Optional[Callable] = None,
+          policy: ExecPolicy = XLA_FUSED):
     """Restarted GMRES(m).  Solves A x = b with right preconditioning:
     A M^{-1} u = b, x = M^{-1} u."""
     M = precond or _identity
@@ -51,6 +54,16 @@ def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
     n = b_flat.shape[0]
     dtype = b_flat.dtype
     m = min(restart, n)
+    # the dispatched dot is sum(x*y) (real, no conjugation — the pallas
+    # kernels are real-only); keep jnp.vdot/norm for complex systems.
+    is_complex = jnp.issubdtype(dtype, jnp.complexfloating)
+
+    def _vdot(a, c):
+        return jnp.vdot(a, c) if is_complex else dv.dot(a, c, policy)
+
+    def _norm(a):
+        return jnp.linalg.norm(a) if is_complex \
+            else jnp.sqrt(dv.dot(a, a, policy))
 
     def mv_flat(v_flat):
         out = matvec(M(unravel(v_flat)))
@@ -64,7 +77,7 @@ def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
         x, _, restarts, _ = carry
         # x lives in solution space: true residual is b - A x.
         r = b_flat - ravel_pytree(matvec(unravel(x)))[0]
-        beta = jnp.linalg.norm(r)
+        beta = _norm(r)
         # Arnoldi with MGS + Givens
         V = jnp.zeros((m + 1, n), dtype=dtype)
         V = V.at[0].set(jnp.where(beta > 0, r / jnp.where(beta > 0, beta, 1.0), r))
@@ -79,12 +92,12 @@ def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
             # modified Gram-Schmidt against all basis vectors (masked > j)
             def mgs(i, wh):
                 w, hcol = wh
-                hij = jnp.where(i <= j, jnp.vdot(V[i], w), 0.0)
+                hij = jnp.where(i <= j, _vdot(V[i], w), 0.0)
                 w = w - hij * V[i]
                 return w, hcol.at[i].set(hij)
 
             w, hcol = lax.fori_loop(0, m + 1, mgs, (w, jnp.zeros((m + 1,), dtype)))
-            hj1 = jnp.linalg.norm(w)
+            hj1 = _norm(w)
             hcol = hcol.at[j + 1].set(hj1)
             V = V.at[j + 1].set(jnp.where(hj1 > 0, w / jnp.where(hj1 > 0, hj1, 1.0), w))
 
@@ -154,36 +167,37 @@ def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
 
 
 def pcg(matvec: Callable, b, x0=None, *, tol: float = 1e-8, atol: float = 0.0,
-        maxiter: int = 200, precond: Optional[Callable] = None):
+        maxiter: int = 200, precond: Optional[Callable] = None,
+        policy: ExecPolicy = XLA_FUSED):
     """Preconditioned CG for SPD systems."""
     M = precond or _identity
     x = x0 if x0 is not None else nv.const_like(0.0, b)
-    r = nv.linear_sum(1.0, b, -1.0, matvec(x))
+    r = dv.linear_sum(1.0, b, -1.0, matvec(x), policy)
     z = M(r)
     p = z
-    rz = nv.dot(r, z)
-    bnorm = jnp.sqrt(nv.dot(b, b))
+    rz = dv.dot(r, z, policy)
+    bnorm = jnp.sqrt(dv.dot(b, b, policy))
     target = jnp.maximum(tol * bnorm, atol)
 
     def cond(c):
         x, r, z, p, rz, it = c
-        return (jnp.sqrt(nv.dot(r, r)) > target) & (it < maxiter)
+        return (jnp.sqrt(dv.dot(r, r, policy)) > target) & (it < maxiter)
 
     def body(c):
         x, r, z, p, rz, it = c
         Ap = matvec(p)
-        alpha = rz / nv.dot(p, Ap)
-        x = nv.axpy(alpha, p, x)
-        r = nv.axpy(-alpha, Ap, r)
+        alpha = rz / dv.dot(p, Ap, policy)
+        x = dv.axpy(alpha, p, x, policy)
+        r = dv.axpy(-alpha, Ap, r, policy)
         z = M(r)
-        rz_new = nv.dot(r, z)
+        rz_new = dv.dot(r, z, policy)
         beta = rz_new / rz
-        p = nv.linear_sum(1.0, z, beta, p)
+        p = dv.linear_sum(1.0, z, beta, p, policy)
         return x, r, z, p, rz_new, it + 1
 
     x, r, z, p, rz, it = lax.while_loop(cond, body, (x, r, z, p, rz,
                                                      jnp.zeros((), jnp.int32)))
-    rn = jnp.sqrt(nv.dot(r, r))
+    rn = jnp.sqrt(dv.dot(r, r, policy))
     return x, SolveStats(iters=it, res_norm=rn, converged=rn <= target)
 
 
@@ -194,44 +208,46 @@ def pcg(matvec: Callable, b, x0=None, *, tol: float = 1e-8, atol: float = 0.0,
 
 def bicgstab(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
              atol: float = 0.0, maxiter: int = 200,
-             precond: Optional[Callable] = None):
+             precond: Optional[Callable] = None,
+             policy: ExecPolicy = XLA_FUSED):
     M = precond or _identity
     x = x0 if x0 is not None else nv.const_like(0.0, b)
-    r = nv.linear_sum(1.0, b, -1.0, matvec(x))
+    r = dv.linear_sum(1.0, b, -1.0, matvec(x), policy)
     rhat = r
-    rho = nv.dot(rhat, r)
+    rho = dv.dot(rhat, r, policy)
     p = r
-    bnorm = jnp.sqrt(nv.dot(b, b))
+    bnorm = jnp.sqrt(dv.dot(b, b, policy))
     target = jnp.maximum(tol * bnorm, atol)
 
     def cond(c):
         x, r, p, rho, it, brk = c
-        return (jnp.sqrt(nv.dot(r, r)) > target) & (it < maxiter) & (~brk)
+        return (jnp.sqrt(dv.dot(r, r, policy)) > target) & (it < maxiter) & (~brk)
 
     def body(c):
         x, r, p, rho, it, brk = c
         ph = M(p)
         v = matvec(ph)
-        denom = nv.dot(rhat, v)
+        denom = dv.dot(rhat, v, policy)
         alpha = rho / jnp.where(denom != 0, denom, 1.0)
-        s = nv.axpy(-alpha, v, r)
+        s = dv.axpy(-alpha, v, r, policy)
         sh = M(s)
         t = matvec(sh)
-        tt = nv.dot(t, t)
-        omega = nv.dot(t, s) / jnp.where(tt != 0, tt, 1.0)
-        x = nv.linear_combination([1.0, alpha, omega], [x, ph, sh])
-        r = nv.axpy(-omega, t, s)
-        rho_new = nv.dot(rhat, r)
+        tt = dv.dot(t, t, policy)
+        omega = dv.dot(t, s, policy) / jnp.where(tt != 0, tt, 1.0)
+        x = dv.linear_combination([1.0, alpha, omega], [x, ph, sh], policy)
+        r = dv.axpy(-omega, t, s, policy)
+        rho_new = dv.dot(rhat, r, policy)
         beta = (rho_new / jnp.where(rho != 0, rho, 1.0)) * \
                (alpha / jnp.where(omega != 0, omega, 1.0))
-        p = nv.linear_combination([1.0, beta, -beta * omega], [r, p, v])
+        p = dv.linear_combination([1.0, beta, -beta * omega], [r, p, v],
+                                  policy)
         brk = (denom == 0) | (tt == 0)
         return x, r, p, rho_new, it + 1, brk
 
     x, r, p, rho, it, brk = lax.while_loop(
         cond, body, (x, r, p, rho, jnp.zeros((), jnp.int32),
                      jnp.zeros((), bool)))
-    rn = jnp.sqrt(nv.dot(r, r))
+    rn = jnp.sqrt(dv.dot(r, r, policy))
     return x, SolveStats(iters=it, res_norm=rn, converged=rn <= target)
 
 
@@ -242,23 +258,24 @@ def bicgstab(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
 
 def tfqmr(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
           atol: float = 0.0, maxiter: int = 200,
-          precond: Optional[Callable] = None):
+          precond: Optional[Callable] = None,
+          policy: ExecPolicy = XLA_FUSED):
     M = precond or _identity
 
     def amv(v):
         return matvec(M(v))
 
     u = x0 if x0 is not None else nv.const_like(0.0, b)
-    r0 = nv.linear_sum(1.0, b, -1.0, matvec(u))
+    r0 = dv.linear_sum(1.0, b, -1.0, matvec(u), policy)
     w = r0
     y = r0
     v = amv(y)
     d = nv.const_like(0.0, b)
-    tau = jnp.sqrt(nv.dot(r0, r0))
+    tau = jnp.sqrt(dv.dot(r0, r0, policy))
     theta = jnp.zeros(())
     eta = jnp.zeros(())
-    rho = nv.dot(r0, r0)
-    bnorm = jnp.sqrt(nv.dot(b, b))
+    rho = dv.dot(r0, r0, policy)
+    bnorm = jnp.sqrt(dv.dot(b, b, policy))
     target = jnp.maximum(tol * bnorm, atol)
 
     def cond(c):
@@ -267,32 +284,33 @@ def tfqmr(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
 
     def body(c):
         (u, w, y, v, d, tau, theta, eta, rho, it, brk) = c
-        sigma = nv.dot(r0, v)
+        sigma = dv.dot(r0, v, policy)
         alpha = rho / jnp.where(sigma != 0, sigma, 1.0)
         # two half-iterations
-        y2 = nv.axpy(-alpha, v, y)
+        y2 = dv.axpy(-alpha, v, y, policy)
 
         def half(carry, ym):
             u, w, d, tau, theta, eta = carry
-            w = nv.axpy(-alpha, amv(ym), w)
-            d = nv.linear_sum(1.0, ym, (theta ** 2) * eta / jnp.where(alpha != 0, alpha, 1.0), d)
-            theta_n = jnp.sqrt(nv.dot(w, w)) / jnp.where(tau != 0, tau, 1.0)
+            w = dv.axpy(-alpha, amv(ym), w, policy)
+            d = dv.linear_sum(1.0, ym, (theta ** 2) * eta / jnp.where(alpha != 0, alpha, 1.0), d, policy)
+            theta_n = jnp.sqrt(dv.dot(w, w, policy)) / jnp.where(tau != 0, tau, 1.0)
             cfac = 1.0 / jnp.sqrt(1.0 + theta_n ** 2)
             tau_n = tau * theta_n * cfac
             eta_n = (cfac ** 2) * alpha
-            u = nv.axpy(eta_n, d, u)
+            u = dv.axpy(eta_n, d, u, policy)
             return (u, w, d, tau_n, theta_n, eta_n)
 
         st = (u, w, d, tau, theta, eta)
         st = half(st, y)
         st = half(st, y2)
         u, w, d, tau, theta, eta = st
-        rho_new = nv.dot(r0, w)
+        rho_new = dv.dot(r0, w, policy)
         beta = rho_new / jnp.where(rho != 0, rho, 1.0)
-        y = nv.axpy(beta, y2, w)
+        y = dv.axpy(beta, y2, w, policy)
         # v = A y_new + beta (A y2 + beta v)   (Freund's transpose-free QMR)
-        v = nv.linear_sum(1.0, amv(y), beta,
-                          nv.linear_sum(1.0, amv(y2), beta, v))
+        v = dv.linear_sum(1.0, amv(y), beta,
+                          dv.linear_sum(1.0, amv(y2), beta, v, policy),
+                          policy)
         brk = (sigma == 0) | (rho == 0)
         return (u, w, y, v, d, tau, theta, eta, rho_new, it + 1, brk)
 
@@ -300,8 +318,8 @@ def tfqmr(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
           jnp.zeros((), bool))
     (u, w, y, v, d, tau, theta, eta, rho, it, brk) = lax.while_loop(cond, body, c0)
     x = M(u) if precond is not None else u
-    r = nv.linear_sum(1.0, b, -1.0, matvec(x))
-    rn = jnp.sqrt(nv.dot(r, r))
+    r = dv.linear_sum(1.0, b, -1.0, matvec(x), policy)
+    rn = jnp.sqrt(dv.dot(r, r, policy))
     return x, SolveStats(iters=it, res_norm=rn, converged=rn <= target)
 
 

@@ -7,6 +7,32 @@ On TPU the tunable quantities are (a) whether an op runs as plain jnp
 BlockSpec tile shape (the VMEM working set — the analog of grid/block
 size).  A policy object carries those choices; native data structures
 accept one and thread it through to the kernels.
+
+Backend selection
+-----------------
+The policy is consumed by :mod:`repro.core.dispatch`, whose **op table**
+routes each hot N_Vector operation to the implementation the policy
+names:
+
+====================  ==============================  =======================
+op                    'jnp' backend                   'pallas' backend
+====================  ==============================  =======================
+linear_sum            vector.linear_sum               vecops lincomb (K=2)
+linear_combination    vector.linear_combination       vecops._lincomb_kernel
+scale_add_multi       vector.scale_add_multi          vecops scale_add_multi
+axpy                  vector.axpy                     vecops lincomb (K=2)
+dot                   vector.dot                      vecops dot_partial
+wrms_norm             vector.wrms_norm                vecops wrms_partial
+wrms_norm_mask        vector.wrms_norm_mask           vecops wrms_mask_partial
+dot_prod_multi        vector.dot_prod_multi           vecops multi_dot_partial
+====================  ==============================  =======================
+
+Integrators thread the policy via ``ODEOptions(policy=...)``; Krylov and
+Newton solvers take a ``policy=`` kwarg; :class:`MeshVectorSpec` carries
+one per vector.  ``backend='jnp'`` (XLA_FUSED, the default) reproduces
+the pre-dispatch behavior exactly; ``backend='pallas'`` with
+``interpret=True`` runs the fused kernels CPU-emulated (CI parity
+checks), with ``interpret=False`` compiled to Mosaic on TPU.
 """
 from __future__ import annotations
 

@@ -39,6 +39,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax, tree_util
 
+from .policies import ExecPolicy, XLA_FUSED
+
 Pytree = Any
 
 # ---------------------------------------------------------------------------
@@ -166,7 +168,8 @@ def dot(x: Pytree, y: Pytree):
     """
     leaves_x = tree_util.tree_leaves(x)
     leaves_y = tree_util.tree_leaves(y)
-    acc = jnp.zeros((), dtype=jnp.result_type(*(l.dtype for l in leaves_x)))
+    acc = jnp.zeros((), dtype=jnp.result_type(
+        *(l.dtype for l in leaves_x), *(l.dtype for l in leaves_y)))
     for xl, yl in zip(leaves_x, leaves_y):
         acc = acc + jnp.sum(xl * yl)
     return acc
@@ -191,7 +194,8 @@ def l1_norm(x: Pytree):
 def wrms_norm(x: Pytree, w: Pytree):
     """sqrt( (1/N) sum (x_i w_i)^2 )   (N_VWrmsNorm) — THE integrator norm."""
     n = tree_size(x)
-    ss = dot(prod(x, w), prod(x, w))
+    xw = prod(x, w)
+    ss = dot(xw, xw)
     return jnp.sqrt(ss / n)
 
 
@@ -270,10 +274,16 @@ class MeshVectorSpec:
     ``mode`` selects 'gspmd' (rely on jit+NamedSharding to insert the
     collectives) or 'explicit' (ops must run inside shard_map and issue
     lax collectives themselves — the literal MPIPlusX structure).
+
+    ``policy`` selects the node-local op backend (jnp vs fused Pallas
+    kernels) via :mod:`repro.core.dispatch` — the paper's per-vector
+    ExecPolicy: collectives are unchanged, only the node-local partials
+    and streaming ops swap implementation.
     """
 
     axis_names: tuple = ()
     mode: str = "gspmd"
+    policy: ExecPolicy = XLA_FUSED
 
 
 class MeshVector:
@@ -300,9 +310,15 @@ class MeshVector:
     def wrap(self, data: Pytree) -> "MeshVector":
         return MeshVector(data, self.spec)
 
+    def _dv(self):
+        # function-level import: dispatch imports this module's jnp ops
+        from . import dispatch
+        return dispatch
+
     # -- streaming ops: purely node-local ---------------------------------
     def linear_sum(self, a, b, other: "MeshVector") -> "MeshVector":
-        return self.wrap(linear_sum(a, self.data, b, other.data))
+        return self.wrap(self._dv().linear_sum(a, self.data, b, other.data,
+                                               self.spec.policy))
 
     def scale(self, c) -> "MeshVector":
         return self.wrap(scale(c, self.data))
@@ -342,7 +358,8 @@ class MeshVector:
         return partial
 
     def dot(self, other: "MeshVector"):
-        return self._finish_sum(dot(self.data, other.data))
+        return self._finish_sum(self._dv().dot(self.data, other.data,
+                                               self.spec.policy))
 
     def l1_norm(self):
         return self._finish_sum(l1_norm(self.data))
@@ -357,8 +374,8 @@ class MeshVector:
         """WRMS norm; in explicit mode the caller must pass the GLOBAL
         element count (node-local tree_size is the shard size only)."""
         n = global_size if global_size is not None else tree_size(self.data)
-        xw = prod(self.data, w.data)
-        ss = self._finish_sum(dot(xw, xw))
+        ss = self._finish_sum(self._dv().wrms_ss(self.data, w.data,
+                                                 self.spec.policy))
         return jnp.sqrt(ss / n)
 
 

@@ -19,6 +19,11 @@ from . import vecops as _vo
 LANE = 128
 
 
+def _lane_ceil(n: int) -> int:
+    """Smallest lane-aligned size >= n (tile clamp for short vectors)."""
+    return max(LANE, -(-n // LANE) * LANE)
+
+
 def _pad_to(x: jnp.ndarray, mult: int, axis: int, fill=0.0):
     n = x.shape[axis]
     pad = (-n) % mult
@@ -86,12 +91,24 @@ def linear_combination(coeffs: jnp.ndarray, X: jnp.ndarray, *,
     return z[:N]
 
 
+@functools.partial(jax.jit, static_argnames=("block_elems", "interpret"))
+def scale_add_multi(coeffs: jnp.ndarray, x: jnp.ndarray, Y: jnp.ndarray, *,
+                    block_elems: int = 8 * LANE, interpret: bool = True):
+    """Fused Z[k] = coeffs[k]*x + Y[k];  x:(N,), Y:(K,N) any N."""
+    K, N = Y.shape
+    xp, _ = _pad_to(x, block_elems, axis=0)
+    Yp, _ = _pad_to(Y, block_elems, axis=1)
+    z = _vo.scale_add_multi(coeffs, xp, Yp, block_elems=block_elems,
+                            interpret=interpret)
+    return z[:, :N]
+
+
 @functools.partial(jax.jit, static_argnames=("reduce_tile", "interpret"))
 def wrms_norm(x: jnp.ndarray, w: jnp.ndarray, *, reduce_tile: int = 64 * LANE,
               interpret: bool = True):
     """Fused WRMS norm of 1-D x with weights w (BlockReduce policy)."""
     (N,) = x.shape
-    tile = min(reduce_tile, max(LANE, 1))
+    tile = min(reduce_tile, _lane_ceil(N))
     xp, _ = _pad_to(x, tile, axis=0)
     wp, _ = _pad_to(w, tile, axis=0)   # pad weights with 0 -> no contribution
     parts = _vo.wrms_partial(xp, wp, reduce_tile=tile, interpret=interpret)
@@ -102,11 +119,65 @@ def wrms_norm(x: jnp.ndarray, w: jnp.ndarray, *, reduce_tile: int = 64 * LANE,
 def dot(x: jnp.ndarray, y: jnp.ndarray, *, reduce_tile: int = 64 * LANE,
         interpret: bool = True):
     (N,) = x.shape
-    tile = min(reduce_tile, max(LANE, 1))
+    tile = min(reduce_tile, _lane_ceil(N))
     xp, _ = _pad_to(x, tile, axis=0)
     yp, _ = _pad_to(y, tile, axis=0)
     parts = _vo.dot_partial(xp, yp, reduce_tile=tile, interpret=interpret)
     return jnp.sum(parts)
+
+
+@functools.partial(jax.jit, static_argnames=("reduce_tile", "interpret"))
+def wrms_ss(x: jnp.ndarray, w: jnp.ndarray, *, reduce_tile: int = 64 * LANE,
+            interpret: bool = True):
+    """Raw sum((x*w)^2) of 1-D x — the per-leaf partial the dispatch
+    layer accumulates across pytree leaves before the final sqrt(/N)."""
+    (N,) = x.shape
+    tile = min(reduce_tile, _lane_ceil(N))
+    xp, _ = _pad_to(x, tile, axis=0)
+    wp, _ = _pad_to(w, tile, axis=0)
+    parts = _vo.wrms_partial(xp, wp, reduce_tile=tile, interpret=interpret)
+    return jnp.sum(parts)
+
+
+@functools.partial(jax.jit, static_argnames=("reduce_tile", "interpret"))
+def wrms_mask_ss(x: jnp.ndarray, w: jnp.ndarray, m: jnp.ndarray, *,
+                 reduce_tile: int = 64 * LANE, interpret: bool = True):
+    """Raw sum((x*w*m)^2) of 1-D x (masked WRMS partial)."""
+    (N,) = x.shape
+    tile = min(reduce_tile, _lane_ceil(N))
+    xp, _ = _pad_to(x, tile, axis=0)
+    wp, _ = _pad_to(w, tile, axis=0)
+    mp, _ = _pad_to(m, tile, axis=0)
+    parts = _vo.wrms_mask_partial(xp, wp, mp, reduce_tile=tile,
+                                  interpret=interpret)
+    return jnp.sum(parts)
+
+
+@functools.partial(jax.jit, static_argnames=("reduce_tile", "interpret"))
+def wrms_norm_mask(x: jnp.ndarray, w: jnp.ndarray, m: jnp.ndarray, *,
+                   reduce_tile: int = 64 * LANE, interpret: bool = True):
+    """Masked WRMS norm of 1-D x: sqrt(sum((x*w*m)^2)/N)."""
+    (N,) = x.shape
+    tile = min(reduce_tile, _lane_ceil(N))
+    xp, _ = _pad_to(x, tile, axis=0)
+    wp, _ = _pad_to(w, tile, axis=0)   # zero weights -> no contribution
+    mp, _ = _pad_to(m, tile, axis=0)
+    parts = _vo.wrms_mask_partial(xp, wp, mp, reduce_tile=tile,
+                                  interpret=interpret)
+    return jnp.sqrt(jnp.sum(parts) / N)
+
+
+@functools.partial(jax.jit, static_argnames=("reduce_tile", "interpret"))
+def dot_prod_multi(x: jnp.ndarray, Y: jnp.ndarray, *,
+                   reduce_tile: int = 64 * LANE, interpret: bool = True):
+    """d_k = <x, Y[k]>;  x:(N,), Y:(K,N) -> (K,), single fused pass."""
+    (N,) = x.shape
+    tile = min(reduce_tile, _lane_ceil(N))
+    xp, _ = _pad_to(x, tile, axis=0)
+    Yp, _ = _pad_to(Y, tile, axis=1)
+    parts = _vo.multi_dot_partial(xp, Yp, reduce_tile=tile,
+                                  interpret=interpret)
+    return jnp.sum(parts, axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("batch_tile", "interpret"))

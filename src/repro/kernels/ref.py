@@ -26,9 +26,26 @@ def linear_combination_ref(coeffs: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("k,kn->n", coeffs, X)
 
 
+def scale_add_multi_ref(coeffs: jnp.ndarray, x: jnp.ndarray,
+                        Y: jnp.ndarray) -> jnp.ndarray:
+    """Z[k] = c_k x + Y[k];  x:(N,), Y:(K,N) -> (K,N)."""
+    return coeffs[:, None] * x[None, :] + Y
+
+
 def wrms_partial_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """sum((x*w)^2) over the whole array -> scalar."""
     return jnp.sum((x * w) ** 2)
+
+
+def wrms_mask_partial_ref(x: jnp.ndarray, w: jnp.ndarray,
+                          m: jnp.ndarray) -> jnp.ndarray:
+    """sum((x*w*m)^2) over the whole array -> scalar."""
+    return jnp.sum((x * w * m) ** 2)
+
+
+def dot_prod_multi_ref(x: jnp.ndarray, Y: jnp.ndarray) -> jnp.ndarray:
+    """d_k = <x, Y[k]>;  x:(N,), Y:(K,N) -> (K,)."""
+    return Y @ x
 
 
 def dot_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:

@@ -11,10 +11,20 @@ memory-bandwidth-bound.  Two kernels:
   the SUNDIALS "fused vector operation" realized as a single VMEM-tiled
   kernel.  Streaming op -> ThreadDirect/GridStride policy sets the tile.
 
+* :func:`scale_add_multi` — Z_k = c_k * x + Y_k for all k in one pass:
+  x is read ONCE from HBM instead of once per destination
+  (N_VScaleAddMulti, the fused op ARKODE uses to form stage RHS data).
+
 * :func:`wrms_partial` / :func:`dot_partial` — BlockReduce-policy
   reductions: each grid program reduces its tile to one partial in a
   (grid,) output; the final (tiny) sum happens in XLA.  One pass, no
   intermediate (x*w)^2 vector materialized in HBM.
+
+* :func:`wrms_mask_partial` — masked WRMS partials (N_VWrmsNormMask):
+  the mask multiply happens in-register, never in HBM.
+
+* :func:`multi_dot_partial` — d_k = <x, Y_k> partials for all k with x
+  read once (N_VDotProdMulti, the fused Gram-Schmidt reduction).
 
 Layouts are 1-D with LANE*k tiles; ops.py pads ragged tails.
 """
@@ -58,6 +68,35 @@ def linear_combination(coeffs: jnp.ndarray, X: jnp.ndarray, *,
     )(coeffs, X)
 
 
+def _scale_add_multi_kernel(c_ref, x_ref, y_ref, z_ref, *, K: int):
+    """z[k] tile = c[k] * x tile + y[k] tile.  x read once per tile."""
+    xt = x_ref[:]
+    for k in range(K):
+        z_ref[k, :] = c_ref[k] * xt + y_ref[k, :]
+
+
+def scale_add_multi(coeffs: jnp.ndarray, x: jnp.ndarray, Y: jnp.ndarray, *,
+                    block_elems: int = 8 * LANE,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Fused Z[k] = coeffs[k]*x + Y[k];  x:(N,), Y:(K,N), N % tile == 0."""
+    K, N = Y.shape
+    assert x.shape == (N,) and N % block_elems == 0, (x.shape, Y.shape)
+    grid = (N // block_elems,)
+    kernel = functools.partial(_scale_add_multi_kernel, K=K)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K,), lambda g: (0,)),
+            pl.BlockSpec((block_elems,), lambda g: (g,)),
+            pl.BlockSpec((K, block_elems), lambda g: (0, g)),
+        ],
+        out_specs=pl.BlockSpec((K, block_elems), lambda g: (0, g)),
+        out_shape=jax.ShapeDtypeStruct((K, N), Y.dtype),
+        interpret=interpret,
+    )(coeffs, x, Y)
+
+
 def _wrms_kernel(x_ref, w_ref, out_ref):
     xw = x_ref[:] * w_ref[:]
     out_ref[0] = jnp.sum(xw * xw)
@@ -83,6 +122,32 @@ def wrms_partial(x: jnp.ndarray, w: jnp.ndarray, *,
     )(x, w)
 
 
+def _wrms_mask_kernel(x_ref, w_ref, m_ref, out_ref):
+    xwm = x_ref[:] * w_ref[:] * m_ref[:]
+    out_ref[0] = jnp.sum(xwm * xwm)
+
+
+def wrms_mask_partial(x: jnp.ndarray, w: jnp.ndarray, m: jnp.ndarray, *,
+                      reduce_tile: int = 64 * LANE,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Per-tile partials of sum((x*w*m)^2) (N_VWrmsNormMask reduction)."""
+    (N,) = x.shape
+    assert N % reduce_tile == 0
+    grid = (N // reduce_tile,)
+    return pl.pallas_call(
+        _wrms_mask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((reduce_tile,), lambda g: (g,)),
+            pl.BlockSpec((reduce_tile,), lambda g: (g,)),
+            pl.BlockSpec((reduce_tile,), lambda g: (g,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda g: (g,)),
+        out_shape=jax.ShapeDtypeStruct((grid[0],), x.dtype),
+        interpret=interpret,
+    )(x, w, m)
+
+
 def _dot_kernel(x_ref, y_ref, out_ref):
     out_ref[0] = jnp.sum(x_ref[:] * y_ref[:])
 
@@ -104,3 +169,31 @@ def dot_partial(x: jnp.ndarray, y: jnp.ndarray, *,
         out_shape=jax.ShapeDtypeStruct((grid[0],), x.dtype),
         interpret=interpret,
     )(x, y)
+
+
+def _multidot_kernel(x_ref, y_ref, out_ref, *, K: int):
+    """out[k, 0] = <x tile, Y[k] tile>.  x is read once for all K dots."""
+    xt = x_ref[:]
+    for k in range(K):
+        out_ref[k, 0] = jnp.sum(xt * y_ref[k, :])
+
+
+def multi_dot_partial(x: jnp.ndarray, Y: jnp.ndarray, *,
+                      reduce_tile: int = 64 * LANE,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Per-tile partials of d_k = <x, Y[k]> -> (K, grid) (N_VDotProdMulti)."""
+    K, N = Y.shape
+    assert x.shape == (N,) and N % reduce_tile == 0
+    grid = (N // reduce_tile,)
+    kernel = functools.partial(_multidot_kernel, K=K)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((reduce_tile,), lambda g: (g,)),
+            pl.BlockSpec((K, reduce_tile), lambda g: (0, g)),
+        ],
+        out_specs=pl.BlockSpec((K, 1), lambda g: (0, g)),
+        out_shape=jax.ShapeDtypeStruct((K, grid[0]), x.dtype),
+        interpret=interpret,
+    )(x, Y)

@@ -1,0 +1,241 @@
+"""Policy-dispatch layer: jnp vs Pallas(interpret) backend parity.
+
+Every op in the dispatch table must agree between backends on flat
+arrays and on tuple/ManyVector pytrees, in float32 and float64, and the
+integrators must produce matching trajectories under either policy —
+the paper's swappable-ExecPolicy contract.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import tree_util as tu
+
+from repro.core import dispatch as dp
+from repro.core import vector as nv
+from repro.core.policies import (BLOCK_REDUCE, GRID_STRIDE, THREAD_DIRECT,
+                                 XLA_FUSED, ExecPolicy)
+
+POLICIES = {"thread_direct": THREAD_DIRECT, "grid_stride": GRID_STRIDE,
+            "block_reduce": BLOCK_REDUCE}
+
+
+def _tol(dt):
+    # f64 parity is the acceptance bar (1e-10); f32 is rounding-limited.
+    return dict(rtol=1e-10, atol=1e-10) if dt == jnp.float64 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+def _make_tree(kind, dt, seed=0):
+    k = jax.random.PRNGKey(seed)
+    if kind == "flat":
+        return jax.random.normal(k, (777,)).astype(dt)
+    if kind == "manyvector":
+        # tuple-of-subvectors (ManyVector), incl. a 2-D leaf and a ragged
+        # (non-lane-multiple) leaf
+        return nv.many_vector(
+            jax.random.normal(k, (300,)).astype(dt),
+            jax.random.normal(jax.random.PRNGKey(seed + 1),
+                              (13, 5)).astype(dt))
+    raise ValueError(kind)
+
+
+def _assert_tree_close(got, want, dt):
+    for g, w in zip(tu.tree_leaves(got), tu.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), **_tol(dt))
+
+
+@pytest.mark.parametrize("pol", POLICIES.values(), ids=POLICIES.keys())
+@pytest.mark.parametrize("kind", ["flat", "manyvector"])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.float64])
+def test_streaming_ops_backend_parity(pol, kind, dt):
+    x = _make_tree(kind, dt, 0)
+    y = _make_tree(kind, dt, 10)
+    z = _make_tree(kind, dt, 20)
+    coeffs = [0.3, -1.2, 2.5]
+
+    got = dp.linear_sum(2.0, x, -0.5, y, pol)
+    _assert_tree_close(got, nv.linear_sum(2.0, x, -0.5, y), dt)
+    assert tu.tree_leaves(got)[0].dtype == dt   # realtype preserved
+
+    _assert_tree_close(dp.linear_combination(coeffs, [x, y, z], pol),
+                       nv.linear_combination(coeffs, [x, y, z]), dt)
+    _assert_tree_close(dp.axpy(1.7, x, y, pol), nv.axpy(1.7, x, y), dt)
+
+    for g, w in zip(dp.scale_add_multi(coeffs, x, [x, y, z], pol),
+                    nv.scale_add_multi(coeffs, x, [x, y, z])):
+        _assert_tree_close(g, w, dt)
+
+
+@pytest.mark.parametrize("pol", POLICIES.values(), ids=POLICIES.keys())
+@pytest.mark.parametrize("kind", ["flat", "manyvector"])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.float64])
+def test_reduction_ops_backend_parity(pol, kind, dt):
+    x = _make_tree(kind, dt, 0)
+    y = _make_tree(kind, dt, 10)
+    w = tu.tree_map(lambda l: jnp.abs(l) + 0.1, x)
+    m = tu.tree_map(lambda l: (l > 0).astype(l.dtype), x)
+
+    np.testing.assert_allclose(float(dp.dot(x, y, pol)),
+                               float(nv.dot(x, y)), **_tol(dt))
+    np.testing.assert_allclose(float(dp.wrms_norm(x, w, pol)),
+                               float(nv.wrms_norm(x, w)), **_tol(dt))
+    np.testing.assert_allclose(float(dp.wrms_norm_mask(x, w, m, pol)),
+                               float(nv.wrms_norm_mask(x, w, m)), **_tol(dt))
+    np.testing.assert_allclose(np.asarray(dp.dot_prod_multi(x, [y, w, m],
+                                                            pol)),
+                               np.asarray(nv.dot_prod_multi(x, [y, w, m])),
+                               **_tol(dt))
+    np.testing.assert_allclose(float(dp.wrms_ss(x, w, pol)),
+                               float(dp.wrms_ss(x, w, XLA_FUSED)), **_tol(dt))
+
+
+def test_dispatch_table_and_fallbacks():
+    # jnp / None fall through to the vector-module oracles
+    x = jnp.arange(5.0)
+    np.testing.assert_allclose(np.asarray(dp.linear_sum(1.0, x, 1.0, x)),
+                               np.asarray(nv.linear_sum(1.0, x, 1.0, x)))
+    assert set(dp.OP_TABLE) >= {"linear_sum", "linear_combination",
+                                "scale_add_multi", "axpy", "dot",
+                                "wrms_norm", "wrms_norm_mask",
+                                "dot_prod_multi"}
+    for entry in dp.OP_TABLE.values():
+        assert "jnp" in entry and "pallas" in entry
+    with pytest.raises(ValueError):
+        dp.dispatch("dot", ExecPolicy(backend="cuda"))
+
+
+def test_dispatch_under_jit_and_traced_coeffs():
+    """Coefficients in the step loop are traced scalars (h*A[i][j])."""
+    x = jnp.linspace(-1, 1, 300)
+    y = jnp.cos(x)
+
+    def f(h):
+        return dp.linear_combination([1.0, h * 0.5, h * h], [x, y, x],
+                                     GRID_STRIDE)
+
+    got = jax.jit(f)(0.3)
+    want = nv.linear_combination([1.0, 0.3 * 0.5, 0.09], [x, y, x])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-10, atol=1e-10)
+
+
+def test_mesh_vector_policy_routing():
+    spec = nv.MeshVectorSpec(policy=GRID_STRIDE)
+    data = {"a": jnp.arange(4.0), "b": jnp.ones((3,))}
+    mv = nv.MeshVector(data, spec)
+    ref = nv.MeshVector(data)
+    w = mv.const(1.0)
+    wr = ref.const(1.0)
+    np.testing.assert_allclose(float(mv.dot(mv)), float(ref.dot(ref)),
+                               rtol=1e-12)
+    np.testing.assert_allclose(float(mv.wrms_norm(w)),
+                               float(ref.wrms_norm(wr)), rtol=1e-12)
+    got = mv.linear_sum(2.0, -1.0, mv).data["a"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(jnp.arange(4.0)),
+                               rtol=1e-12)
+
+
+def test_erk_trajectory_identical_across_policies():
+    """arkode.erk_integrate: XLA_FUSED vs GRID_STRIDE trajectories match
+    to 1e-10 in float64 (same steps, same result)."""
+    from repro.core import arkode, butcher
+    from repro.core.arkode import ODEOptions
+
+    def f(t, y):
+        return -y + jnp.sin(3.0 * t) * jnp.ones_like(y)
+
+    y0 = jnp.linspace(0.5, 1.5, 6)
+    base = dict(rtol=1e-8, atol=1e-10)
+    y_j, st_j = arkode.erk_integrate(f, y0, 0.0, 2.0,
+                                     butcher.DORMAND_PRINCE,
+                                     ODEOptions(**base, policy=XLA_FUSED))
+    y_p, st_p = arkode.erk_integrate(f, y0, 0.0, 2.0,
+                                     butcher.DORMAND_PRINCE,
+                                     ODEOptions(**base, policy=GRID_STRIDE))
+    assert bool(st_j.success) and bool(st_p.success)
+    assert int(st_j.steps) == int(st_p.steps)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_j),
+                               rtol=1e-10, atol=1e-10)
+
+
+def test_dirk_and_bdf_match_across_policies():
+    """Implicit paths (Newton + GMRES + WRMS) under the pallas policy."""
+    from repro.core import arkode, butcher, cvode
+    from repro.core.arkode import ODEOptions
+
+    def fi(t, y):
+        return -20.0 * (y - jnp.cos(t))
+
+    y0 = jnp.ones((4,))
+    base = dict(rtol=1e-6, atol=1e-9)
+    y_j, sj = arkode.dirk_integrate(fi, y0, 0.0, 1.0, butcher.SDIRK2,
+                                    ODEOptions(**base, policy=XLA_FUSED))
+    y_p, sp = arkode.dirk_integrate(fi, y0, 0.0, 1.0, butcher.SDIRK2,
+                                    ODEOptions(**base, policy=GRID_STRIDE))
+    assert bool(sj.success) and bool(sp.success)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_j),
+                               rtol=1e-10, atol=1e-10)
+
+    yb_j, bj = cvode.bdf_integrate(fi, y0, 0.0, 1.0, dense_jac=True,
+                                   opts=ODEOptions(**base,
+                                                   policy=XLA_FUSED))
+    yb_p, bp = cvode.bdf_integrate(fi, y0, 0.0, 1.0, dense_jac=True,
+                                   opts=ODEOptions(**base,
+                                                   policy=GRID_STRIDE))
+    assert bool(bj.success) and bool(bp.success)
+    np.testing.assert_allclose(np.asarray(yb_p), np.asarray(yb_j),
+                               rtol=1e-10, atol=1e-10)
+
+
+@pytest.mark.parametrize("solver", ["pcg", "bicgstab", "tfqmr", "gmres"])
+def test_krylov_policy_parity(solver):
+    from repro.core import krylov
+    n = 40
+    key = jax.random.PRNGKey(3)
+    A = jax.random.normal(key, (n, n))
+    A = A @ A.T + n * jnp.eye(n)          # SPD so pcg works too
+    b = jax.random.normal(jax.random.PRNGKey(4), (n,))
+
+    def matvec(v):
+        return A @ v
+
+    fn = getattr(krylov, solver)
+    x_j, st_j = fn(matvec, b, tol=1e-10, policy=XLA_FUSED)
+    x_p, st_p = fn(matvec, b, tol=1e-10, policy=GRID_STRIDE)
+    assert bool(st_j.converged) and bool(st_p.converged)
+    np.testing.assert_allclose(np.asarray(x_p), np.asarray(x_j),
+                               rtol=1e-8, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(A @ x_p), np.asarray(b),
+                               rtol=1e-7, atol=1e-7)
+
+
+def test_new_fused_kernels_match_refs():
+    """Oracle checks for the kernels added for the dispatch layer."""
+    from repro.kernels import ops, ref
+    for N in (1, 127, 128, 129, 5000):
+        x = jax.random.normal(jax.random.PRNGKey(N), (N,))
+        Y = jax.random.normal(jax.random.PRNGKey(N + 1), (4, N))
+        c = jnp.asarray([0.5, -1.0, 2.0, 0.25])
+        w = jnp.abs(jax.random.normal(jax.random.PRNGKey(N + 2), (N,))) + 0.1
+        m = (jax.random.uniform(jax.random.PRNGKey(N + 3), (N,)) > 0.5)
+        m = m.astype(x.dtype)
+        np.testing.assert_allclose(np.asarray(ops.scale_add_multi(c, x, Y)),
+                                   np.asarray(ref.scale_add_multi_ref(c, x,
+                                                                      Y)),
+                                   rtol=1e-12, atol=1e-12)
+        np.testing.assert_allclose(np.asarray(ops.dot_prod_multi(x, Y)),
+                                   np.asarray(ref.dot_prod_multi_ref(x, Y)),
+                                   rtol=1e-10, atol=1e-10)
+        np.testing.assert_allclose(
+            float(ops.wrms_norm_mask(x, w, m)),
+            float(jnp.sqrt(ref.wrms_mask_partial_ref(x, w, m) / N)),
+            rtol=1e-12, atol=1e-12)
+
+
+def test_vector_dot_result_type_includes_y():
+    """dot(f32 x, f64 y) accumulates in f64 (both operands considered)."""
+    x = jnp.ones((8,), jnp.float32)
+    y = jnp.full((8,), 1e-9, jnp.float64)
+    assert nv.dot(x, y).dtype == jnp.float64
+    assert dp.dot(x, y, GRID_STRIDE).dtype == jnp.float64
