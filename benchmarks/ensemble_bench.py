@@ -1,0 +1,114 @@
+"""Ensemble-subsystem benchmark: the jnp-vs-pallas A/B for the batched
+block-diagonal Newton pipeline (paper Fig. 5 submodel workload).
+
+Measures systems/sec for the batched block solve across ensemble sizes
+and block sizes, on both dispatch backends:
+
+* 'jnp'    — gauss_jordan_batched (XLA batched; the performance-relevant
+             backend on this CPU host);
+* 'pallas' — the SoA GJ kernel in interpret mode (CPU emulation: its
+             numbers here validate correctness and relative scaling only
+             — TPU performance is modeled in EXPERIMENTS.md from
+             BlockSpec arithmetic).
+
+``run()`` also stashes the A/B table as ``json_artifact`` so
+``benchmarks/run.py`` can emit ``BENCH_ensemble.json`` (the perf
+trajectory artifact), and times one full ``ensemble_bdf_integrate``
+call for an end-to-end row.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch as dv
+from repro.core.policies import ExecPolicy, XLA_FUSED
+
+NSYS = (512, 4096, 32768)
+BLOCKS = (3, 8, 16)
+
+# module-global artifact picked up by benchmarks/run.py after run()
+json_artifact = None
+
+
+def _newton_blocks(key, b, nsys, dtype=jnp.float64):
+    """Diagonally-dominant SoA Newton-like blocks M = I - gamma*J."""
+    J = jax.random.normal(key, (b, b, nsys), dtype)
+    return jnp.eye(b, dtype=dtype)[:, :, None] - 0.05 * J
+
+
+def _time(fn, *a, reps=5):
+    jax.block_until_ready(fn(*a))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*a)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    global json_artifact
+    rows = []
+    table = {"workload": "batched block solve (M x = r, SoA layout)",
+             "units": "systems_per_sec",
+             "note": ("pallas timings are interpret-mode CPU emulation "
+                      "(correctness/scaling A/B, not TPU perf)"),
+             "results": []}
+    key = jax.random.PRNGKey(0)
+    for b in BLOCKS:
+        for nsys in NSYS:
+            A = _newton_blocks(key, b, nsys)
+            r = jax.random.normal(jax.random.PRNGKey(1), (b, nsys),
+                                  A.dtype)
+            # one program per bundle: whole batch in a single grid step
+            pol = ExecPolicy(backend="pallas", interpret=True,
+                             batch_tile=nsys)
+            f_jnp = jax.jit(lambda A, r: dv.block_solve_soa(A, r,
+                                                            XLA_FUSED))
+            f_pal = jax.jit(lambda A, r: dv.block_solve_soa(A, r, pol))
+            t_jnp = _time(f_jnp, A, r)
+            t_pal = _time(f_pal, A, r, reps=2)
+            err = float(jnp.max(jnp.abs(f_jnp(A, r) - f_pal(A, r))))
+            table["results"].append({
+                "block_size": b, "nsys": nsys,
+                "jnp_systems_per_sec": nsys / t_jnp,
+                "pallas_interpret_systems_per_sec": nsys / t_pal,
+                "max_abs_diff": err})
+            rows.append((f"ensemble.block_solve.b{b}.n{nsys}.jnp",
+                         t_jnp * 1e6,
+                         f"sys_per_s={nsys / t_jnp:.3e},"
+                         f"pallas_us={t_pal * 1e6:.0f},err={err:.1e}"))
+    rows.append(_integrate_row())
+    json_artifact = ("BENCH_ensemble.json", table)
+    return rows
+
+
+def _integrate_row(nsys: int = 512, tf: float = 10.0):
+    """End-to-end batched-BDF kinetics row (jnp backend)."""
+    from repro.core import batched
+    from repro.core.arkode import ODEOptions
+    from repro.core.problems import batched_robertson
+
+    f, jac, y0 = batched_robertson(nsys)
+    opts = ODEOptions(rtol=1e-5, atol=1e-10, max_steps=100_000)
+    t0 = time.perf_counter()
+    y, st = batched.ensemble_bdf_integrate(f, jac, y0, 0.0, tf, opts=opts)
+    jax.block_until_ready(y)
+    wall = time.perf_counter() - t0
+    ok = bool(jnp.all(st.success))
+    return (f"ensemble.bdf_kinetics.n{nsys}", wall * 1e6,
+            f"sys_per_s={nsys / wall:.3e},converged={ok}")
+
+
+if __name__ == "__main__":
+    import json
+    jax.config.update("jax_enable_x64", True)
+    for row in run():
+        print(",".join(str(x) for x in row))
+    if json_artifact:
+        path, payload = json_artifact
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"wrote {path}")

@@ -70,6 +70,12 @@ def smoke(n: int = 4096, tol: float = 1e-5):
     w = jnp.abs(y) + 0.1
     m = (x > 0).astype(x.dtype)
     coeffs = [0.3, -1.2, 2.5]
+    # ensemble block ops: a deliberately non-multiple-of-128 batch so the
+    # gate also covers the bundle-tile padding path
+    nb, bs = 516, 3
+    Ab = jax.random.normal(jax.random.PRNGKey(3), (bs, bs, nb)) + \
+        (bs + 2.0) * jnp.eye(bs)[:, :, None]
+    rb = jax.random.normal(jax.random.PRNGKey(4), (bs, nb))
     cases = {
         "linear_sum": lambda p: dp.linear_sum(2.0, x, -0.5, y, p),
         "linear_combination": lambda p: dp.linear_combination(
@@ -81,6 +87,9 @@ def smoke(n: int = 4096, tol: float = 1e-5):
         "wrms_norm": lambda p: dp.wrms_norm(x, w, p),
         "wrms_norm_mask": lambda p: dp.wrms_norm_mask(x, w, m, p),
         "dot_prod_multi": lambda p: dp.dot_prod_multi(x, [y, z, w], p),
+        "block_solve_soa": lambda p: dp.block_solve_soa(Ab, rb, p),
+        "block_inverse_soa": lambda p: dp.block_inverse_soa(Ab, p),
+        "blockdiag_spmv_soa": lambda p: dp.blockdiag_spmv_soa(Ab, rb, p),
     }
     rows, ok = [], True
     for name, fn in cases.items():

@@ -1,12 +1,16 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (per the repo contract).
+Modules may additionally stash a ``json_artifact = (path, payload)``
+during ``run()``; the harness writes it out (e.g. ``ensemble_bench`` ->
+``BENCH_ensemble.json``, the ensemble perf-trajectory artifact).
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run vector_ops # one module
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
@@ -20,6 +24,7 @@ MODULES = [
     "brusselator_scaling",   # paper Figs. 7/8/9
     "linear_sum_bandwidth",  # paper Table 1
     "kernels_bench",         # kernel-path microbenchmarks
+    "ensemble_bench",        # paper Fig. 5 submodel A/B -> BENCH_ensemble.json
     "roofline_table",        # EXPERIMENTS §Roofline (derived from dry-run)
 ]
 
@@ -37,6 +42,12 @@ def main() -> None:
             continue
         for r in rows:
             print(",".join(str(x) for x in r), flush=True)
+        artifact = getattr(mod, "json_artifact", None)
+        if artifact:
+            path, payload = artifact
+            with open(path, "w") as fh:
+                json.dump(payload, fh, indent=2)
+            print(f"{name}.json_artifact,0,{path}", flush=True)
         print(f"{name}.total_wall_s,{time.time()-t0:.1f},-", flush=True)
 
 

@@ -178,10 +178,24 @@ class HloCost:
         lc = _LHS_C_RE.search(line)
         rc = _RHS_C_RE.search(line)
         cdims = [int(x) for x in (lc.group(1) if lc else "").split(",") if x]
-        # operand names
+        # operand names: each operand is "<type> %name" in scheduled HLO
+        # (bare "%name" in unoptimized dumps) — take the trailing token.
+        # Shape types carry their own commas (f32[8,16]), so the operand
+        # list must be split at bracket depth 0, not on every comma.
         call = clean[clean.index(" dot(") + 5:]
-        ops = call[:call.index(")")].split(",")
-        names = [o.strip().lstrip("%") for o in ops]
+        call = call[:call.index(")")]
+        ops, depth, start = [], 0, 0
+        for i, ch in enumerate(call):
+            if ch in "[{":
+                depth += 1
+            elif ch in "]}":
+                depth -= 1
+            elif ch == "," and depth == 0:
+                ops.append(call[start:i])
+                start = i + 1
+        ops.append(call[start:])
+        names = [o.strip().split()[-1].lstrip("%") for o in ops
+                 if o.strip()]
         k = None
         if names and names[0] in tab and tab[names[0]]:
             dims = tab[names[0]][0][1]

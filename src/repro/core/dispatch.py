@@ -207,6 +207,50 @@ def _jnp_wrms_ss(x, w, *, policy=None):
     return nv.dot(xw, xw)
 
 
+# ---------------------------------------------------------------------------
+# Batched block-diagonal linear algebra (the ensemble subsystem's SoA ops:
+# A is (b, b, NB) with the system batch on the lane axis).  The jnp
+# oracles are the semantic ground truth the Pallas kernels are parity-
+# tested against; the pallas implementations pad NB to the policy's
+# batch_tile (the bundle-size knob) inside repro.kernels.ops.
+# ---------------------------------------------------------------------------
+
+
+def _jnp_block_solve_soa(A, r, *, policy=None):
+    from .direct import gauss_jordan_batched
+    x = gauss_jordan_batched(jnp.transpose(A, (2, 0, 1)),
+                             jnp.transpose(r, (1, 0)))
+    return jnp.transpose(x, (1, 0))
+
+
+def _pl_block_solve_soa(A, r, *, policy: ExecPolicy):
+    from repro.kernels import ops as kops
+    return kops.block_solve_soa(A, r, batch_tile=policy.batch_tile,
+                                interpret=policy.interpret)
+
+
+def _jnp_block_inverse_soa(A, *, policy=None):
+    from repro.kernels import ref as kref
+    return kref.block_inverse_soa_ref(A)
+
+
+def _pl_block_inverse_soa(A, *, policy: ExecPolicy):
+    from repro.kernels import ops as kops
+    return kops.block_inverse_soa(A, batch_tile=policy.batch_tile,
+                                  interpret=policy.interpret)
+
+
+def _jnp_blockdiag_spmv_soa(A, x, *, policy=None):
+    from repro.kernels import ref as kref
+    return kref.blockdiag_spmv_soa_ref(A, x)
+
+
+def _pl_blockdiag_spmv_soa(A, x, *, policy: ExecPolicy):
+    from repro.kernels import ops as kops
+    return kops.blockdiag_spmv_soa(A, x, batch_tile=policy.batch_tile,
+                                   interpret=policy.interpret)
+
+
 def _ignore_policy(fn):
     @functools.wraps(fn)
     def wrapped(*args, policy=None):
@@ -237,6 +281,13 @@ OP_TABLE = {
     "dot_prod_multi": {"jnp": _ignore_policy(nv.dot_prod_multi),
                        "pallas": _pl_dot_prod_multi},
     "wrms_ss": {"jnp": _jnp_wrms_ss, "pallas": _pl_wrms_ss},
+    # batched block-diagonal (ensemble) linear algebra, SoA layout
+    "block_solve_soa": {"jnp": _jnp_block_solve_soa,
+                        "pallas": _pl_block_solve_soa},
+    "block_inverse_soa": {"jnp": _jnp_block_inverse_soa,
+                          "pallas": _pl_block_inverse_soa},
+    "blockdiag_spmv_soa": {"jnp": _jnp_blockdiag_spmv_soa,
+                           "pallas": _pl_blockdiag_spmv_soa},
 }
 
 
@@ -302,3 +353,21 @@ def wrms_ss(x: Pytree, w: Pytree, policy: Optional[ExecPolicy] = None):
     """Node-local sum((x*w)^2) (no sqrt, no /N) — the partial MeshVector
     feeds to its collective."""
     return dispatch("wrms_ss", policy)(x, w)
+
+
+def block_solve_soa(A: jnp.ndarray, r: jnp.ndarray,
+                    policy: Optional[ExecPolicy] = None) -> jnp.ndarray:
+    """Solve every block system: A:(b,b,NB), r:(b,NB) -> x:(b,NB)."""
+    return dispatch("block_solve_soa", policy)(A, r)
+
+
+def block_inverse_soa(A: jnp.ndarray,
+                      policy: Optional[ExecPolicy] = None) -> jnp.ndarray:
+    """Invert every block: A:(b,b,NB) -> A^{-1}:(b,b,NB) (lsetup)."""
+    return dispatch("block_inverse_soa", policy)(A)
+
+
+def blockdiag_spmv_soa(A: jnp.ndarray, x: jnp.ndarray,
+                       policy: Optional[ExecPolicy] = None) -> jnp.ndarray:
+    """y = blockdiag(A) @ x: A:(b,b,NB), x:(b,NB) -> (b,NB) (lsolve)."""
+    return dispatch("blockdiag_spmv_soa", policy)(A, x)

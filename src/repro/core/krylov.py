@@ -46,9 +46,17 @@ def _identity(v):
 def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
           atol: float = 0.0, restart: int = 30, max_restarts: int = 10,
           precond: Optional[Callable] = None,
-          policy: ExecPolicy = XLA_FUSED):
+          policy: ExecPolicy = XLA_FUSED, flexible: bool = False):
     """Restarted GMRES(m).  Solves A x = b with right preconditioning:
-    A M^{-1} u = b, x = M^{-1} u."""
+    A M^{-1} u = b, x = M^{-1} u.
+
+    ``flexible=True`` is true FGMRES (Saad 1993 / SUNDIALS SPFGMR): the
+    preconditioned basis vectors z_j = M^{-1} v_j are stored and the
+    correction is formed as Z y, so ``precond`` may vary from iteration
+    to iteration (an inner iterative solve, a lagged factorization, ...).
+    Plain GMRES applies M once to the assembled correction instead,
+    which is only equivalent when M is fixed for the whole solve.
+    """
     M = precond or _identity
     b_flat, unravel = ravel_pytree(b)
     n = b_flat.shape[0]
@@ -74,21 +82,28 @@ def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
     target = jnp.maximum(tol * bnorm, atol)
 
     def cycle(carry):
-        x, _, restarts, _ = carry
+        x, _, restarts, _, iters = carry
         # x lives in solution space: true residual is b - A x.
         r = b_flat - ravel_pytree(matvec(unravel(x)))[0]
         beta = _norm(r)
         # Arnoldi with MGS + Givens
         V = jnp.zeros((m + 1, n), dtype=dtype)
         V = V.at[0].set(jnp.where(beta > 0, r / jnp.where(beta > 0, beta, 1.0), r))
+        # FGMRES keeps the preconditioned basis Z[j] = M^{-1} V[j]
+        Z = jnp.zeros((m if flexible else 0, n), dtype=dtype)
         H = jnp.zeros((m + 1, m), dtype=dtype)
         cs = jnp.zeros((m,), dtype=dtype)
         sn = jnp.zeros((m,), dtype=dtype)
         g = jnp.zeros((m + 1,), dtype=dtype).at[0].set(beta)
 
         def arnoldi_step(j, st):
-            V, H, cs, sn, g, done = st
-            w = mv_flat(V[j])
+            V, Z, H, cs, sn, g, done = st
+            if flexible:
+                zj = ravel_pytree(M(unravel(V[j])))[0]
+                Z = Z.at[j].set(zj)
+                w = ravel_pytree(matvec(unravel(zj)))[0]
+            else:
+                w = mv_flat(V[j])
             # modified Gram-Schmidt against all basis vectors (masked > j)
             def mgs(i, wh):
                 w, hcol = wh
@@ -119,18 +134,24 @@ def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
             gj = g[j]
             g = g.at[j].set(c * gj).at[j + 1].set(-s * gj)
             done = done | (jnp.abs(g[j + 1]) <= target) | (hj1 == 0.0)
-            return V, H, cs, sn, g, done
+            return V, Z, H, cs, sn, g, done
 
         def arnoldi_cond_body(j, st):
-            # run step only while not done (frozen updates otherwise)
-            done = st[5]
-            new_st = arnoldi_step(j, st)
-            return jax.tree_util.tree_map(
-                lambda a, b: jnp.where(done, a, b), st, new_st)
+            # run step only while not done (frozen updates otherwise);
+            # nit counts the Arnoldi steps actually taken, so early exit
+            # (lucky breakdown / converged mid-cycle) reports the true
+            # iteration count instead of restarts * m.
+            core, nit = st[:7], st[7]
+            done = core[6]
+            new_core = arnoldi_step(j, core)
+            merged = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(done, a, b), core, new_core)
+            return merged + (nit + (~done).astype(jnp.int32),)
 
-        V, H, cs, sn, g, done = lax.fori_loop(
+        V, Z, H, cs, sn, g, done, nit = lax.fori_loop(
             0, m, arnoldi_cond_body,
-            (V, H, cs, sn, g, jnp.zeros((), bool)))
+            (V, Z, H, cs, sn, g, jnp.zeros((), bool),
+             jnp.zeros((), jnp.int32)))
 
         # back substitution on the m x m triangular system (padded cols have
         # H[j,j]=0 and g[j]=0 for inactive; guard the division)
@@ -143,21 +164,24 @@ def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
             return y.at[j].set(yj)
 
         y = lax.fori_loop(0, m, backsub, y)
-        dx_u = V[:m].T @ y
-        x_new = x + ravel_pytree(M(unravel(dx_u)))[0]
+        if flexible:
+            x_new = x + Z.T @ y
+        else:
+            dx_u = V[:m].T @ y
+            x_new = x + ravel_pytree(M(unravel(dx_u)))[0]
         res = jnp.abs(g[m])  # estimate; exact residual recomputed in cond
-        return x_new, res, restarts + 1, res <= target
+        return x_new, res, restarts + 1, res <= target, iters + nit
 
     def cond(carry):
-        x, res, restarts, conv = carry
+        x, res, restarts, conv, iters = carry
         return (~conv) & (restarts < max_restarts)
 
     x = x0_flat
     r0 = b_flat - ravel_pytree(matvec(unravel(x)))[0]
     carry = (x, jnp.linalg.norm(r0), jnp.zeros((), jnp.int32),
-             jnp.linalg.norm(r0) <= target)
-    x, res, restarts, conv = lax.while_loop(cond, cycle, carry)
-    return unravel(x), SolveStats(iters=restarts * m, res_norm=res,
+             jnp.linalg.norm(r0) <= target, jnp.zeros((), jnp.int32))
+    x, res, restarts, conv, iters = lax.while_loop(cond, cycle, carry)
+    return unravel(x), SolveStats(iters=iters, res_norm=res,
                                   converged=conv)
 
 
@@ -234,15 +258,32 @@ def bicgstab(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
         t = matvec(sh)
         tt = dv.dot(t, t, policy)
         omega = dv.dot(t, s, policy) / jnp.where(tt != 0, tt, 1.0)
-        x = dv.linear_combination([1.0, alpha, omega], [x, ph, sh], policy)
-        r = dv.axpy(-omega, t, s, policy)
-        rho_new = dv.dot(rhat, r, policy)
+        x_new = dv.linear_combination([1.0, alpha, omega], [x, ph, sh],
+                                      policy)
+        r_new = dv.axpy(-omega, t, s, policy)
+        rho_new = dv.dot(rhat, r_new, policy)
         beta = (rho_new / jnp.where(rho != 0, rho, 1.0)) * \
                (alpha / jnp.where(omega != 0, omega, 1.0))
-        p = dv.linear_combination([1.0, beta, -beta * omega], [r, p, v],
-                                  policy)
-        brk = (denom == 0) | (tt == 0)
-        return x, r, p, rho_new, it + 1, brk
+        p_new = dv.linear_combination([1.0, beta, -beta * omega],
+                                      [r_new, p, v], policy)
+        # Breakdowns must not poison the carry this iteration (the old
+        # code computed brk here but only the *next* cond saw it, so a
+        # garbage alpha/omega update was still committed):
+        #  * denom = <rhat, v> = 0: alpha is garbage -> freeze everything;
+        #  * tt = <t, t> = 0: t = A M s = 0, i.e. s = 0 in the regular
+        #    case ("lucky" breakdown after the BiCG half-step): commit
+        #    the half-update x + alpha p_hat, whose residual is s.
+        brk_denom = (denom == 0)
+        brk_tt = (~brk_denom) & (tt == 0)
+        brk = brk_denom | brk_tt
+        x_half = dv.axpy(alpha, ph, x, policy)
+        sel = lambda full, half, old: jax.tree_util.tree_map(
+            lambda fu, ha, ol: jnp.where(
+                brk_denom, ol, jnp.where(brk_tt, ha, fu)), full, half, old)
+        keep = lambda new, old: jax.tree_util.tree_map(
+            lambda a, b: jnp.where(brk, b, a), new, old)
+        return (sel(x_new, x_half, x), sel(r_new, s, r), keep(p_new, p),
+                jnp.where(brk, rho, rho_new), it + 1, brk)
 
     x, r, p, rho, it, brk = lax.while_loop(
         cond, body, (x, r, p, rho, jnp.zeros((), jnp.int32),
@@ -272,8 +313,12 @@ def tfqmr(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
     v = amv(y)
     d = nv.const_like(0.0, b)
     tau = jnp.sqrt(dv.dot(r0, r0, policy))
-    theta = jnp.zeros(())
-    eta = jnp.zeros(())
+    # carry scalars must match the input dtype: a bare zeros(()) follows
+    # the x64 default, so under jax_enable_x64 an f32 system gets an f64
+    # init while the body produces f32 — the while_loop carry dtypes
+    # mismatch and the solve fails to trace.
+    theta = jnp.zeros((), dtype=tau.dtype)
+    eta = jnp.zeros((), dtype=tau.dtype)
     rho = dv.dot(r0, r0, policy)
     bnorm = jnp.sqrt(dv.dot(b, b, policy))
     target = jnp.maximum(tol * bnorm, atol)
@@ -323,9 +368,15 @@ def tfqmr(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
     return x, SolveStats(iters=it, res_norm=rn, converged=rn <= target)
 
 
-# FGMRES: flexible GMRES — with our right-preconditioned formulation and a
-# *fixed* preconditioner per solve, gmres() already behaves flexibly; for a
-# per-iteration-varying preconditioner we expose fgmres as gmres with the
-# preconditioner applied inside the basis loop (alias for now; the solver
-# registry maps 'fgmres' here).
-fgmres = gmres
+def fgmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
+           atol: float = 0.0, restart: int = 30, max_restarts: int = 10,
+           precond: Optional[Callable] = None,
+           policy: ExecPolicy = XLA_FUSED):
+    """Flexible GMRES (SUNDIALS SPFGMR): stores the preconditioned basis
+    Z[j] = M^{-1} v_j and assembles the correction as Z y, so the
+    preconditioner may change between iterations — unlike plain
+    :func:`gmres`, which applies a (necessarily fixed) M once to the
+    assembled correction."""
+    return gmres(matvec, b, x0, tol=tol, atol=atol, restart=restart,
+                 max_restarts=max_restarts, precond=precond, policy=policy,
+                 flexible=True)

@@ -25,7 +25,15 @@ dot                   vector.dot                      vecops dot_partial
 wrms_norm             vector.wrms_norm                vecops wrms_partial
 wrms_norm_mask        vector.wrms_norm_mask           vecops wrms_mask_partial
 dot_prod_multi        vector.dot_prod_multi           vecops multi_dot_partial
+block_solve_soa       direct.gauss_jordan_batched     block_solve GJ kernel
+block_inverse_soa     ref.block_inverse_soa_ref       block_solve GJ inverse
+blockdiag_spmv_soa    jnp.einsum                      blockdiag_spmv kernel
 ====================  ==============================  =======================
+
+The three ``*_soa`` entries are the ensemble (batched-BDF) linear
+algebra: the system batch rides the 128-wide lane axis and
+``batch_tile`` sets how many systems one grid program owns — the TPU
+analog of the paper's CUDA-stream bundle size.
 
 Integrators thread the policy via ``ODEOptions(policy=...)``; Krylov and
 Newton solvers take a ``policy=`` kwarg; :class:`MeshVectorSpec` carries
@@ -49,7 +57,11 @@ class ExecPolicy:
                     'pallas' — hand-written kernels from repro.kernels.
     block_elems   : streaming-kernel tile length (lane-aligned, /128).
     reduce_tile   : reduction-kernel tile length (BlockReduce analog).
-    batch_tile    : batched block-solver tile (systems per program).
+    batch_tile    : batched block-solver bundle tile (systems per grid
+                    program; kernels/ops.py takes the largest lane-
+                    multiple divisor of the lane-padded batch not above
+                    this, so any nsys — including non-multiples of 128 —
+                    pads by less than one lane of identity blocks).
     interpret     : run Pallas in interpret mode (CPU validation).
     """
 

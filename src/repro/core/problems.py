@@ -1,0 +1,46 @@
+"""Shared ensemble test problems (paper Fig. 5 submodel workload).
+
+The batched Robertson kinetics problem is the canonical driver of the
+ensemble subsystem: the example (``examples/batched_kinetics.py``), the
+benchmark (``benchmarks/ensemble_bench.py``) and the test suite all
+integrate the SAME problem, so it lives here once instead of as copies
+that could drift apart.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def batched_robertson(nsys: int):
+    """Robertson kinetics with per-cell rate constants — ``nsys``
+    independent 3-species systems whose stiffness varies cell to cell
+    (k3 spans two orders of magnitude), the "large variations in
+    stiffness" regime the paper warns about.
+
+    Returns ``(f, jac, y0)``: ``f(t, y) -> (nsys, 3)`` and
+    ``jac(t, y) -> (nsys, 3, 3)`` are vectorized over the batch with the
+    rates closed over; ``y0`` is the standard ``[1, 0, 0]`` start.
+    """
+    key = jax.random.PRNGKey(0)
+    k1 = 0.04 * jnp.ones((nsys,))
+    k2 = 1e4 * (0.5 + jax.random.uniform(key, (nsys,)))
+    k3 = 3e7 * 10.0 ** jax.random.uniform(jax.random.PRNGKey(1), (nsys,),
+                                          minval=-1.0, maxval=1.0)
+
+    def f(t, y):  # y: (nsys, 3)
+        a, b, c = y[:, 0], y[:, 1], y[:, 2]
+        r1, r2, r3 = k1 * a, k2 * b * c, k3 * b * b
+        return jnp.stack([-r1 + r2, r1 - r2 - r3, r3], axis=1)
+
+    def jac(t, y):
+        a, b, c = y[:, 0], y[:, 1], y[:, 2]
+        z = jnp.zeros_like(a)
+        return jnp.stack([
+            jnp.stack([-k1, k2 * c, k2 * b], axis=1),
+            jnp.stack([k1, -k2 * c - 2 * k3 * b, -k2 * b], axis=1),
+            jnp.stack([z, 2 * k3 * b, z], axis=1)], axis=1)
+
+    y0 = jnp.concatenate([jnp.ones((nsys, 1)), jnp.zeros((nsys, 2))],
+                         axis=1)
+    return f, jac, y0

@@ -70,6 +70,68 @@ def _gj_kernel(a_ref, r_ref, x_ref, *, b: int, scale_rows: bool):
         x_ref[i, :] = r[i]
 
 
+def _gj_inverse_kernel(a_ref, x_ref, *, b: int, scale_rows: bool):
+    """Gauss-Jordan inversion: eliminate [A | I] -> [I | A^{-1}].
+
+    a_ref: (b, b, TN) VMEM tile; x_ref: (b, b, TN) out = A^{-1} in the
+    same SoA layout.  Same unrolled shared-structure elimination as
+    :func:`_gj_kernel` with the b-column identity as the right-hand side
+    — this is the lsetup product of the batched-BDF ensemble pipeline
+    (factor once here, then every Newton iteration is one spmv).
+    """
+    A = [[a_ref[i, j, :] for j in range(b)] for i in range(b)]
+    one = jnp.ones_like(A[0][0])
+    zero = jnp.zeros_like(A[0][0])
+    R = [[one if i == j else zero for j in range(b)] for i in range(b)]
+
+    if scale_rows:
+        for i in range(b):
+            m = jnp.maximum(
+                functools.reduce(jnp.maximum,
+                                 [jnp.abs(A[i][j]) for j in range(b)]),
+                1e-30)
+            inv = 1.0 / m
+            A[i] = [A[i][j] * inv for j in range(b)]
+            R[i] = [R[i][j] * inv for j in range(b)]
+
+    for k in range(b):
+        inv_piv = 1.0 / A[k][k]
+        A[k] = [A[k][j] * inv_piv for j in range(b)]
+        R[k] = [R[k][j] * inv_piv for j in range(b)]
+        for i in range(b):
+            if i == k:
+                continue
+            fkt = A[i][k]
+            A[i] = [A[i][j] - fkt * A[k][j] for j in range(b)]
+            R[i] = [R[i][j] - fkt * R[k][j] for j in range(b)]
+
+    for i in range(b):
+        for j in range(b):
+            x_ref[i, j, :] = R[i][j]
+
+
+def block_inverse_soa(A: jnp.ndarray, *, batch_tile: int = 4 * LANE,
+                      interpret: bool = True,
+                      scale_rows: bool = True) -> jnp.ndarray:
+    """Invert every block: A:(b,b,NB) -> Ainv:(b,b,NB), NB % tile == 0
+    (ops.py pads).  VMEM per program is 2*b*b*tile words (A + R), so the
+    default tile keeps even b=16 f64 at ~2 MiB."""
+    b, b2, NB = A.shape
+    assert b == b2
+    assert NB % batch_tile == 0, (NB, batch_tile)
+    grid = (NB // batch_tile,)
+    kernel = functools.partial(_gj_inverse_kernel, b=b,
+                               scale_rows=scale_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((b, b, batch_tile), lambda g: (0, 0, g))],
+        out_specs=pl.BlockSpec((b, b, batch_tile), lambda g: (0, 0, g)),
+        out_shape=jax.ShapeDtypeStruct((b, b, NB), A.dtype),
+        interpret=interpret,
+    )(A)
+
+
 def block_solve_soa(A: jnp.ndarray, r: jnp.ndarray, *,
                     batch_tile: int = 4 * LANE, interpret: bool = True,
                     scale_rows: bool = True) -> jnp.ndarray:

@@ -34,6 +34,32 @@ def _pad_to(x: jnp.ndarray, mult: int, axis: int, fill=0.0):
     return jnp.pad(x, widths, constant_values=fill), n
 
 
+def _batch_tile(nb: int, batch_tile: int) -> int:
+    """Bundle tile for the batched block kernels: the largest
+    lane-multiple divisor of the lane-padded batch that does not exceed
+    the policy's ``batch_tile`` (systems per grid program — the TPU
+    analog of the paper's CUDA-stream bundle size).  Requiring the tile
+    to divide the padded batch bounds the padding below one lane of
+    identity blocks; a tile that merely rounds ``batch_tile`` up could
+    force the batch itself to pad up to a tile multiple (e.g. nb=516
+    with a 512 tile would eliminate 1024 blocks, ~2x the work)."""
+    lanes = _lane_ceil(nb) // LANE
+    dmax = max(1, min(batch_tile // LANE, lanes))
+    d = max(dd for dd in range(1, dmax + 1) if lanes % dd == 0)
+    return d * LANE
+
+
+def _pad_blocks_identity(Ap: jnp.ndarray, nb: int) -> jnp.ndarray:
+    """Make padding blocks (SoA batch axis 2 beyond ``nb``) identity so
+    the no-pivot elimination stays well-defined on them."""
+    if Ap.shape[2] == nb:
+        return Ap
+    b = Ap.shape[0]
+    eye = jnp.eye(b, dtype=Ap.dtype)[:, :, None]
+    padmask = (jnp.arange(Ap.shape[2]) >= nb)[None, None, :]
+    return jnp.where(padmask, eye, Ap)
+
+
 @functools.partial(jax.jit, static_argnames=("batch_tile", "interpret",
                                              "scale_rows"))
 def block_solve(A: jnp.ndarray, r: jnp.ndarray, *, batch_tile: int = 4 * LANE,
@@ -46,15 +72,12 @@ def block_solve(A: jnp.ndarray, r: jnp.ndarray, *, batch_tile: int = 4 * LANE,
     should call :func:`block_solve_soa` directly and skip the transposes.
     """
     nb, b, _ = A.shape
-    tile = min(batch_tile, max(LANE, 1))
+    tile = _batch_tile(nb, batch_tile)
     Asoa = jnp.transpose(A, (1, 2, 0))          # (b, b, nb)
     rsoa = jnp.transpose(r, (1, 0))             # (b, nb)
     Ap, _ = _pad_to(Asoa, tile, axis=2)
     # make padded blocks identity to keep the elimination well-defined
-    if Ap.shape[2] != nb:
-        eye = jnp.eye(b, dtype=A.dtype)[:, :, None]
-        padmask = (jnp.arange(Ap.shape[2]) >= nb)[None, None, :]
-        Ap = jnp.where(padmask, eye, Ap)
+    Ap = _pad_blocks_identity(Ap, nb)
     rp, _ = _pad_to(rsoa, tile, axis=1)
     x = _bs.block_solve_soa(Ap, rp, batch_tile=tile, interpret=interpret,
                             scale_rows=scale_rows)
@@ -68,16 +91,31 @@ def block_solve_soa(A: jnp.ndarray, r: jnp.ndarray, *,
                     scale_rows: bool = True):
     """SoA API (lane-major batch): A:(b,b,NB), r:(b,NB) -> x:(b,NB)."""
     b, _, nb = A.shape
-    tile = min(batch_tile, max(LANE, 1))
+    tile = _batch_tile(nb, batch_tile)
     Ap, _ = _pad_to(A, tile, axis=2)
-    if Ap.shape[2] != nb:
-        eye = jnp.eye(b, dtype=A.dtype)[:, :, None]
-        padmask = (jnp.arange(Ap.shape[2]) >= nb)[None, None, :]
-        Ap = jnp.where(padmask, eye, Ap)
+    Ap = _pad_blocks_identity(Ap, nb)
     rp, _ = _pad_to(r, tile, axis=1)
     x = _bs.block_solve_soa(Ap, rp, batch_tile=tile, interpret=interpret,
                             scale_rows=scale_rows)
     return x[:, :nb]
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "interpret",
+                                             "scale_rows"))
+def block_inverse_soa(A: jnp.ndarray, *, batch_tile: int = 4 * LANE,
+                      interpret: bool = True, scale_rows: bool = True):
+    """Per-block inverse, SoA layout: A:(b,b,NB) -> A^{-1}:(b,b,NB).
+
+    The lsetup half of the ensemble Newton pipeline: invert every Newton
+    block once, then each Newton iteration applies it with one
+    :func:`blockdiag_spmv_soa` pass (lsolve)."""
+    b, _, nb = A.shape
+    tile = _batch_tile(nb, batch_tile)
+    Ap, _ = _pad_to(A, tile, axis=2)
+    Ap = _pad_blocks_identity(Ap, nb)
+    x = _bs.block_inverse_soa(Ap, batch_tile=tile, interpret=interpret,
+                              scale_rows=scale_rows)
+    return x[:, :, :nb]
 
 
 @functools.partial(jax.jit, static_argnames=("block_elems", "interpret"))
@@ -185,10 +223,23 @@ def blockdiag_spmv(A: jnp.ndarray, x: jnp.ndarray, *,
                    batch_tile: int = 4 * LANE, interpret: bool = True):
     """AoS API: A:(nb,b,b), x:(nb,b) -> y:(nb,b)."""
     nb, b, _ = A.shape
-    tile = min(batch_tile, max(LANE, 1))
+    tile = _batch_tile(nb, batch_tile)
     Asoa = jnp.transpose(A, (1, 2, 0))
     xsoa = jnp.transpose(x, (1, 0))
     Ap, _ = _pad_to(Asoa, tile, axis=2)
     xp, _ = _pad_to(xsoa, tile, axis=1)
     y = _sp.blockdiag_spmv_soa(Ap, xp, batch_tile=tile, interpret=interpret)
     return jnp.transpose(y[:, :nb], (1, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "interpret"))
+def blockdiag_spmv_soa(A: jnp.ndarray, x: jnp.ndarray, *,
+                       batch_tile: int = 4 * LANE, interpret: bool = True):
+    """SoA API: A:(b,b,NB), x:(b,NB) -> y:(b,NB); pads NB to the bundle
+    tile (zero-padded systems produce zeros, sliced off)."""
+    b, _, nb = A.shape
+    tile = _batch_tile(nb, batch_tile)
+    Ap, _ = _pad_to(A, tile, axis=2)
+    xp, _ = _pad_to(x, tile, axis=1)
+    y = _sp.blockdiag_spmv_soa(Ap, xp, batch_tile=tile, interpret=interpret)
+    return y[:, :nb]

@@ -55,3 +55,9 @@ def dot_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
 def blockdiag_spmv_soa_ref(A: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     """y = blockdiag(A) @ x in SoA; A:(b,b,NB), x:(b,NB) -> y:(b,NB)."""
     return jnp.einsum("ijn,jn->in", A, x)
+
+
+def block_inverse_soa_ref(A: jnp.ndarray) -> jnp.ndarray:
+    """Per-block inverse in SoA; A:(b,b,NB) -> A^{-1}:(b,b,NB)."""
+    Ainv = jnp.linalg.inv(jnp.transpose(A, (2, 0, 1)))
+    return jnp.transpose(Ainv, (1, 2, 0))

@@ -22,3 +22,16 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2, pod: int = 0):
         return jax.make_mesh((pod, n_data, n_model),
                              ("pod", "data", "model"))
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_ensemble_mesh(n_devices: int = 0):
+    """1-D ('systems',) mesh for the ensemble subsystem: the batch of
+    independent ODE systems is sharded across all (or the first
+    ``n_devices``) local devices; each device advances its shard with no
+    collectives (the paper's one-integrator-per-stream bundles)."""
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    if n_devices:
+        devs = devs[:n_devices]
+    return Mesh(np.asarray(devs), ("systems",))

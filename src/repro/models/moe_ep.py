@@ -32,11 +32,7 @@ from jax.sharding import PartitionSpec as P
 from .config import ArchConfig
 from . import layers
 
-try:  # jax>=0.6 exposes shard_map at top level
-    from jax import shard_map as _shard_map_mod
-    shard_map = jax.shard_map
-except Exception:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.parallel.sharding import shard_map_compat
 
 
 def _round_up(x: int, m: int) -> int:
@@ -214,11 +210,10 @@ def moe_ep_apply(p: Dict, cfg: ArchConfig, x: jnp.ndarray, mesh, *,
         return out.reshape(Bl, Sl, d)
 
     w_spec = P(ep_axes if multi_axis else ep_axes[0], None, None)
-    fn = shard_map(
+    fn = shard_map_compat(
         body, mesh=mesh,
         in_specs=(x_spec, P(None, None), w_spec, w_spec, w_spec),
         out_specs=x_spec,
-        check_vma=False,
     )
     out = fn(x, p["router"], p["w1"], p["w3"], p["w2"])
     if "shared" in p:

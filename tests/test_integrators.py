@@ -252,3 +252,35 @@ def test_ensemble_dirk_with_pallas_backend():
         ODEOptions(rtol=1e-5, atol=1e-8))
     np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_jnp),
                                rtol=1e-10, atol=1e-12)
+
+
+def test_ensemble_dirk_honors_h0_and_counts_nni_per_system():
+    nsys, n = 5, 3
+    rates = jnp.linspace(5.0, 60.0, nsys)
+
+    def f(t, y):
+        return -rates[:, None] * (y - jnp.cos(t)[:, None])
+
+    def jac(t, y):
+        return jnp.broadcast_to(-rates[:, None, None] * jnp.eye(n),
+                                (nsys, n, n))
+
+    y0 = jnp.zeros((nsys, n))
+    # h0 seeds the first step (erk already honored it; dirk ignored it):
+    # at a loose tolerance the ramp-up from the crude default seed
+    # h = 1e-6*(tf-t0) dominates the attempt count, so a steady-state h0
+    # must save attempts
+    _, st_h0 = batched.ensemble_dirk_integrate(
+        f, jac, y0, 0.0, 2.0, butcher.SDIRK2,
+        ODEOptions(rtol=1e-2, atol=1e-4, h0=2e-2))
+    _, st_def = batched.ensemble_dirk_integrate(
+        f, jac, y0, 0.0, 2.0, butcher.SDIRK2,
+        ODEOptions(rtol=1e-2, atol=1e-4))
+    assert bool(jnp.all(st_h0.success)) and bool(jnp.all(st_def.success))
+    assert int(jnp.sum(st_def.attempts)) > int(jnp.sum(st_h0.attempts))
+    # nni is a true per-system count, not one scalar broadcast: stiffer
+    # systems take more steps, hence strictly more Newton iterations
+    nni = np.asarray(st_h0.nni)
+    assert nni.shape == (nsys,)
+    assert len(np.unique(nni)) > 1
+    assert nni[-1] > nni[0]

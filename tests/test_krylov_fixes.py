@@ -1,0 +1,79 @@
+"""Krylov satellite-bugfix tests (no hypothesis dependency — the
+property-test module test_solvers.py skips entirely when hypothesis is
+absent, so these regression tests live here): tfqmr carry dtypes, gmres
+actual iteration counts, true FGMRES, bicgstab breakdown guarding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import krylov
+
+
+def _make_system(n=24, cond=8.0, seed=0):
+    key = jax.random.PRNGKey(seed)
+    A = jax.random.normal(key, (n, n)) + cond * jnp.eye(n)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (n,))
+    return A, b
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_tfqmr_carry_dtypes(dtype):
+    """tfqmr's theta/eta carry scalars must follow the input dtype:
+    under jax_enable_x64 (on here, see conftest) an f32 system used to
+    get an f64 zeros(()) init and crash the while_loop trace."""
+    A, b = _make_system(n=16)
+    A = A.astype(dtype)
+    b = b.astype(dtype)
+    tol = 1e-10 if dtype == jnp.float64 else 1e-5
+    x, st = krylov.tfqmr(lambda v: A @ v, b, tol=tol, maxiter=300)
+    assert x.dtype == dtype
+    res = float(jnp.linalg.norm(A @ x - b))
+    assert res < (1e-7 if dtype == jnp.float64 else 1e-2)
+    assert bool(st.converged)
+
+
+def test_gmres_reports_actual_iterations():
+    """Early Arnoldi exit must be reflected in stats.iters (the old code
+    reported restarts * m even when the loop broke out at iteration j)."""
+    A, b = _make_system(n=24)
+    x, st = krylov.gmres(lambda v: A @ v, b, tol=1e-10, restart=24)
+    assert bool(st.converged)
+    # well-conditioned 24x24 system converges well before a full cycle
+    assert 0 < int(st.iters) < 24
+    # a 2x2 system cannot need more than 2 iterations even with a large
+    # restart window
+    A2 = jnp.array([[3.0, 1.0], [0.0, 2.0]])
+    b2 = jnp.array([1.0, 1.0])
+    x2, st2 = krylov.gmres(lambda v: A2 @ v, b2, tol=1e-12, restart=30)
+    assert bool(st2.converged) and int(st2.iters) <= 2
+
+
+def test_fgmres_flexible_basis():
+    """True FGMRES: the preconditioned basis is stored, the solution is
+    assembled from it, and a preconditioner sharpens convergence exactly
+    as for gmres."""
+    n = 40
+    key = jax.random.PRNGKey(0)
+    D = jnp.logspace(0, 3, n)
+    A = jnp.diag(D) + 0.01 * jax.random.normal(key, (n, n))
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    dinv = 1.0 / jnp.diag(A)
+    x, st = krylov.fgmres(lambda v: A @ v, b, tol=1e-10,
+                          precond=lambda v: dinv * v)
+    assert bool(st.converged)
+    assert float(jnp.linalg.norm(A @ x - b)) < 1e-6
+    _, st_plain = krylov.fgmres(lambda v: A @ v, b, tol=1e-10)
+    assert int(st.iters) < int(st_plain.iters)
+
+
+def test_bicgstab_lucky_breakdown_keeps_half_update():
+    """A = I: the BiCG half-step is exact, so t = A s = 0 (tt == 0).
+    The solver must commit x + alpha*p_hat (the lucky breakdown) instead
+    of freezing or committing an omega = garbage full update."""
+    n = 12
+    b = jax.random.normal(jax.random.PRNGKey(0), (n,))
+    x, st = krylov.bicgstab(lambda v: v, b, tol=1e-12)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(b), atol=1e-12)
+    assert bool(st.converged)
+    assert int(st.iters) == 1

@@ -53,11 +53,15 @@ def test_microbatch_accumulation_matches_full_batch():
                                rtol=1e-5)
     for a, b in zip(jax.tree_util.tree_leaves(s1.params),
                     jax.tree_util.tree_leaves(s2.params)):
-        # params are bf16: allow one ulp of disagreement from the two
-        # accumulation orders
+        # per-microbatch grads are bf16 before the f32 accumulation, so
+        # the two paths round near-zero gradient sums differently; Adam's
+        # bias-corrected first step is lr * g/|g| = +/-lr for any g >> eps,
+        # so a sign flip on one such element moves the param by up to
+        # 2*lr = 2e-3.  Bound per-element disagreement by that, plus bf16
+        # rounding slack.
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
-                                   rtol=3e-2, atol=1e-3)
+                                   rtol=3e-2, atol=2.5e-3)
 
 
 def test_checkpoint_restart_resumes_identically():
@@ -175,6 +179,20 @@ def test_hlocost_loop_awareness():
     res = hlocost.analyze(txt)
     want = 7 * 2 * 64 * 64 * 64
     assert abs(res["flops"] - want) / want < 0.05, res["flops"]
+
+
+def test_hlocost_nonsquare_dot_flops():
+    """Non-square dot: multi-dim shape types put commas inside the dot
+    operand list (f32[8,16] %Arg_0.1), which must not fragment the
+    operand parse — m==k on square matrices used to hide a wrong k.
+    (Lives here rather than test_ssm_and_analysis.py: that module is
+    importorskip-gated on hypothesis and never runs in tier-1.)"""
+    from repro.analysis import hlocost
+    txt = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((8, 16), jnp.float32),
+        jax.ShapeDtypeStruct((16, 4), jnp.float32)).compile().as_text()
+    res = hlocost.analyze(txt)
+    assert res["flops"] == 2 * 8 * 16 * 4
 
 
 def test_adamw_schedule():
