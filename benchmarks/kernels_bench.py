@@ -7,7 +7,11 @@ is modeled in EXPERIMENTS.md §Perf from BlockSpec arithmetic).
 
 ``--smoke`` runs the fast jnp-vs-pallas(interpret) A/B check over every
 dispatched vector op (the CI gate): both backends are invoked through
-the repro.core.dispatch table and must agree to tolerance.
+the repro.core.dispatch table and must agree to tolerance.  It also
+sweeps the unified front-end: one ``repro.core.ivp.integrate`` call per
+canonical method string under BOTH the jnp and the pallas-interpret
+policy, asserting success (so a regression in any method family or in
+the policy plumbing fails CI before the full suite runs).
 """
 from __future__ import annotations
 
@@ -105,11 +109,57 @@ def smoke(n: int = 4096, tol: float = 1e-5):
     return rows, ok
 
 
+def frontend_smoke():
+    """One `integrate` call per canonical method string, under both the
+    jnp and the pallas-interpret ExecPolicy.  Small problems, loose
+    tolerances — this gates wiring, not accuracy."""
+    import jax.numpy as jnp
+
+    from repro.core.arkode import ODEOptions
+    from repro.core.context import Context
+    from repro.core.ivp import IVP, METHOD_STRINGS, integrate
+    from repro.core.policies import GRID_STRIDE, XLA_FUSED
+
+    lam = 12.0
+    f1 = lambda t, y: -lam * (y - jnp.cos(t))
+    fe1 = lambda t, y: lam * jnp.cos(t) * jnp.ones_like(y)
+    fi1 = lambda t, y: -lam * y
+    nsys, n = 4, 3
+    rates = jnp.linspace(2.0, lam, nsys)
+    fb = lambda t, y: -rates[:, None] * (y - jnp.cos(t)[:, None])
+    jb = lambda t, y: jnp.broadcast_to(
+        -rates[:, None, None] * jnp.eye(n), (y.shape[0], n, n))
+
+    scalar = IVP(f=f1, y0=jnp.zeros((2,)))
+    imex = IVP(fe=fe1, fi=fi1, y0=jnp.zeros((2,)))
+    ens = IVP(f=fb, jac=jb, y0=jnp.zeros((nsys, n)))
+
+    rows, ok = [], True
+    for pname, pol in (("jnp", XLA_FUSED), ("pallas", GRID_STRIDE)):
+        ctx = Context(policy=pol)
+        opts = ctx.options(rtol=1e-4, atol=1e-7, max_steps=20_000)
+        for m in METHOD_STRINGS:
+            prob = imex if m.startswith("imex") else \
+                ens if m.startswith("ensemble") else scalar
+            t0 = time.perf_counter()
+            sol = integrate(prob, 0.0, 1.0, m, ctx=ctx, opts=opts)
+            us = (time.perf_counter() - t0) * 1e6
+            good = bool(sol.success) and bool(
+                jnp.all(jnp.isfinite(jnp.asarray(sol.y))))
+            ok &= good
+            rows.append((f"frontend.{pname}.{m}",
+                         "PASS" if good else "FAIL",
+                         f"nni={int(sol.nni)},ws={sol.workspace_bytes}B,"
+                         f"us={us:.0f}"))
+    return rows, ok
+
+
 if __name__ == "__main__":
     if "--smoke" in sys.argv:
         rows, ok = smoke()
-        for r in rows:
+        fr_rows, fr_ok = frontend_smoke()
+        for r in rows + fr_rows:
             print(",".join(str(x) for x in r))
-        sys.exit(0 if ok else 1)
+        sys.exit(0 if (ok and fr_ok) else 1)
     for r in run():
         print(",".join(str(x) for x in r))

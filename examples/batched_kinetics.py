@@ -10,13 +10,16 @@ Each system is a Robertson-like problem with per-cell rate constants
 (the "large variations in stiffness" the paper warns about): per-system
 adaptive steps absorb it.
 
-Two integrators share the problem setup:
+Everything goes through the unified front-end (``IVP`` + ``integrate``);
+two method strings share the problem setup:
 
-* default      — adaptive SDIRK2 ensemble (``ensemble_dirk_integrate``)
-* ``--bdf``    — the CVODE-style batched BDF (``ensemble_bdf_integrate``)
-                 with per-system order/step control and the lsetup/lsolve
-                 block-kernel pipeline (``--lin-mode direct`` solves with
-                 the GJ kernel each iteration instead of inverting once)
+* default      — ``ensemble_dirk:sdirk2`` (adaptive SDIRK2 ensemble)
+* ``--bdf``    — ``ensemble_bdf``, the CVODE-style batched BDF with
+                 per-system order/step control and a *pluggable* linear
+                 solver: ``--lin-solver setup|direct`` are the two
+                 BlockDiagGJ block-kernel configurations, ``spgmr``
+                 swaps in matrix-free Krylov without touching the
+                 integrator (the paper's SUNLinearSolver point).
 
 Run:  PYTHONPATH=src python examples/batched_kinetics.py [--cells 512]
       PYTHONPATH=src python examples/batched_kinetics.py --bdf --pallas
@@ -30,8 +33,9 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp
 
-from repro.core import batched, butcher
-from repro.core.arkode import ODEOptions
+from repro.core.context import Context
+from repro.core.ivp import IVP, integrate
+from repro.core.linsol import SPGMR, BlockDiagGJ
 from repro.core.policies import ExecPolicy, XLA_FUSED
 from repro.core.problems import batched_robertson
 
@@ -44,8 +48,11 @@ def main():
     ap.add_argument("--bdf", action="store_true",
                     help="use the batched adaptive-order BDF ensemble")
     ap.add_argument("--order", type=int, default=5)
-    ap.add_argument("--lin-mode", choices=("setup", "direct"),
-                    default="setup")
+    ap.add_argument("--lin-solver", choices=("setup", "direct", "spgmr"),
+                    default="setup",
+                    help="ensemble-BDF linear solver: factor-once block "
+                         "inverse, per-iteration block solve, or "
+                         "matrix-free Krylov")
     ap.add_argument("--batch-tile", type=int, default=512,
                     help="systems per kernel program (bundle size)")
     args = ap.parse_args()
@@ -55,22 +62,28 @@ def main():
     policy = (ExecPolicy(backend="pallas", interpret=True,
                          batch_tile=args.batch_tile) if args.pallas
               else XLA_FUSED)
-    opts = ODEOptions(rtol=1e-5, atol=1e-10, max_steps=100_000)
-    kind = (f"BDF(1-{args.order}, {args.lin_mode})" if args.bdf
-            else "SDIRK2")
+    ctx = Context(policy=policy)
+    opts = ctx.options(rtol=1e-5, atol=1e-10, max_steps=100_000)
+    lin = {"setup": BlockDiagGJ(factor_once=True),
+           "direct": BlockDiagGJ(factor_once=False),
+           "spgmr": SPGMR(tol=1e-9, restart=30, max_restarts=4)}[
+        args.lin_solver]
+    prob = IVP(f=f, jac=jac, y0=y0)
+    kind = (f"BDF(1-{args.order}, {lin.name})" if args.bdf else "SDIRK2")
     print(f"integrating {n} independent stiff kinetics systems with {kind} "
           f"(block-diagonal Jacobian: {n} blocks of 3x3) to t={args.tf}")
     t0 = time.time()
     if args.bdf:
-        y, st = batched.ensemble_bdf_integrate(
-            f, jac, y0, 0.0, args.tf, order=args.order, opts=opts,
-            policy=policy, lin_mode=args.lin_mode)
+        sol = integrate(prob, 0.0, args.tf, method="ensemble_bdf",
+                        ctx=ctx, opts=opts, order=args.order,
+                        lin_solver=lin)
     else:
-        y, st = batched.ensemble_dirk_integrate(
-            f, jac, y0, 0.0, args.tf, butcher.SDIRK2, opts, policy=policy)
+        sol = integrate(prob, 0.0, args.tf, method="ensemble_dirk:sdirk2",
+                        ctx=ctx, opts=opts)
     wall = time.time() - t0
+    y, st = sol.y, sol.stats
     steps = jax.device_get(st.steps)
-    print(f"  all converged: {bool(jnp.all(st.success))}   wall={wall:.2f}s")
+    print(f"  all converged: {bool(sol.success)}   wall={wall:.2f}s")
     print(f"  per-system adaptive steps: min={steps.min()} "
           f"median={int(jnp.median(jnp.asarray(steps)))} max={steps.max()}"
           f"   (stiffer cells take more steps)")
@@ -80,6 +93,10 @@ def main():
         print(f"  Newton iters (median): {int(jnp.median(jnp.asarray(nni)))}"
               f"   lsetups (median): {int(jnp.median(jnp.asarray(nset)))}"
               f"   (Jacobian reuse across steps)")
+        if sol.nli is not None and int(sol.nli) > 0:
+            print(f"  Krylov inner iterations: {int(sol.nli)}")
+    print(f"  solver workspace: {sol.workspace_bytes / 1024:.1f} KiB "
+          f"(history + Newton blocks)")
     mass = jnp.sum(y, axis=1)
     print(f"  mass conservation: max |1 - sum(y)| = "
           f"{float(jnp.max(jnp.abs(mass - 1.0))):.2e}")

@@ -1,7 +1,8 @@
 """Quickstart: the two faces of `repro` in one script.
 
-1. SUNDIALS-on-JAX: solve a stiff ODE with the adaptive BDF integrator
-   and a matrix-free Newton-Krylov solver.
+1. SUNDIALS-on-JAX: solve a stiff ODE through the unified front-end
+   (`IVP` + `integrate(method=...)` -> `Solution`), swapping integration
+   method and linear solver without touching the problem.
 2. LM framework: train a small transformer for a few steps with AdamW,
    then with the gradient-flow (ODE) optimizer — the same integrator
    driving a parameter pytree.
@@ -12,8 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.core import arkode, butcher, cvode
-from repro.core.arkode import ODEOptions
+from repro.core.context import Context
+from repro.core.ivp import IVP, integrate
+from repro.core.linsol import DenseGJ
 from repro.data import pipeline
 from repro.models import Model
 from repro.optim import adamw, gradflow
@@ -21,7 +23,7 @@ from repro.train import step as tstep
 
 
 def ode_demo():
-    print("=== 1. stiff ODE with adaptive BDF (CVODE analog) ===")
+    print("=== 1. stiff ODE via the unified front-end (CVODE analog) ===")
 
     def f(t, y):  # Robertson chemical kinetics
         return jnp.stack([
@@ -29,13 +31,17 @@ def ode_demo():
             0.04 * y[0] - 1e4 * y[1] * y[2] - 3e7 * y[1] ** 2,
             3e7 * y[1] ** 2])
 
-    y0 = jnp.asarray([1.0, 0.0, 0.0])
-    y, st = cvode.bdf_integrate(f, y0, 0.0, 40.0, order=5,
-                                opts=ODEOptions(rtol=1e-6, atol=1e-10),
-                                dense_jac=True)
-    print(f"  y(40) = {[float(v) for v in y]}")
-    print(f"  steps={int(st.steps)} newton_iters={int(st.nni)} "
-          f"err_fails={int(st.netf)}  mass={float(jnp.sum(y)):.9f}")
+    ctx = Context()  # ExecPolicy + MemoryHelper + run-wide counters
+    prob = IVP(f=f, y0=jnp.asarray([1.0, 0.0, 0.0]))
+    sol = integrate(prob, 0.0, 40.0, method="bdf", ctx=ctx,
+                    opts=ctx.options(rtol=1e-6, atol=1e-10),
+                    lin_solver=DenseGJ())
+    st = sol.stats
+    print(f"  y(40) = {[float(v) for v in sol.y]}")
+    print(f"  steps={int(st.steps)} newton_iters={int(sol.nni)} "
+          f"err_fails={int(st.netf)}  mass={float(jnp.sum(sol.y)):.9f}")
+    print(f"  lin_solver={sol.lin_solver}  "
+          f"workspace={sol.workspace_bytes}B")
 
 
 def lm_demo():

@@ -1,22 +1,27 @@
 """repro.core — SUNDIALS-on-TPU: the paper's contribution in JAX.
 
 Layers (mirroring the SUNDIALS class structure):
+  context    — SUNContext analog: ExecPolicy + MemoryHelper + counters
   vector     — N_Vector ops, MeshVector (MPIPlusX), ManyVector
-  memory     — SUNMemoryHelper analog
+  memory     — SUNMemoryHelper analog (workspace high-water audit)
   policies   — ExecPolicy analogs (jnp vs Pallas, tile shapes)
   butcher    — ERK/DIRK/IMEX Butcher tables
   controller — step-size controllers
+  linsol     — SUNLinearSolver objects (SPGMR/.../DenseGJ/BlockDiagGJ)
+  nonlinsol  — SUNNonlinearSolver objects (Newton, Anderson fixed-point)
   arkode     — adaptive ERK / DIRK / IMEX-ARK integrators
   cvode      — adaptive BDF + functional Adams
-  kinsol     — Newton + Anderson fixed-point
+  kinsol     — Newton + Anderson fixed-point kernels
   krylov     — GMRES/FGMRES/BiCGStab/TFQMR/PCG (matrix-free)
   matrix     — dense + low-storage block-diagonal matrices
   direct     — batched block-diagonal direct solver
   batched    — vmap'd ensemble integration (submodel use case)
+  ivp        — unified front-end: IVP + integrate(method=...) -> Solution
 """
-from . import (arkode, batched, butcher, controller, cvode, direct, events,
-               kinsol, krylov, matrix, memory, policies, vector)
+from . import (arkode, batched, butcher, context, controller, cvode, direct,
+               events, ivp, kinsol, krylov, linsol, matrix, memory,
+               nonlinsol, policies, vector)
 
-__all__ = ["arkode", "batched", "butcher", "controller", "cvode", "direct",
-           "events", "kinsol", "krylov", "matrix", "memory", "policies",
-           "vector"]
+__all__ = ["arkode", "batched", "butcher", "context", "controller", "cvode",
+           "direct", "events", "ivp", "kinsol", "krylov", "linsol",
+           "matrix", "memory", "nonlinsol", "policies", "vector"]

@@ -26,9 +26,9 @@ from jax import lax
 
 from . import controller as ctrl
 from . import dispatch as dv
-from . import kinsol
 from . import vector as nv
 from .butcher import ButcherTable, IMEXTable
+from .nonlinsol import NewtonSolver
 from .policies import ExecPolicy, XLA_FUSED
 
 Pytree = Any
@@ -111,8 +111,12 @@ def _erk_step(f, t, y, h, table: ButcherTable,
 
 
 def erk_integrate(f: Callable, y0: Pytree, t0, tf,
-                  table: ButcherTable, opts: ODEOptions = ODEOptions()):
+                  table: ButcherTable, opts: ODEOptions = ODEOptions(),
+                  mem=None):
     """Adaptive explicit RK from t0 to tf. Returns (y(tf), stats)."""
+    if mem is not None:
+        mem.register("erk.stages", (table.stages, nv.tree_size(y0)),
+                     jnp.result_type(*jax.tree_util.tree_leaves(y0)))
     t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
     tf = jnp.asarray(tf, dtype=t0.dtype)
     h0 = jnp.where(opts.h0 > 0, opts.h0,
@@ -190,44 +194,34 @@ def erk_fixed(f: Callable, y0: Pytree, t0, tf, n_steps: int,
 
 
 def default_lin_solver(fi: Callable, policy: ExecPolicy = XLA_FUSED):
-    """Matrix-free Newton linear solver: solves (I - gamma*J_fi) dz = rhs
-    with GMRES, J_fi v computed by jvp.  This is the SPGMR default of
-    ARKODE; swap in a batched block direct solver via ``lin_solver=``."""
-    from . import krylov
-
-    def solve(t, z, gamma, rhs):
-        def matvec(v):
-            _, jv = jax.jvp(lambda zz: fi(t, zz), (z,), (v,))
-            return dv.linear_sum(1.0, v, -gamma, jv, policy)
-
-        dz, _ = krylov.gmres(matvec, rhs, tol=1e-4, restart=20,
-                             max_restarts=2, policy=policy)
-        return dz
-
-    return solve
+    """Matrix-free Newton linear solver (legacy helper): the bound form
+    of :class:`repro.core.linsol.SPGMR` with ARKODE's default Newton
+    setting.  Prefer passing ``lin_solver=linsol.SPGMR()`` (or any other
+    :class:`~repro.core.linsol.LinearSolver`) to the integrators."""
+    from .linsol import SPGMR
+    return SPGMR().bind(fi, policy=policy)
 
 
 def dense_lin_solver(fi: Callable):
-    """Direct dense Newton solver via jacfwd (small systems)."""
-    from jax.flatten_util import ravel_pytree
-
-    def solve(t, z, gamma, rhs):
-        z_flat, unravel = ravel_pytree(z)
-        rhs_flat, _ = ravel_pytree(rhs)
-
-        def f_flat(zf):
-            return ravel_pytree(fi(t, unravel(zf)))[0]
-
-        J = jax.jacfwd(f_flat)(z_flat)
-        M = jnp.eye(J.shape[0], dtype=J.dtype) - gamma * J
-        return unravel(jnp.linalg.solve(M, rhs_flat))
-
-    return solve
+    """Direct dense Newton solver via jacfwd (legacy helper): the bound
+    form of :class:`repro.core.linsol.DenseGJ`."""
+    from .linsol import DenseGJ
+    return DenseGJ().bind(fi)
 
 
-def _implicit_stage(fi, t_i, r, h_aii, z0, lin_solve, wnorm, opts):
+def _bind_lin_solver(lin_solver, fi, opts, mem=None):
+    """Normalize lin_solver (LinearSolver object | legacy callable | None)
+    to the internal ``(t, z, gamma, rhs) -> dz`` callable."""
+    from .linsol import SPGMR, as_lin_solve
+    return as_lin_solve(lin_solver, fi, policy=opts.policy, mem=mem,
+                        default=SPGMR())
+
+
+def _implicit_stage(fi, t_i, r, h_aii, z0, lin_solve, wnorm, opts,
+                    nls: Optional[NewtonSolver] = None):
     """Solve z = r + h*aii*fi(t_i, z) by Newton; returns (z, iters, ok)."""
     gamma = h_aii
+    nls = nls or NewtonSolver.from_options(opts)
 
     def gfun(z):
         return dv.linear_combination([1.0, -gamma, -1.0],
@@ -236,10 +230,8 @@ def _implicit_stage(fi, t_i, r, h_aii, z0, lin_solve, wnorm, opts):
     def nlin_solve(z, rhs):
         return lin_solve(t_i, z, gamma, rhs)
 
-    z, st = kinsol.newton_solve(gfun, z0, nlin_solve, wnorm=wnorm,
-                                tol=opts.newton_tol_fac,
-                                max_iters=opts.newton_max,
-                                policy=opts.policy)
+    z, st = nls.solve(gfun, z0, nlin_solve, wnorm=wnorm,
+                      policy=opts.policy)
     return z, st.iters, st.converged
 
 
@@ -248,7 +240,8 @@ def _implicit_stage(fi, t_i, r, h_aii, z0, lin_solve, wnorm, opts):
 # ----------------------------------------------------------------------------
 
 
-def _ark_step(fe, fi, t, y, h, tab: IMEXTable, lin_solve, wnorm, opts):
+def _ark_step(fe, fi, t, y, h, tab: IMEXTable, lin_solve, wnorm, opts,
+              nls: Optional[NewtonSolver] = None):
     """One additive RK step. Returns (y_new, y_err, nfe, nfi, nni, ok)."""
     AE, AI = tab.expl.A, tab.impl.A
     bE, bI = tab.expl.b, tab.impl.b
@@ -270,7 +263,7 @@ def _ark_step(fe, fi, t, y, h, tab: IMEXTable, lin_solve, wnorm, opts):
             z = r
         else:
             z, it, conv = _implicit_stage(fi, t + cI[i] * h, r, h * aii,
-                                          r, lin_solve, wnorm, opts)
+                                          r, lin_solve, wnorm, opts, nls)
             nni = nni + it
             ok = ok & conv
         kE.append(fe(t + cE[i] * h, z))
@@ -290,13 +283,23 @@ def _ark_step(fe, fi, t, y, h, tab: IMEXTable, lin_solve, wnorm, opts):
 
 def imex_integrate(fe: Callable, fi: Callable, y0: Pytree, t0, tf,
                    tab: IMEXTable, opts: ODEOptions = ODEOptions(),
-                   lin_solver: Optional[Callable] = None):
+                   lin_solver: Optional[Callable] = None,
+                   nonlin_solver: Optional[NewtonSolver] = None,
+                   mem=None):
     """Adaptive IMEX-ARK: y' = fe(t,y) + fi(t,y); fe explicit, fi implicit.
 
-    ``lin_solver(t, z, gamma, rhs) -> dz`` solves (I - gamma*J_fi) dz = rhs.
-    Defaults to matrix-free GMRES with jvp.
+    ``lin_solver`` is a :class:`repro.core.linsol.LinearSolver` object
+    or a legacy callable ``(t, z, gamma, rhs) -> dz`` solving
+    (I - gamma*J_fi) dz = rhs.  Defaults to matrix-free SPGMR (jvp).
+    ``nonlin_solver`` (:class:`~repro.core.nonlinsol.NewtonSolver`)
+    defaults to the ODEOptions Newton tolerances; ``mem`` is an optional
+    :class:`~repro.core.memory.MemoryHelper` for workspace accounting.
     """
-    lin_solve = lin_solver or default_lin_solver(fi, opts.policy)
+    lin_solve = _bind_lin_solver(lin_solver, fi, opts, mem)
+    nls = nonlin_solver or NewtonSolver.from_options(opts)
+    if mem is not None:
+        mem.register("ark.stages", (2 * tab.impl.stages, nv.tree_size(y0)),
+                     jnp.result_type(*jax.tree_util.tree_leaves(y0)))
     t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
     tf = jnp.asarray(tf, dtype=t0.dtype)
 
@@ -328,7 +331,7 @@ def imex_integrate(fe: Callable, fi: Callable, y0: Pytree, t0, tf,
             return dv.wrms_norm(v, w, opts.policy)
 
         y_new, y_err, nfe, nfi, nni, nl_ok = _ark_step(
-            fe, fi, c.t, c.y, h, tab, lin_solve, wnorm, opts)
+            fe, fi, c.t, c.y, h, tab, lin_solve, wnorm, opts, nls)
         err = dv.wrms_norm(y_err, w, opts.policy)
         bad = ~jnp.isfinite(err) | ~nl_ok
         err = jnp.where(bad, 2.0, err)
@@ -365,7 +368,9 @@ def imex_integrate(fe: Callable, fi: Callable, y0: Pytree, t0, tf,
 
 def dirk_integrate(fi: Callable, y0: Pytree, t0, tf, table: ButcherTable,
                    opts: ODEOptions = ODEOptions(),
-                   lin_solver: Optional[Callable] = None):
+                   lin_solver: Optional[Callable] = None,
+                   nonlin_solver: Optional[NewtonSolver] = None,
+                   mem=None):
     """Adaptive DIRK for stiff y' = fi(t, y) (zero explicit part)."""
     def fe(t, y):
         return nv.const_like(0.0, y)
@@ -380,7 +385,8 @@ def dirk_integrate(fi: Callable, y0: Pytree, t0, tf, table: ButcherTable,
                                       emb_order=table.emb_order),
                     impl=table, order=table.order,
                     emb_order=table.emb_order)
-    return imex_integrate(fe, fi, y0, t0, tf, tab, opts, lin_solver)
+    return imex_integrate(fe, fi, y0, t0, tf, tab, opts, lin_solver,
+                          nonlin_solver=nonlin_solver, mem=mem)
 
 
 def imex_fixed(fe, fi, y0, t0, tf, n_steps: int, tab: IMEXTable,
@@ -388,7 +394,7 @@ def imex_fixed(fe, fi, y0, t0, tf, n_steps: int, tab: IMEXTable,
                opts: ODEOptions = ODEOptions(newton_max=12)):
     """Fixed-step IMEX (convergence tests).  Newton tol tightened so the
     nonlinear-solve error never pollutes the measured order."""
-    lin_solve = lin_solver or default_lin_solver(fi, opts.policy)
+    lin_solve = _bind_lin_solver(lin_solver, fi, opts)
     h = (tf - t0) / n_steps
 
     def wnorm(v):

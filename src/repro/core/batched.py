@@ -26,6 +26,7 @@ Three integrators share the masked-while_loop pattern:
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -49,6 +50,8 @@ class EnsembleStats(NamedTuple):
     success: jnp.ndarray     # (nsys,) bool
     nsetups: Optional[jnp.ndarray] = None   # (nsys,) lsetup count (BDF)
     ncfn: Optional[jnp.ndarray] = None      # (nsys,) Newton conv failures
+    nli: Optional[jnp.ndarray] = None       # (nsys,) linear (Krylov) iters,
+    # a solver-level count broadcast per system (direct solvers report 0)
 
 
 def ensemble_erk_integrate(f: Callable, y0: jnp.ndarray, t0, tf,
@@ -272,6 +275,7 @@ class _BdfCarry(NamedTuple):
     nni: jnp.ndarray
     nsetups: jnp.ndarray
     ncfn: jnp.ndarray
+    nli: jnp.ndarray          # scalar: inner linear iterations (Krylov)
     stall: jnp.ndarray
 
 
@@ -279,8 +283,10 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
                            t0, tf, *, order: int = 5,
                            opts: ODEOptions = ODEOptions(),
                            policy: ExecPolicy = XLA_FUSED,
-                           lin_mode: str = "setup",
-                           msbp: int = 20, dgmax: float = 0.3):
+                           linear_solver=None,
+                           lin_mode: Optional[str] = None,
+                           msbp: int = 20, dgmax: float = 0.3,
+                           mem=None):
     """Adaptive batched BDF (orders 1-``order``) over ``nsys`` independent
     stiff systems — the CVODE submodel pipeline, TPU-native.
 
@@ -298,24 +304,37 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
     refreshed when it is stale — on the first step, after a Newton
     convergence failure, every ``msbp`` attempts, or when gamma has
     drifted by more than ``dgmax`` since the last lsetup (CVODE's
-    ``CVLsetup`` triggers).  All linear algebra runs through the SoA
-    block-diagonal kernels dispatched by ``policy``:
+    ``CVLsetup`` triggers).
 
-    * ``lin_mode='setup'`` — lsetup inverts every block once
+    Linear algebra is a **pluggable object**: ``linear_solver`` is any
+    :class:`repro.core.linsol.LinearSolver` with an SoA batch path
+    (``soa_setup`` / ``soa_solve``), dispatched through ``policy``:
+
+    * :class:`~repro.core.linsol.BlockDiagGJ` ``(factor_once=True)`` —
+      the default: lsetup inverts every block once
       (:func:`repro.core.dispatch.block_inverse_soa`, the batched
       factor-once analog of the paper's cuSolver batchQR setup) and each
       Newton iteration is a single block-diagonal SpMV
       (:func:`repro.core.dispatch.blockdiag_spmv_soa`); gamma drift
       between lsetups is absorbed by CVODE's ``2/(1+gamrat)`` step
       scaling.
-    * ``lin_mode='direct'`` — the saved Jacobian is kept instead, M is
-      rebuilt with the current gamma each step (elementwise, free) and
-      every Newton iteration solves it with
+    * :class:`~repro.core.linsol.BlockDiagGJ` ``(factor_once=False)`` —
+      the saved Jacobian is kept instead, M is rebuilt with the current
+      gamma and every Newton iteration solves it with
       :func:`repro.core.dispatch.block_solve_soa`; the refresh logic
       then gates only Jacobian evaluations.
+    * any Krylov solver (:class:`~repro.core.linsol.SPGMR`, ...) — the
+      saved Jacobian backs a matrix-free solve of the flattened
+      block-diagonal system (one batched SpMV per inner iteration);
+      inner iterations are reported in ``stats.nli``.
 
-    Both kernels pad the system batch to the policy's ``batch_tile``
-    internally, so ``nsys`` need not be a multiple of 128.
+    ``lin_mode='setup' | 'direct'`` is the deprecated string form of the
+    two ``BlockDiagGJ`` configurations (kept as a compat shim).
+
+    The block kernels pad the system batch to the policy's
+    ``batch_tile`` internally, so ``nsys`` need not be a multiple of
+    128.  ``mem`` (a :class:`~repro.core.memory.MemoryHelper`) registers
+    the history window and saved Newton blocks for workspace accounting.
 
     Simplifications vs CVODE proper match :func:`repro.core.cvode.
     bdf_integrate`: order ramps 1 -> ``order`` but is not adaptively
@@ -323,16 +342,29 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
     fast path — the batched analytic ``jac`` is one fused elementwise
     pass, cheaper than the bookkeeping).
     """
+    from .linsol import BlockDiagGJ
+
     assert 1 <= order <= _cv.QMAX
-    assert lin_mode in ("setup", "direct")
+    if lin_mode is not None:
+        warnings.warn(
+            "repro-compat: ensemble_bdf_integrate(lin_mode=...) is "
+            "deprecated; pass linear_solver=BlockDiagGJ(factor_once="
+            f"{lin_mode == 'setup'}) (or any LinearSolver with an SoA "
+            "batch path)", DeprecationWarning, stacklevel=2)
+        assert lin_mode in ("setup", "direct")
+        if linear_solver is None:
+            linear_solver = BlockDiagGJ(factor_once=(lin_mode == "setup"))
+    ls = linear_solver if linear_solver is not None else BlockDiagGJ()
     nsys, n = y0.shape
     dtype = y0.dtype
     QMAX = _cv.QMAX
+    if mem is not None:
+        mem.register("ensemble_bdf.history", (nsys, QMAX + 1, n), dtype)
+        mem.register("ensemble_bdf.newton_blocks", (n, n, nsys), dtype)
     t0 = jnp.broadcast_to(jnp.asarray(t0, dtype), (nsys,))
     tf = jnp.broadcast_to(jnp.asarray(tf, dtype), (nsys,))
     h0 = jnp.where(opts.h0 > 0, jnp.full((nsys,), opts.h0, dtype),
                    jnp.maximum(1e-6 * (tf - t0), 1e-12))
-    eye = jnp.eye(n, dtype=dtype)
     one = jnp.ones((), dtype)
 
     def wrms(v, w):                                  # (nsys,n) -> (nsys,)
@@ -371,10 +403,7 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
         def do_setup(_):
             J = jac(t_new, y_pred)                   # (nsys, n, n)
             Jsoa = jnp.transpose(J, (1, 2, 0))       # (n, n, nsys)
-            if lin_mode == "direct":
-                return Jsoa
-            M = eye[:, :, None] - gamma[None, None, :] * Jsoa
-            return dv.block_inverse_soa(M, policy)
+            return ls.soa_setup(Jsoa, gamma, policy)
 
         MJ_new = lax.cond(jnp.any(need), do_setup, lambda _: c.MJ,
                           operand=None)
@@ -383,29 +412,21 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
         since_jac = jnp.where(need, 0, c.since_jac)
         gamrat = jnp.where(need, 1.0, gamrat)
 
-        # ---- convergence-tested modified Newton ----
-        if lin_mode == "direct":
-            M_cur = eye[:, :, None] - gamma[None, None, :] * MJ
-            corr_fac = jnp.ones_like(gamma)
-
-            def lsolve(rhs):                         # rhs: (n, nsys)
-                return dv.block_solve_soa(M_cur, rhs, policy)
-        else:
-            # stale-gamma correction (CVODE: dz *= 2/(1+gamrat))
-            corr_fac = 2.0 / (1.0 + gamrat)
-
-            def lsolve(rhs):
-                return dv.blockdiag_spmv_soa(MJ, rhs, policy)
+        # ---- convergence-tested modified Newton; the linear solve is
+        # the pluggable object's lsolve (rhs is SoA: (n, nsys)) ----
+        def lsolve(rhs):
+            return ls.soa_solve(MJ, gamma, gamrat, rhs, policy, mem=mem)
 
         def nl_cond(s):
-            z, it, dn_prev, crate, conv, div, nni_s = s
+            z, it, dn_prev, crate, conv, div, nni_s, nli_s = s
             return jnp.any(active & ~conv & ~div) & (it < opts.newton_max)
 
         def nl_body(s):
-            z, it, dn_prev, crate, conv, div, nni_s = s
+            z, it, dn_prev, crate, conv, div, nni_s, nli_s = s
             iterate = active & ~conv & ~div
             g = z - gamma[:, None] * f(t_new, z) - psi
-            dz = corr_fac[:, None] * lsolve(-g.T).T
+            dz_soa, nli_inc = lsolve(-g.T)
+            dz = dz_soa.T
             z_new = jnp.where(iterate[:, None], z + dz, z)
             dn = wrms(dz, w)
             crate_new = jnp.where(
@@ -419,12 +440,14 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
             return (z_new, it + 1,
                     jnp.where(iterate, dn, dn_prev),
                     jnp.where(iterate, crate_new, crate),
-                    conv_new, div_new, nni_s + iterate.astype(jnp.int32))
+                    conv_new, div_new, nni_s + iterate.astype(jnp.int32),
+                    nli_s + nli_inc)
 
         s0 = (y_pred, jnp.zeros((), jnp.int32), jnp.zeros((nsys,), dtype),
               jnp.ones((nsys,), dtype), ~active, jnp.zeros((nsys,), bool),
-              jnp.zeros((nsys,), jnp.int32))
-        z, _, _, _, conv, _, nni_s = lax.while_loop(nl_cond, nl_body, s0)
+              jnp.zeros((nsys,), jnp.int32), jnp.zeros((), jnp.int32))
+        z, _, _, _, conv, _, nni_s, nli_s = lax.while_loop(
+            nl_cond, nl_body, s0)
 
         # ---- local error test (LTE ~ (z - pred)/(q+1), uniform grid) ----
         err = wrms(z - y_pred, w) / (c.q.astype(dtype) + 1.0)
@@ -471,7 +494,8 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
             netf=c.netf + ((~accept) & conv & active).astype(jnp.int32),
             nni=c.nni + nni_s,
             nsetups=c.nsetups + need.astype(jnp.int32),
-            ncfn=c.ncfn + ncf.astype(jnp.int32), stall=stall)
+            ncfn=c.ncfn + ncf.astype(jnp.int32),
+            nli=c.nli + nli_s, stall=stall)
 
     zero = jnp.zeros((nsys,), jnp.int32)
     Z0 = jnp.zeros((nsys, QMAX + 1, n), dtype).at[:, 0].set(y0)
@@ -482,11 +506,12 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
         gam_saved=jnp.zeros((nsys,), dtype), since_jac=zero,
         ncf_prev=jnp.zeros((nsys,), bool), steps=zero, att=zero,
         netf=zero, nni=zero, nsetups=zero, ncfn=zero,
-        stall=jnp.zeros((nsys,), bool))
+        nli=jnp.zeros((), jnp.int32), stall=jnp.zeros((nsys,), bool))
     c = lax.while_loop(cond, body, c)
     return c.Z[:, 0], EnsembleStats(
         steps=c.steps, attempts=c.att, netf=c.netf, nni=c.nni,
-        success=c.t >= tf * (1 - 1e-10), nsetups=c.nsetups, ncfn=c.ncfn)
+        success=c.t >= tf * (1 - 1e-10), nsetups=c.nsetups, ncfn=c.ncfn,
+        nli=jnp.broadcast_to(c.nli, (nsys,)))
 
 
 def ensemble_bdf_integrate_sharded(f: Callable, jac: Callable,
@@ -552,6 +577,13 @@ def ensemble_bdf_integrate_sharded(f: Callable, jac: Callable,
                           in_specs=(spec, spec, spec, params_spec),
                           out_specs=(spec, stats_spec))
     y, st = fn(y0, t0a, tfa, params)
+    if st.nli is not None:
+        # each shard broadcast its own local Krylov total over its slice;
+        # restore the documented invariant (every entry == the GLOBAL
+        # total) by summing one representative entry per shard
+        shard = y0.shape[0] // ndev
+        st = st._replace(nli=jnp.broadcast_to(jnp.sum(st.nli[::shard]),
+                                              st.nli.shape))
     if pad:
         y = y[:nsys]
         st = jax.tree_util.tree_map(lambda s: s[:nsys], st)

@@ -116,6 +116,26 @@ SDIRK2 = ButcherTable(  # SDIRK-2-1-2 (ARKODE): 2 stages, order 2, emb 1
 # Implicit Euler (for very stiff sanity tests)
 IMPLICIT_EULER = ButcherTable(A=[[1.0]], b=[1.0], c=[1.0], order=1)
 
+# Alexander (1977) 3-stage L-stable SDIRK of order 3 ("SDIRK-3-3").
+# gamma is the root of x^3 - 3x^2 + 3x/2 - 1/6 in (0.3, 0.6); the
+# embedded order-2 weights solve sum(bh)=1, bh.c=1/2 with bh[2]=0.
+_G3 = 0.43586652150845967
+_C32 = (1.0 + _G3) / 2.0
+_B31 = -(6.0 * _G3 * _G3 - 16.0 * _G3 + 1.0) / 4.0
+_B32 = (6.0 * _G3 * _G3 - 20.0 * _G3 + 5.0) / 4.0
+_BH32 = (0.5 - _G3) / (_C32 - _G3)
+
+SDIRK33 = ButcherTable(
+    A=[[_G3, 0.0, 0.0],
+       [_C32 - _G3, _G3, 0.0],
+       [_B31, _B32, _G3]],
+    b=[_B31, _B32, _G3],
+    c=[_G3, _C32, 1.0],
+    order=3,
+    b_emb=[1.0 - _BH32, _BH32, 0.0],
+    emb_order=2,
+)
+
 # ----------------------------------------------------------------------------
 # ARK3(2)4L[2]SA — Kennedy & Carpenter (2003).  ARKODE's default 3rd-order
 # IMEX pair (4 stages, ESDIRK implicit part, stiffly accurate, L-stable).
@@ -179,6 +199,7 @@ ARS222 = IMEXTable(expl=ARS222_ERK, impl=ARS222_DIRK, order=2, emb_order=0)
 ERK_TABLES = {"euler": EULER, "heun_euler": HEUN_EULER,
               "bogacki_shampine": BOGACKI_SHAMPINE,
               "dormand_prince": DORMAND_PRINCE}
-DIRK_TABLES = {"sdirk2": SDIRK2, "implicit_euler": IMPLICIT_EULER,
+DIRK_TABLES = {"sdirk2": SDIRK2, "sdirk33": SDIRK33,
+               "implicit_euler": IMPLICIT_EULER,
                "ark324_esdirk": ARK324_ESDIRK}
 IMEX_TABLES = {"ark324": ARK324, "ars222": ARS222}

@@ -1,0 +1,81 @@
+"""SUNContext analog: one object owning the run-wide execution state.
+
+SUNDIALS v6 threads a ``SUNContext`` through every object constructor so
+that profiling, logging, and error handling have a single owner instead
+of ad-hoc globals.  Our analog bundles the three per-run singletons this
+codebase grew separately:
+
+* the :class:`~repro.core.policies.ExecPolicy` (which kernel backend and
+  tile shapes every dispatched vector/matrix op uses),
+* the :class:`~repro.core.memory.MemoryHelper` (workspace registration
+  and the high-water audit — the SUNMemoryHelper job), and
+* run-wide counters (integrations run, accepted steps, Newton
+  iterations) accumulated across :func:`repro.core.ivp.integrate` calls.
+
+A ``Context`` is cheap and mutable; create one per logical run and pass
+it to ``integrate(..., ctx=ctx)``.  Everything still works without one —
+``integrate`` creates a private throwaway context — but then the
+counters and the memory high-water mark are discarded with it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+
+from .memory import MemoryHelper
+from .policies import ExecPolicy, XLA_FUSED
+
+
+def _counter_dict():
+    return {"integrations": 0, "steps": 0, "step_attempts": 0,
+            "newton_iters": 0, "lin_iters": 0}
+
+
+@dataclass
+class Context:
+    """ExecPolicy + MemoryHelper + run-wide counters (SUNContext analog)."""
+
+    policy: ExecPolicy = XLA_FUSED
+    memory: MemoryHelper = field(default_factory=MemoryHelper)
+    counters: dict = field(default_factory=_counter_dict)
+
+    def options(self, **kw) -> Any:
+        """Build :class:`~repro.core.arkode.ODEOptions` bound to this
+        context's policy (kwargs override any field, including policy)."""
+        from .arkode import ODEOptions
+        kw.setdefault("policy", self.policy)
+        return ODEOptions(**kw)
+
+    # -- counter accumulation ------------------------------------------------
+
+    @staticmethod
+    def _concrete(x) -> Optional[int]:
+        """int(x) for concrete scalars/arrays; None for tracers."""
+        if x is None or isinstance(x, jax.core.Tracer):
+            return None
+        try:
+            import numpy as np
+            return int(np.sum(np.asarray(x)))
+        except Exception:
+            return None
+
+    def record(self, stats: Any, nli=None) -> None:
+        """Fold one integration's stats into the run-wide counters.
+
+        Works with both :class:`~repro.core.arkode.IntegratorStats`
+        (scalars) and :class:`~repro.core.batched.EnsembleStats`
+        (per-system arrays — summed).  Inside a jit trace the values are
+        tracers and accumulation is skipped (counters are host-side).
+        """
+        self.counters["integrations"] += 1
+        for key, name in (("steps", "steps"),
+                          ("step_attempts", "attempts"),
+                          ("newton_iters", "nni")):
+            v = self._concrete(getattr(stats, name, None))
+            if v is not None:
+                self.counters[key] += v
+        v = self._concrete(nli)
+        if v is not None:
+            self.counters["lin_iters"] += v

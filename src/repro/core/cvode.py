@@ -24,13 +24,14 @@ import jax.numpy as jnp
 from jax import lax
 from jax.flatten_util import ravel_pytree
 
+import warnings
+
 from . import controller as ctrl
 from . import dispatch as dv
-from . import kinsol
 from . import vector as nv
-from .policies import ExecPolicy, XLA_FUSED
-from .arkode import ODEOptions, IntegratorStats, dense_lin_solver, \
-    default_lin_solver
+from .nonlinsol import FixedPointSolver, NewtonSolver
+from .policies import ExecPolicy
+from .arkode import ODEOptions, IntegratorStats, _bind_lin_solver
 
 QMAX = 5
 
@@ -89,17 +90,28 @@ def _lagrange_matrix(eta, q_cur):
 def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
                   opts: ODEOptions = ODEOptions(),
                   lin_solver: Optional[Callable] = None,
-                  dense_jac: bool = False):
+                  dense_jac: bool = False,
+                  nonlin_solver: Optional[NewtonSolver] = None,
+                  mem=None):
     """Integrate stiff y' = f(t, y) with BDF up to ``order``.
 
-    lin_solver(t, z, gamma, rhs) solves (I - gamma J) dz = rhs; defaults
-    to matrix-free GMRES (SPGMR) or dense jacfwd if dense_jac=True.
+    ``lin_solver`` is a :class:`repro.core.linsol.LinearSolver` object
+    or a legacy callable ``(t, z, gamma, rhs) -> dz`` solving
+    (I - gamma J) dz = rhs; defaults to matrix-free SPGMR, or
+    :class:`~repro.core.linsol.DenseGJ` if ``dense_jac=True``.
+    ``nonlin_solver`` defaults to the ODEOptions Newton tolerances;
+    ``mem`` registers the BDF history workspace when given.
     """
     assert 1 <= order <= QMAX
-    lin_solve = lin_solver or (dense_lin_solver(f) if dense_jac
-                               else default_lin_solver(f))
+    if lin_solver is None and dense_jac:
+        from .linsol import DenseGJ
+        lin_solver = DenseGJ()
+    lin_solve = _bind_lin_solver(lin_solver, f, opts, mem)
+    nls = nonlin_solver or NewtonSolver.from_options(opts)
     y0_flat, unravel = ravel_pytree(y0)
     n = y0_flat.shape[0]
+    if mem is not None:
+        mem.register("bdf.history", (QMAX + 1, n), y0_flat.dtype)
     t0 = jnp.asarray(t0, dtype=y0_flat.dtype)
     tf = jnp.asarray(tf, dtype=t0.dtype)
 
@@ -159,10 +171,8 @@ def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
         def nsolve(z, rhs):
             return lin_solve_flat(t_new, z, gamma, rhs)
 
-        z, nst = kinsol.newton_solve(gfun, y_pred, nsolve, wnorm=wnorm,
-                                     tol=opts.newton_tol_fac,
-                                     max_iters=opts.newton_max,
-                                     policy=opts.policy)
+        z, nst = nls.solve(gfun, y_pred, nsolve, wnorm=wnorm,
+                           policy=opts.policy)
         nl_ok = nst.converged
         # LTE estimate ~ C_q (y - y_pred); C_q = 1/(q+1) (uniform grid)
         err = wnorm(z - y_pred) / (c.q.astype(h.dtype) + 1.0)
@@ -211,16 +221,42 @@ def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
 
 def bdf_fixed(f: Callable, y0, t0, tf, n_steps: int, *, order: int = 2,
               lin_solver: Optional[Callable] = None, dense_jac: bool = True,
-              newton_iters: int = 8, policy: ExecPolicy = XLA_FUSED):
+              newton_iters: Optional[int] = None,
+              policy: Optional[ExecPolicy] = None,
+              opts: Optional[ODEOptions] = None):
     """Fixed-step BDF(order) with exact startup via high-order ERK.
 
     For convergence-order tests: global error should scale as h^order.
+    Newton depth and the vector-op policy route through ``opts``
+    (``newton_max``, floored at 8 — fixed-step Newton has no retry
+    path — and ``policy``); the bare ``newton_iters`` / ``policy``
+    kwargs are deprecated compat shims.
     """
     from .arkode import erk_fixed
     from .butcher import DORMAND_PRINCE
 
-    lin_solve = lin_solver or (dense_lin_solver(f) if dense_jac
-                               else default_lin_solver(f))
+    if opts is None:
+        opts = ODEOptions()
+    # Fixed-step Newton has no failure/retry path, so its depth is
+    # floored at 8 regardless of the adaptive default (newton_max=4):
+    # a generic opts=ctx.options() must not silently halve the legacy
+    # depth and let nonlinear error pollute the measured orders.  Raise
+    # it with opts=ODEOptions(newton_max=12).
+    newton_depth = max(opts.newton_max, 8)
+    if newton_iters is not None:
+        warnings.warn("repro-compat: bdf_fixed(newton_iters=...) is "
+                      "deprecated; pass opts=ODEOptions(newton_max=...)",
+                      DeprecationWarning, stacklevel=2)
+        newton_depth = newton_iters    # exact, for backward compat
+    if policy is not None:
+        warnings.warn("repro-compat: bdf_fixed(policy=...) is deprecated; "
+                      "pass opts=ODEOptions(policy=...)",
+                      DeprecationWarning, stacklevel=2)
+        opts = opts._replace(policy=policy)
+    if lin_solver is None and dense_jac:
+        from .linsol import DenseGJ
+        lin_solver = DenseGJ()
+    lin_solve = _bind_lin_solver(lin_solver, f, opts)
     y0_flat, unravel = ravel_pytree(y0)
     n = y0_flat.shape[0]
     h = (tf - t0) / n_steps
@@ -252,7 +288,7 @@ def bdf_fixed(f: Callable, y0, t0, tf, n_steps: int, *, order: int = 2,
         gamma = beta * h
 
         def wnorm(v):
-            return jnp.sqrt(dv.dot(v, v, policy) / n)
+            return jnp.sqrt(dv.dot(v, v, opts.policy) / n)
 
         def gfun(z):
             return z - gamma * f_flat(t_new, z) - psi
@@ -260,9 +296,11 @@ def bdf_fixed(f: Callable, y0, t0, tf, n_steps: int, *, order: int = 2,
         def nsolve(z, rhs):
             return lin_solve_flat(t_new, z, gamma, rhs)
 
-        z, _ = kinsol.newton_solve(gfun, Z[0], nsolve, wnorm=wnorm,
-                                   tol=1e-10, max_iters=newton_iters,
-                                   policy=policy)
+        # fixed tol=1e-10: the nonlinear error must stay far below the
+        # discretization error being measured by the order tests
+        nls = NewtonSolver(tol=1e-10, max_iters=newton_depth)
+        z, _ = nls.solve(gfun, Z[0], nsolve, wnorm=wnorm,
+                         policy=opts.policy)
         Z = jnp.roll(Z, 1, axis=0).at[0].set(z)
         return (Z,), None
 
@@ -271,12 +309,19 @@ def bdf_fixed(f: Callable, y0, t0, tf, n_steps: int, *, order: int = 2,
 
 
 def adams_integrate(f: Callable, y0, t0, tf,
-                    opts: ODEOptions = ODEOptions(), m_aa: int = 2):
+                    opts: ODEOptions = ODEOptions(), m_aa: int = 2,
+                    nonlin_solver: Optional[FixedPointSolver] = None,
+                    mem=None):
     """CVODE functional-iteration mode for nonstiff problems:
     Adams-Moulton(2) (trapezoid) corrector solved by Anderson-accelerated
-    fixed-point, AB2 predictor, adaptive h via predictor-corrector diff."""
+    fixed-point, AB2 predictor, adaptive h via predictor-corrector diff.
+    ``nonlin_solver`` (:class:`~repro.core.nonlinsol.FixedPointSolver`)
+    defaults to the ODEOptions-derived tolerance."""
+    fps = nonlin_solver or FixedPointSolver.from_options(opts, m=m_aa)
     y0_flat, unravel = ravel_pytree(y0)
     n = y0_flat.shape[0]
+    if mem is not None:
+        mem.register("adams.anderson", (2 * fps.m, n), y0_flat.dtype)
     t0 = jnp.asarray(t0, dtype=y0_flat.dtype)
     tf = jnp.asarray(tf, dtype=t0.dtype)
 
@@ -314,9 +359,7 @@ def adams_integrate(f: Callable, y0, t0, tf,
         def gfun(z):
             return c.y + 0.5 * h * (fn + f_flat(t_new, z))
 
-        z, fst = kinsol.fixed_point_solve(
-            lambda zz: gfun(zz), y_pred, m=m_aa,
-            tol=opts.newton_tol_fac * opts.atol + 1e-12, max_iters=10)
+        z, fst = fps.solve(gfun, y_pred)
         w = 1.0 / (opts.rtol * jnp.abs(c.y) + opts.atol)
         err = dv.wrms_norm(z - y_pred, w, opts.policy) / 6.0
         bad = ~jnp.isfinite(err) | ~fst.converged

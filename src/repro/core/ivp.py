@@ -1,0 +1,288 @@
+"""Unified IVP front-end: one problem object, one ``integrate`` call.
+
+Before this layer the integrator surface was divergent free functions
+(``arkode.erk_integrate``/``imex_integrate`` taking ``ODEOptions``,
+``cvode.bdf_integrate`` with its own kwargs, ``batched.ensemble_*``
+selecting linear algebra by string).  This module is the SUNDIALS-style
+composition point:
+
+* :class:`IVP` — the problem: ``f`` (or ``fe`` + ``fi`` for additive
+  IMEX splittings), optional analytic ``jac``, and ``y0``.  For
+  ``ensemble_*`` methods ``f``/``jac`` are the vectorized batch forms
+  (``(t:(nsys,), y:(nsys,n))``).
+* :func:`integrate` — ``(problem, t0, tf, method, *, ctx, opts, ...)``
+  returning one :class:`Solution` regardless of method.  The method is
+  a string ``family[:variant]``:
+
+  ===========================  =========================================
+  ``"erk[:dopri5]"``           adaptive explicit RK (any ERK table)
+  ``"dirk[:sdirk2|sdirk33]"``  adaptive DIRK + Newton
+  ``"imex[:ark324]"``          adaptive additive IMEX-ARK
+  ``"bdf"``                    adaptive BDF 1-5 (CVODE; ``order=`` kwarg)
+  ``"adams"``                  functional-iteration Adams (nonstiff)
+  ``"ensemble_erk[:table]"``   batched adaptive ERK
+  ``"ensemble_dirk[:table]"``  batched adaptive DIRK, block-diag Newton
+  ``"ensemble_bdf"``           batched adaptive-order BDF (SoA kernels)
+  ===========================  =========================================
+
+* pluggable solvers: ``lin_solver`` takes any
+  :class:`repro.core.linsol.LinearSolver` (SPGMR/SPFGMR/SPBCGS/SPTFQMR/
+  PCG/DenseGJ for scalar methods, BlockDiagGJ or a Krylov solver for
+  ``ensemble_bdf``); ``nonlin_solver`` takes a
+  :class:`repro.core.nonlinsol.NewtonSolver` /
+  :class:`~repro.core.nonlinsol.FixedPointSolver`.
+* the :class:`repro.core.context.Context` carries the ExecPolicy, the
+  MemoryHelper (so :class:`Solution` reports a real workspace
+  high-water mark), and run-wide counters.
+
+Every method string routes to the corresponding legacy entry point with
+identical numerics — the parity suite in ``tests/test_unified_api.py``
+pins trajectory equality to 1e-12.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import arkode, batched, butcher, cvode
+from .arkode import ODEOptions
+from .context import Context
+
+Pytree = Any
+
+# canonical method strings (one per family:variant the parity suite and
+# the CI front-end smoke iterate over)
+METHOD_STRINGS = (
+    "erk:dopri5",
+    "erk:bogacki_shampine",
+    "dirk:sdirk2",
+    "dirk:sdirk33",
+    "imex:ark324",
+    "bdf",
+    "adams",
+    "ensemble_erk:bogacki_shampine",
+    "ensemble_dirk:sdirk2",
+    "ensemble_bdf",
+)
+
+_ERK_ALIASES = {"dopri5": "dormand_prince", "bs32": "bogacki_shampine",
+                "heun": "heun_euler"}
+_DIRK_ALIASES = {"esdirk3": "ark324_esdirk"}
+
+
+@dataclass(frozen=True)
+class IVP:
+    """An initial-value problem: RHS (full or additive split), optional
+    analytic Jacobian, and the initial state.
+
+    f   : full RHS ``f(t, y)`` — exclusive with ``fe``+``fi``
+    fe  : explicit (nonstiff) part for IMEX methods
+    fi  : implicit (stiff) part for IMEX methods
+    jac : analytic Jacobian — required by the ``ensemble_dirk`` /
+          ``ensemble_bdf`` methods (batched ``(t, y) -> (nsys, n, n)``)
+    y0  : initial state pytree (``(nsys, n)`` for ensemble methods)
+    """
+
+    f: Optional[Callable] = None
+    fe: Optional[Callable] = None
+    fi: Optional[Callable] = None
+    jac: Optional[Callable] = None
+    y0: Pytree = None
+
+    def __post_init__(self):
+        if (self.f is None) == (self.fe is None and self.fi is None):
+            raise ValueError("IVP wants either f=... or fe=... and fi=...")
+        if (self.fe is None) != (self.fi is None):
+            raise ValueError("IMEX splittings need BOTH fe and fi")
+        if self.y0 is None:
+            raise ValueError("IVP needs y0")
+
+    @property
+    def full_rhs(self) -> Callable:
+        """The complete RHS: ``f``, or ``fe + fi`` for split problems —
+        what the non-IMEX method families integrate, so an IMEX-split
+        problem run through e.g. ``bdf`` treats the WHOLE system
+        implicitly instead of silently dropping ``fe``."""
+        if self.f is not None:
+            return self.f
+        fe, fi = self.fe, self.fi
+        return lambda t, y: jax.tree_util.tree_map(
+            jnp.add, fe(t, y), fi(t, y))
+
+
+class Solution(NamedTuple):
+    """One result type for every method (the CVodeGetXxx roll-up)."""
+
+    y: Pytree                      # state at tf
+    t: jnp.ndarray                 # time reached (scalar methods); the
+    #                                target tf for ensemble methods, whose
+    #                                per-system progress lives in stats
+    success: jnp.ndarray           # bool (scalar, or all-systems for ensemble)
+    stats: Any                     # the raw IntegratorStats / EnsembleStats
+    method: str
+    lin_solver: str                # linear-solver name ("spgmr", ...)
+    nonlin_solver: str             # "newton" | "fixed_point" | "none"
+    nni: jnp.ndarray               # nonlinear iterations (summed over systems)
+    nli: Optional[jnp.ndarray]     # inner linear iterations (None if untracked)
+    nsetups: Optional[jnp.ndarray]  # lsetup count (ensemble_bdf only)
+    workspace_bytes: int           # this call's registered workspace
+    high_water_bytes: int          # run-wide memory high-water (ctx.memory)
+
+
+def _split(method: str):
+    fam, _, var = method.partition(":")
+    return fam, (var or None)
+
+
+def _erk_table(var):
+    name = _ERK_ALIASES.get(var or "dopri5", var or "dopri5")
+    return butcher.ERK_TABLES[name]
+
+
+def _dirk_table(var):
+    name = _DIRK_ALIASES.get(var or "sdirk2", var or "sdirk2")
+    return butcher.DIRK_TABLES[name]
+
+
+def _need(problem: IVP, attr: str, method: str):
+    if attr == "f":          # every non-IMEX family integrates fe+fi whole
+        return problem.full_rhs
+    v = getattr(problem, attr)
+    if v is None:
+        raise ValueError(f"method {method!r} needs IVP.{attr}")
+    return v
+
+
+def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
+              ctx: Optional[Context] = None,
+              opts: Optional[ODEOptions] = None,
+              lin_solver=None, nonlin_solver=None,
+              order: int = 5, **method_kw) -> Solution:
+    """Integrate ``problem`` from t0 to tf with ``method``.
+
+    ctx           : :class:`~repro.core.context.Context`; a private one
+                    is created (and its counters discarded) if omitted.
+    opts          : ODEOptions; defaults to ``ctx.options()`` so the
+                    context's ExecPolicy is applied.  An explicit opts
+                    wins entirely (its policy included).
+    lin_solver    : LinearSolver object (or legacy callable) for the
+                    pluggable-linear-solver families (dirk, imex, bdf,
+                    ensemble_bdf); a ValueError elsewhere.
+    nonlin_solver : NewtonSolver / FixedPointSolver config object
+                    (dirk, imex, bdf, adams); a ValueError elsewhere.
+    order         : max BDF order for the ``bdf`` / ``ensemble_bdf``
+                    families.
+    method_kw     : passed through to the underlying integrator
+                    (``dense_jac``, ``msbp``, ``m_aa``, ...).
+    """
+    ctx = ctx if ctx is not None else Context()
+    opts = opts if opts is not None else ctx.options()
+    mem = ctx.memory
+    live0 = mem.live_bytes
+    labels0 = set(mem.workspaces)
+    fam, var = _split(method)
+    nli = None
+    nsetups = None
+    # a solver object passed to a family that cannot consume it is an
+    # error, not a silent no-op (Solution must never report a swap that
+    # did not happen)
+    if lin_solver is not None and fam not in ("dirk", "imex", "bdf",
+                                              "ensemble_bdf"):
+        raise ValueError(f"method {method!r} takes no lin_solver (the "
+                         "pluggable families are dirk, imex, bdf, "
+                         "ensemble_bdf)")
+    if nonlin_solver is not None and fam not in ("dirk", "imex", "bdf",
+                                                 "adams"):
+        raise ValueError(f"method {method!r} takes no nonlin_solver (the "
+                         "pluggable families are dirk, imex, bdf, adams)")
+    lname = getattr(lin_solver, "name",
+                    "custom" if lin_solver is not None else None)
+    nlname = "newton" if fam in ("dirk", "imex", "bdf", "ensemble_dirk",
+                                 "ensemble_bdf") else \
+             "fixed_point" if fam == "adams" else "none"
+
+    if fam == "erk":
+        f = _need(problem, "f", method)
+        y, st = arkode.erk_integrate(f, problem.y0, t0, tf,
+                                     _erk_table(var), opts, mem=mem)
+        lname = lname or "none"
+    elif fam == "dirk":
+        fi = _need(problem, "f", method)   # full RHS, treated implicitly
+        y, st = arkode.dirk_integrate(fi, problem.y0, t0, tf,
+                                      _dirk_table(var), opts,
+                                      lin_solver=lin_solver,
+                                      nonlin_solver=nonlin_solver, mem=mem)
+        lname = lname or "spgmr"
+    elif fam == "imex":
+        fe = _need(problem, "fe", method)
+        fi = _need(problem, "fi", method)
+        tab = butcher.IMEX_TABLES[var or "ark324"]
+        y, st = arkode.imex_integrate(fe, fi, problem.y0, t0, tf, tab,
+                                      opts, lin_solver=lin_solver,
+                                      nonlin_solver=nonlin_solver, mem=mem)
+        lname = lname or "spgmr"
+    elif fam == "bdf":
+        f = _need(problem, "f", method)    # full RHS, treated implicitly
+        y, st = cvode.bdf_integrate(f, problem.y0, t0, tf, order=order,
+                                    opts=opts, lin_solver=lin_solver,
+                                    nonlin_solver=nonlin_solver, mem=mem,
+                                    **method_kw)
+        lname = lname or ("dense_gj" if method_kw.get("dense_jac")
+                          else "spgmr")
+    elif fam == "adams":
+        f = _need(problem, "f", method)
+        y, st = cvode.adams_integrate(f, problem.y0, t0, tf, opts,
+                                      nonlin_solver=nonlin_solver,
+                                      mem=mem, **method_kw)
+        lname = lname or "none"
+    elif fam == "ensemble_erk":
+        f = _need(problem, "f", method)
+        y, st = batched.ensemble_erk_integrate(f, problem.y0, t0, tf,
+                                               _erk_table(var), opts)
+        lname = lname or "none"
+    elif fam == "ensemble_dirk":
+        f = _need(problem, "f", method)
+        jac = _need(problem, "jac", method)
+        y, st = batched.ensemble_dirk_integrate(
+            f, jac, problem.y0, t0, tf, _dirk_table(var), opts,
+            policy=opts.policy, **method_kw)
+        lname = lname or "blockdiag_gj"
+    elif fam == "ensemble_bdf":
+        f = _need(problem, "f", method)
+        jac = _need(problem, "jac", method)
+        y, st = batched.ensemble_bdf_integrate(
+            f, jac, problem.y0, t0, tf, order=order, opts=opts,
+            policy=opts.policy, linear_solver=lin_solver, mem=mem,
+            **method_kw)
+        lname = lname or "blockdiag_gj"
+        nli = st.nli[0] if st.nli is not None else None
+        nsetups = st.nsetups
+    else:
+        raise ValueError(
+            f"unknown method {method!r}; families: erk, dirk, imex, bdf, "
+            f"adams, ensemble_erk, ensemble_dirk, ensemble_bdf "
+            f"(canonical strings: {', '.join(METHOD_STRINGS)})")
+
+    is_ensemble = fam.startswith("ensemble")
+    success = jnp.all(st.success) if is_ensemble else st.success
+    t_reached = getattr(st, "t", None)
+    if t_reached is None:
+        # EnsembleStats carries no per-system t; this is the TARGET time
+        # (check `success` / stats.success for systems that stalled)
+        t_reached = jnp.asarray(tf)
+    nni = jnp.sum(st.nni) if is_ensemble else st.nni
+    workspace = mem.live_bytes - live0
+    # workspaces are per-call: release only the labels THIS call added
+    # (foreign registrations on a shared ctx.memory stay live); the
+    # high-water mark persists either way
+    for label in set(mem.workspaces) - labels0:
+        mem.release(label)
+    ctx.record(st, nli)
+    return Solution(y=y, t=t_reached, success=success, stats=st,
+                    method=method, lin_solver=lname or "none",
+                    nonlin_solver=nlname, nni=nni, nli=nli,
+                    nsetups=nsetups, workspace_bytes=workspace,
+                    high_water_bytes=mem.high_water_bytes)

@@ -41,10 +41,19 @@ def newton_solve(gfun: Callable, z0, lin_solve: Callable, *,
                 (defaults to RMS norm).  This mirrors CVODE/ARKODE where
                 the Newton tolerance is relative to the integrator's WRMS
                 weights and a fraction (0.1) of the error-test tolerance.
+
+    Tolerances come from one place: integrators build their Newton
+    config via :class:`repro.core.nonlinsol.NewtonSolver.from_options`
+    (ODEOptions.newton_tol_fac / newton_max) rather than relying on the
+    defaults here.
     """
     if wnorm is None:
+        # tree_size is static — hoist it out of the traced loop body
+        # instead of re-walking the pytree every Newton iteration
+        n_static = nv.tree_size(z0)
+
         def wnorm(v):
-            return jnp.sqrt(dv.dot(v, v, policy) / nv.tree_size(v))
+            return jnp.sqrt(dv.dot(v, v, policy) / n_static)
 
     def cond(c):
         z, it, delta_norm, conv, div = c

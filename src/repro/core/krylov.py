@@ -12,7 +12,24 @@ All solvers accept:
   matvec  : v -> A v              (pytree -> pytree)
   b       : right-hand side pytree
   precond : v -> M^{-1} v         (right preconditioning; identity default)
+  mem     : optional MemoryHelper — when given, the solver registers its
+            workspace (Krylov basis / work vectors) for the run's
+            high-water audit
 and return (x, SolveStats).
+
+SolveStats convention (identical across all five solvers)
+---------------------------------------------------------
+* ``res_norm``  : the TRUE unpreconditioned residual 2-norm
+  ``||b - A x||_2`` evaluated at the returned ``x`` (one extra matvec at
+  exit) — never the solver's internal recursive/rotation estimate, so
+  callers compare solvers without per-solver special cases.
+* ``converged`` : ``res_norm <= max(tol * ||b||_2, atol)`` under that
+  same true residual, for every solver.
+* ``iters``     : inner iterations actually performed (not budgeted):
+  Arnoldi steps for gmres/fgmres (1 matvec each), CG iterations for pcg
+  (1 matvec), full BiCGStab iterations (2 matvecs), TFQMR outer
+  iterations (~3 matvecs).  Early exit (breakdown, convergence
+  mid-cycle) reports the true count.
 """
 from __future__ import annotations
 
@@ -29,6 +46,10 @@ from .policies import ExecPolicy, XLA_FUSED
 
 
 class SolveStats(NamedTuple):
+    """Uniform solver stats — see the module docstring for the exact
+    convention (true-residual ``res_norm``, shared ``converged`` test,
+    actual ``iters``)."""
+
     iters: jnp.ndarray
     res_norm: jnp.ndarray
     converged: jnp.ndarray
@@ -46,7 +67,8 @@ def _identity(v):
 def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
           atol: float = 0.0, restart: int = 30, max_restarts: int = 10,
           precond: Optional[Callable] = None,
-          policy: ExecPolicy = XLA_FUSED, flexible: bool = False):
+          policy: ExecPolicy = XLA_FUSED, flexible: bool = False,
+          mem=None):
     """Restarted GMRES(m).  Solves A x = b with right preconditioning:
     A M^{-1} u = b, x = M^{-1} u.
 
@@ -62,6 +84,11 @@ def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
     n = b_flat.shape[0]
     dtype = b_flat.dtype
     m = min(restart, n)
+    if mem is not None:
+        label = "spfgmr" if flexible else "spgmr"
+        mem.register(f"{label}.basis",
+                     (m + 1 + (m if flexible else 0), n), dtype)
+        mem.register(f"{label}.hessenberg", (m + 1, m), dtype)
     # the dispatched dot is sum(x*y) (real, no conjugation — the pallas
     # kernels are real-only); keep jnp.vdot/norm for complex systems.
     is_complex = jnp.issubdtype(dtype, jnp.complexfloating)
@@ -181,8 +208,13 @@ def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
     carry = (x, jnp.linalg.norm(r0), jnp.zeros((), jnp.int32),
              jnp.linalg.norm(r0) <= target, jnp.zeros((), jnp.int32))
     x, res, restarts, conv, iters = lax.while_loop(cond, cycle, carry)
-    return unravel(x), SolveStats(iters=iters, res_norm=res,
-                                  converged=conv)
+    # uniform SolveStats convention: report the TRUE residual at exit
+    # (the in-loop `res` is the Givens-rotation estimate).  Callers that
+    # discard the stats (e.g. the integrators' Newton loops, which run
+    # traced) pay nothing: the matvec is dead code and XLA eliminates it.
+    rn = jnp.linalg.norm(b_flat - ravel_pytree(matvec(unravel(x)))[0])
+    return unravel(x), SolveStats(iters=iters, res_norm=rn,
+                                  converged=rn <= target)
 
 
 # ----------------------------------------------------------------------------
@@ -192,9 +224,12 @@ def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
 
 def pcg(matvec: Callable, b, x0=None, *, tol: float = 1e-8, atol: float = 0.0,
         maxiter: int = 200, precond: Optional[Callable] = None,
-        policy: ExecPolicy = XLA_FUSED):
+        policy: ExecPolicy = XLA_FUSED, mem=None):
     """Preconditioned CG for SPD systems."""
     M = precond or _identity
+    if mem is not None:
+        mem.register("pcg.work", (4, nv.tree_size(b)),
+                     jnp.result_type(*jax.tree_util.tree_leaves(b)))
     x = x0 if x0 is not None else nv.const_like(0.0, b)
     r = dv.linear_sum(1.0, b, -1.0, matvec(x), policy)
     z = M(r)
@@ -221,7 +256,9 @@ def pcg(matvec: Callable, b, x0=None, *, tol: float = 1e-8, atol: float = 0.0,
 
     x, r, z, p, rz, it = lax.while_loop(cond, body, (x, r, z, p, rz,
                                                      jnp.zeros((), jnp.int32)))
-    rn = jnp.sqrt(dv.dot(r, r, policy))
+    # uniform convention: true residual at exit, not the recursive one
+    rt = dv.linear_sum(1.0, b, -1.0, matvec(x), policy)
+    rn = jnp.sqrt(dv.dot(rt, rt, policy))
     return x, SolveStats(iters=it, res_norm=rn, converged=rn <= target)
 
 
@@ -233,8 +270,11 @@ def pcg(matvec: Callable, b, x0=None, *, tol: float = 1e-8, atol: float = 0.0,
 def bicgstab(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
              atol: float = 0.0, maxiter: int = 200,
              precond: Optional[Callable] = None,
-             policy: ExecPolicy = XLA_FUSED):
+             policy: ExecPolicy = XLA_FUSED, mem=None):
     M = precond or _identity
+    if mem is not None:
+        mem.register("spbcgs.work", (8, nv.tree_size(b)),
+                     jnp.result_type(*jax.tree_util.tree_leaves(b)))
     x = x0 if x0 is not None else nv.const_like(0.0, b)
     r = dv.linear_sum(1.0, b, -1.0, matvec(x), policy)
     rhat = r
@@ -288,7 +328,9 @@ def bicgstab(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
     x, r, p, rho, it, brk = lax.while_loop(
         cond, body, (x, r, p, rho, jnp.zeros((), jnp.int32),
                      jnp.zeros((), bool)))
-    rn = jnp.sqrt(dv.dot(r, r, policy))
+    # uniform convention: true residual at exit, not the recursive one
+    rt = dv.linear_sum(1.0, b, -1.0, matvec(x), policy)
+    rn = jnp.sqrt(dv.dot(rt, rt, policy))
     return x, SolveStats(iters=it, res_norm=rn, converged=rn <= target)
 
 
@@ -300,8 +342,11 @@ def bicgstab(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
 def tfqmr(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
           atol: float = 0.0, maxiter: int = 200,
           precond: Optional[Callable] = None,
-          policy: ExecPolicy = XLA_FUSED):
+          policy: ExecPolicy = XLA_FUSED, mem=None):
     M = precond or _identity
+    if mem is not None:
+        mem.register("sptfqmr.work", (7, nv.tree_size(b)),
+                     jnp.result_type(*jax.tree_util.tree_leaves(b)))
 
     def amv(v):
         return matvec(M(v))
@@ -371,7 +416,7 @@ def tfqmr(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
 def fgmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
            atol: float = 0.0, restart: int = 30, max_restarts: int = 10,
            precond: Optional[Callable] = None,
-           policy: ExecPolicy = XLA_FUSED):
+           policy: ExecPolicy = XLA_FUSED, mem=None):
     """Flexible GMRES (SUNDIALS SPFGMR): stores the preconditioned basis
     Z[j] = M^{-1} v_j and assembles the correction as Z y, so the
     preconditioner may change between iterations — unlike plain
@@ -379,4 +424,4 @@ def fgmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
     assembled correction."""
     return gmres(matvec, b, x0, tol=tol, atol=atol, restart=restart,
                  max_restarts=max_restarts, precond=precond, policy=policy,
-                 flexible=True)
+                 flexible=True, mem=mem)

@@ -55,7 +55,59 @@ class MemoryHelper:
 
     device: Optional[jax.Device] = None
     stats: dict = field(default_factory=lambda: {
-        "alloc_bytes": 0, "copy_bytes": 0, "copies_h2d": 0, "copies_d2h": 0})
+        "alloc_bytes": 0, "copy_bytes": 0, "copies_h2d": 0, "copies_d2h": 0,
+        "live_bytes": 0, "high_water_bytes": 0})
+    workspaces: dict = field(default_factory=dict)  # label -> live bytes
+
+    # -- workspace registration (high-water accounting) --------------------
+    #
+    # Solvers and integrators *register* their working sets (Krylov bases,
+    # BDF history windows, saved Newton matrices, ...) instead of routing
+    # every jnp.zeros through alloc(): JAX owns the actual buffers, but the
+    # helper keeps the SUNMemoryHelper-style audit — live bytes per label
+    # and the run's high-water mark.  Registration happens at trace time
+    # (shapes are static), so one traced instance == one concurrent
+    # workspace, which is exactly the high-water semantics we want.
+
+    @staticmethod
+    def nbytes_of(shape, dtype) -> int:
+        n = 1
+        for s in shape:
+            n *= int(s)
+        return n * jnp.dtype(dtype).itemsize
+
+    def register(self, label: str, shape, dtype=jnp.float64) -> int:
+        """Account a workspace buffer under ``label``; returns its bytes.
+
+        Idempotent per label: a solver traced several times per step
+        (e.g. one Krylov solve per implicit stage) still owns ONE
+        workspace of that shape, so re-registering the same label only
+        grows the accounted size if the new shape is larger.
+        """
+        nbytes = self.nbytes_of(shape, dtype)
+        delta = max(0, nbytes - self.workspaces.get(label, 0))
+        if delta == 0:
+            return nbytes
+        self.workspaces[label] = self.workspaces.get(label, 0) + delta
+        self.stats["alloc_bytes"] += delta
+        self.stats["live_bytes"] += delta
+        self.stats["high_water_bytes"] = max(self.stats["high_water_bytes"],
+                                             self.stats["live_bytes"])
+        return nbytes
+
+    def release(self, label: Optional[str] = None) -> None:
+        """Release one labelled workspace (or all of them)."""
+        labels = list(self.workspaces) if label is None else [label]
+        for lb in labels:
+            self.stats["live_bytes"] -= self.workspaces.pop(lb, 0)
+
+    @property
+    def high_water_bytes(self) -> int:
+        return self.stats["high_water_bytes"]
+
+    @property
+    def live_bytes(self) -> int:
+        return self.stats["live_bytes"]
 
     # -- allocation --------------------------------------------------------
     def alloc(self, shape, dtype=jnp.float32,

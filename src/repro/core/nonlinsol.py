@@ -1,0 +1,78 @@
+"""Pluggable nonlinear solvers — the SUNNonlinearSolver object layer.
+
+The integrators' implicit stages used to call
+:func:`repro.core.kinsol.newton_solve` /
+:func:`~repro.core.kinsol.fixed_point_solve` directly, each passing its
+own ad-hoc tolerance defaults.  These objects give the nonlinear solve
+the same pluggable shape as :mod:`repro.core.linsol`: a frozen config
+object the integrator threads through its step loop, with tolerances
+taken from the one place they are defined —
+:class:`~repro.core.arkode.ODEOptions` (``newton_tol_fac`` /
+``newton_max``) via :meth:`NewtonSolver.from_options`.
+
+* :class:`NewtonSolver`      — (modified/inexact) Newton; wraps
+  :func:`kinsol.newton_solve`; the linear solve is still a callback, so
+  any :class:`~repro.core.linsol.LinearSolver` plugs in underneath.
+* :class:`FixedPointSolver`  — Anderson-accelerated fixed point; wraps
+  :func:`kinsol.fixed_point_solve` (CVODE functional iteration).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from . import kinsol
+from .policies import ExecPolicy, XLA_FUSED
+
+
+@dataclass(frozen=True)
+class NewtonSolver:
+    """Config object for the Newton iteration (SUNNonlinSol_Newton).
+
+    ``tol`` is the WRMS-weighted step tolerance *factor* (the fraction
+    of the integrator's error-test tolerance the nonlinear solve must
+    reach — CVODE's ``epcon``); ``max_iters`` caps iterations per solve.
+    """
+
+    tol: float = 0.1
+    max_iters: int = 4
+    damping: float = 1.0
+
+    @classmethod
+    def from_options(cls, opts) -> "NewtonSolver":
+        """The one source of truth for integrator Newton tolerances."""
+        return cls(tol=opts.newton_tol_fac, max_iters=opts.newton_max)
+
+    def solve(self, gfun: Callable, z0, lin_solve: Callable, *,
+              wnorm: Optional[Callable] = None,
+              policy: ExecPolicy = XLA_FUSED):
+        return kinsol.newton_solve(gfun, z0, lin_solve, wnorm=wnorm,
+                                   tol=self.tol, max_iters=self.max_iters,
+                                   damping=self.damping, policy=policy)
+
+
+@dataclass(frozen=True)
+class FixedPointSolver:
+    """Config object for Anderson fixed-point (SUNNonlinSol_FixedPoint).
+
+    ``m`` is the Anderson depth; ``tol`` the absolute RMS step
+    tolerance (unlike Newton's relative factor — functional iteration
+    has no WRMS weighting in the legacy path, preserved here).
+    """
+
+    m: int = 3
+    tol: float = 1e-9
+    max_iters: int = 50
+
+    @classmethod
+    def from_options(cls, opts, m: int = 2) -> "FixedPointSolver":
+        # the legacy adams_integrate tolerance: a newton_tol_fac slice of
+        # atol, floored so atol=0 still terminates
+        return cls(m=m, tol=opts.newton_tol_fac * opts.atol + 1e-12,
+                   max_iters=10)
+
+    def solve(self, gfun: Callable, y0, *,
+              wnorm: Optional[Callable] = None):
+        return kinsol.fixed_point_solve(gfun, y0, m=self.m, tol=self.tol,
+                                        max_iters=self.max_iters,
+                                        wnorm=wnorm)

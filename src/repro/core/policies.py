@@ -37,7 +37,9 @@ analog of the paper's CUDA-stream bundle size.
 
 Integrators thread the policy via ``ODEOptions(policy=...)``; Krylov and
 Newton solvers take a ``policy=`` kwarg; :class:`MeshVectorSpec` carries
-one per vector.  ``backend='jnp'`` (XLA_FUSED, the default) reproduces
+one per vector.  At the run level, a
+:class:`repro.core.context.Context` owns the policy and
+``ctx.options(...)`` builds ODEOptions bound to it.  ``backend='jnp'`` (XLA_FUSED, the default) reproduces
 the pre-dispatch behavior exactly; ``backend='pallas'`` with
 ``interpret=True`` runs the fused kernels CPU-emulated (CI parity
 checks), with ``interpret=False`` compiled to Mosaic on TPU.

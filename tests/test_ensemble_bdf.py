@@ -14,6 +14,7 @@ import pytest
 
 from repro.core import batched, dispatch as dv
 from repro.core.arkode import ODEOptions
+from repro.core.linsol import BlockDiagGJ
 from repro.core.policies import ExecPolicy, XLA_FUSED
 from repro.kernels import ops, ref
 
@@ -44,14 +45,15 @@ def _decay(nsys, n):
     return f, jac, exact
 
 
-@pytest.mark.parametrize("lin_mode", ["setup", "direct"])
-def test_bdf_accuracy_and_per_system_control(lin_mode):
+@pytest.mark.parametrize("factor_once", [True, False],
+                         ids=["setup", "direct"])
+def test_bdf_accuracy_and_per_system_control(factor_once):
     nsys, n = 6, 3
     f, jac, exact = _decay(nsys, n)
     y0 = jnp.zeros((nsys, n))
     y, st = batched.ensemble_bdf_integrate(
         f, jac, y0, 0.0, 2.0, opts=ODEOptions(rtol=1e-6, atol=1e-10),
-        lin_mode=lin_mode)
+        linear_solver=BlockDiagGJ(factor_once=factor_once))
     assert bool(jnp.all(st.success))
     np.testing.assert_allclose(np.asarray(y),
                                np.broadcast_to(exact(2.0), (nsys, n)),
@@ -82,20 +84,22 @@ def test_bdf_high_order_beats_low_order():
         0.7 * np.median(np.asarray(st2.steps))
 
 
-@pytest.mark.parametrize("lin_mode", ["setup", "direct"])
-def test_bdf_kinetics_jnp_vs_pallas_parity(lin_mode):
+@pytest.mark.parametrize("factor_once", [True, False],
+                         ids=["setup", "direct"])
+def test_bdf_kinetics_jnp_vs_pallas_parity(factor_once):
     """Acceptance gate: trajectories agree between the jnp oracle and the
     Pallas(interpret) block-kernel path to 1e-8 on the batched-kinetics
     example, with nsys NOT a multiple of 128."""
     nsys = 130
+    ls = BlockDiagGJ(factor_once=factor_once)
     f, jac, y0 = _kinetics(nsys)
     opts = ODEOptions(rtol=1e-5, atol=1e-10, max_steps=100_000)
     y_j, st_j = batched.ensemble_bdf_integrate(
         f, jac, y0, 0.0, 10.0, opts=opts, policy=XLA_FUSED,
-        lin_mode=lin_mode)
+        linear_solver=ls)
     pol = ExecPolicy(backend="pallas", interpret=True, batch_tile=256)
     y_p, st_p = batched.ensemble_bdf_integrate(
-        f, jac, y0, 0.0, 10.0, opts=opts, policy=pol, lin_mode=lin_mode)
+        f, jac, y0, 0.0, 10.0, opts=opts, policy=pol, linear_solver=ls)
     assert bool(jnp.all(st_j.success)) and bool(jnp.all(st_p.success))
     np.testing.assert_allclose(np.asarray(y_j), np.asarray(y_p),
                                rtol=0, atol=1e-8)
@@ -212,6 +216,17 @@ def test_bdf_sharded_matches_single_device():
         assert st.steps.shape == (nsys,)
         np.testing.assert_allclose(np.asarray(y_sh), np.asarray(y_1),
                                    rtol=0, atol=1e-12)
+        # pluggable Krylov under shard_map: nli must keep its invariant
+        # (every entry == the GLOBAL inner-iteration total, not a
+        # per-shard broadcast)
+        from repro.core.linsol import SPGMR
+        y_k, st_k = batched.ensemble_bdf_integrate_sharded(
+            f, jac, y0, 0.0, 2.0, params=rates, opts=opts,
+            linear_solver=SPGMR(tol=1e-12, restart=30, max_restarts=6))
+        assert int(np.asarray(st_k.nli)[0]) > 0
+        assert len(np.unique(np.asarray(st_k.nli))) == 1
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_1),
+                                   rtol=0, atol=1e-6)
         print("OK")
     """)
     env = dict(os.environ)
