@@ -80,6 +80,25 @@ def smoke(n: int = 4096, tol: float = 1e-5):
     Ab = jax.random.normal(jax.random.PRNGKey(3), (bs, bs, nb)) + \
         (bs + 2.0) * jnp.eye(bs)[:, :, None]
     rb = jax.random.normal(jax.random.PRNGKey(4), (bs, nb))
+    # sparse ops: a banded CSR pattern (non-lane-multiple rows) and a
+    # shared block pattern with a ragged system batch
+    ncsr = 133
+    pat_el = np.abs(np.arange(ncsr)[:, None] - np.arange(ncsr)) <= 2
+    from repro.core.sunmatrix import SparseCSR
+    csr = SparseCSR.from_dense(
+        np.asarray(jax.random.normal(jax.random.PRNGKey(5),
+                                     (ncsr, ncsr))) * pat_el)
+    xs = jax.random.normal(jax.random.PRNGKey(6), (ncsr,))
+    nblk, bb, nbs = 5, 3, 130
+    brows, bcols = zip(*[(i, j) for i in range(nblk)
+                         for j in range(nblk) if abs(i - j) <= 1])
+    bpat = (tuple(brows), tuple(bcols), nblk)
+    Vb = jax.random.normal(jax.random.PRNGKey(7),
+                           (len(brows), bb, bb, nbs)) + \
+        jnp.where((jnp.asarray(brows) == jnp.asarray(bcols))
+                  [:, None, None, None],
+                  (bb + 2.0) * jnp.eye(bb)[None, :, :, None], 0.0)
+    xb = jax.random.normal(jax.random.PRNGKey(8), (nblk, bb, nbs))
     cases = {
         "linear_sum": lambda p: dp.linear_sum(2.0, x, -0.5, y, p),
         "linear_combination": lambda p: dp.linear_combination(
@@ -94,6 +113,10 @@ def smoke(n: int = 4096, tol: float = 1e-5):
         "block_solve_soa": lambda p: dp.block_solve_soa(Ab, rb, p),
         "block_inverse_soa": lambda p: dp.block_inverse_soa(Ab, p),
         "blockdiag_spmv_soa": lambda p: dp.blockdiag_spmv_soa(Ab, rb, p),
+        "csr_spmv": lambda p: dp.csr_spmv(csr.data, xs, csr.pattern, p),
+        "bsr_spmv_soa": lambda p: dp.bsr_spmv_soa(Vb, xb, bpat, p),
+        "bsr_block_jacobi_inverse_soa":
+            lambda p: dp.bsr_block_jacobi_inverse_soa(Vb, bpat, p),
     }
     rows, ok = [], True
     for name, fn in cases.items():

@@ -25,6 +25,7 @@ MODULES = [
     "linear_sum_bandwidth",  # paper Table 1
     "kernels_bench",         # kernel-path microbenchmarks
     "ensemble_bench",        # paper Fig. 5 submodel A/B -> BENCH_ensemble.json
+    "sparse_bench",          # sparse-vs-dense Newton solve -> BENCH_sparse.json
     "roofline_table",        # EXPERIMENTS §Roofline (derived from dry-run)
 ]
 

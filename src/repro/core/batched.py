@@ -27,7 +27,7 @@ Three integrators share the masked-while_loop pattern:
 from __future__ import annotations
 
 import warnings
-from typing import Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +52,8 @@ class EnsembleStats(NamedTuple):
     ncfn: Optional[jnp.ndarray] = None      # (nsys,) Newton conv failures
     nli: Optional[jnp.ndarray] = None       # (nsys,) linear (Krylov) iters,
     # a solver-level count broadcast per system (direct solvers report 0)
+    npsolves: Optional[jnp.ndarray] = None  # (nsys,) preconditioner solves,
+    # broadcast like nli (0 without a Preconditioner object)
 
 
 def ensemble_erk_integrate(f: Callable, y0: jnp.ndarray, t0, tf,
@@ -265,7 +267,8 @@ class _BdfCarry(NamedTuple):
     Z: jnp.ndarray            # (nsys, QMAX+1, n) uniform-grid history
     e1: jnp.ndarray           # (nsys,) controller err_prev
     e2: jnp.ndarray           # (nsys,) controller err_prev2
-    MJ: jnp.ndarray           # (n, n, nsys) SoA: M^{-1} ('setup') or J ('direct')
+    MJ: Any                   # saved linear object (solver-defined pytree;
+    #                           every leaf keeps the nsys axis LAST)
     gam_saved: jnp.ndarray    # (nsys,) gamma at last lsetup
     since_jac: jnp.ndarray    # (nsys,) attempts since last Jacobian refresh
     ncf_prev: jnp.ndarray     # (nsys,) Newton failed last attempt -> refresh
@@ -276,6 +279,7 @@ class _BdfCarry(NamedTuple):
     nsetups: jnp.ndarray
     ncfn: jnp.ndarray
     nli: jnp.ndarray          # scalar: inner linear iterations (Krylov)
+    nps: jnp.ndarray          # scalar: preconditioner applications
     stall: jnp.ndarray
 
 
@@ -285,6 +289,7 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
                            policy: ExecPolicy = XLA_FUSED,
                            linear_solver=None,
                            lin_mode: Optional[str] = None,
+                           jac_sparsity=None,
                            msbp: int = 20, dgmax: float = 0.3,
                            mem=None):
     """Adaptive batched BDF (orders 1-``order``) over ``nsys`` independent
@@ -326,7 +331,19 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
     * any Krylov solver (:class:`~repro.core.linsol.SPGMR`, ...) — the
       saved Jacobian backs a matrix-free solve of the flattened
       block-diagonal system (one batched SpMV per inner iteration);
-      inner iterations are reported in ``stats.nli``.
+      inner iterations are reported in ``stats.nli``, and a
+      :class:`~repro.core.precond.Preconditioner` passed as the
+      solver's ``precond=`` has its psetup run at the lsetup triggers
+      and its psolve applications counted in ``stats.npsolves``.
+    * :class:`~repro.core.linsol.EnsembleSparseGJ` — the batched sparse
+      direct solver: symbolic analysis once per run, numeric refactor
+      at the lsetup triggers, O(nnz) saved storage.
+
+    ``jac_sparsity`` (an (n, n) boolean pattern, or the problem's
+    ``IVP.jac_sparsity`` via the unified front-end) is bound to any
+    solver with a sparse path (``with_sparsity``): the persistent
+    Newton carry then holds only the pattern's values — dense ``jac``
+    output is compressed at each lsetup and never stored.
 
     ``lin_mode='setup' | 'direct'`` is the deprecated string form of the
     two ``BlockDiagGJ`` configurations (kept as a compat shim).
@@ -355,12 +372,18 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
         if linear_solver is None:
             linear_solver = BlockDiagGJ(factor_once=(lin_mode == "setup"))
     ls = linear_solver if linear_solver is not None else BlockDiagGJ()
+    if jac_sparsity is not None:
+        from .linsol import encode_sparsity
+        ls = ls.with_sparsity(encode_sparsity(jac_sparsity))
     nsys, n = y0.shape
     dtype = y0.dtype
     QMAX = _cv.QMAX
     if mem is not None:
         mem.register("ensemble_bdf.history", (nsys, QMAX + 1, n), dtype)
-        mem.register("ensemble_bdf.newton_blocks", (n, n, nsys), dtype)
+        # the persistent saved linear object is solver-defined: dense
+        # Newton blocks, sparse values, preconditioner data, ...
+        for suffix, shape in ls.soa_workspace_shapes(n, nsys):
+            mem.register(f"ensemble_bdf.{suffix}", shape, dtype)
     t0 = jnp.broadcast_to(jnp.asarray(t0, dtype), (nsys,))
     tf = jnp.broadcast_to(jnp.asarray(tf, dtype), (nsys,))
     h0 = jnp.where(opts.h0 > 0, jnp.full((nsys,), opts.h0, dtype),
@@ -407,7 +430,10 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
 
         MJ_new = lax.cond(jnp.any(need), do_setup, lambda _: c.MJ,
                           operand=None)
-        MJ = jnp.where(need[None, None, :], MJ_new, c.MJ)
+        # solver-defined pytree; every leaf keeps nsys LAST, so the
+        # per-system mask broadcasts against the trailing axis
+        MJ = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(need, new, old), MJ_new, c.MJ)
         gam_saved = jnp.where(need, gamma, c.gam_saved)
         since_jac = jnp.where(need, 0, c.since_jac)
         gamrat = jnp.where(need, 1.0, gamrat)
@@ -418,14 +444,14 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
             return ls.soa_solve(MJ, gamma, gamrat, rhs, policy, mem=mem)
 
         def nl_cond(s):
-            z, it, dn_prev, crate, conv, div, nni_s, nli_s = s
+            z, it, dn_prev, crate, conv, div, nni_s, nli_s, nps_s = s
             return jnp.any(active & ~conv & ~div) & (it < opts.newton_max)
 
         def nl_body(s):
-            z, it, dn_prev, crate, conv, div, nni_s, nli_s = s
+            z, it, dn_prev, crate, conv, div, nni_s, nli_s, nps_s = s
             iterate = active & ~conv & ~div
             g = z - gamma[:, None] * f(t_new, z) - psi
-            dz_soa, nli_inc = lsolve(-g.T)
+            dz_soa, nli_inc, nps_inc = lsolve(-g.T)
             dz = dz_soa.T
             z_new = jnp.where(iterate[:, None], z + dz, z)
             dn = wrms(dz, w)
@@ -441,12 +467,13 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
                     jnp.where(iterate, dn, dn_prev),
                     jnp.where(iterate, crate_new, crate),
                     conv_new, div_new, nni_s + iterate.astype(jnp.int32),
-                    nli_s + nli_inc)
+                    nli_s + nli_inc, nps_s + nps_inc)
 
         s0 = (y_pred, jnp.zeros((), jnp.int32), jnp.zeros((nsys,), dtype),
               jnp.ones((nsys,), dtype), ~active, jnp.zeros((nsys,), bool),
-              jnp.zeros((nsys,), jnp.int32), jnp.zeros((), jnp.int32))
-        z, _, _, _, conv, _, nni_s, nli_s = lax.while_loop(
+              jnp.zeros((nsys,), jnp.int32), jnp.zeros((), jnp.int32),
+              jnp.zeros((), jnp.int32))
+        z, _, _, _, conv, _, nni_s, nli_s, nps_s = lax.while_loop(
             nl_cond, nl_body, s0)
 
         # ---- local error test (LTE ~ (z - pred)/(q+1), uniform grid) ----
@@ -495,23 +522,25 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
             nni=c.nni + nni_s,
             nsetups=c.nsetups + need.astype(jnp.int32),
             ncfn=c.ncfn + ncf.astype(jnp.int32),
-            nli=c.nli + nli_s, stall=stall)
+            nli=c.nli + nli_s, nps=c.nps + nps_s, stall=stall)
 
     zero = jnp.zeros((nsys,), jnp.int32)
     Z0 = jnp.zeros((nsys, QMAX + 1, n), dtype).at[:, 0].set(y0)
     c = _BdfCarry(
         t=t0, h=h0, q=jnp.ones((nsys,), jnp.int32), Z=Z0,
         e1=jnp.ones((nsys,), dtype), e2=jnp.ones((nsys,), dtype),
-        MJ=jnp.zeros((n, n, nsys), dtype),
+        MJ=ls.soa_carry_init(n, nsys, dtype),
         gam_saved=jnp.zeros((nsys,), dtype), since_jac=zero,
         ncf_prev=jnp.zeros((nsys,), bool), steps=zero, att=zero,
         netf=zero, nni=zero, nsetups=zero, ncfn=zero,
-        nli=jnp.zeros((), jnp.int32), stall=jnp.zeros((nsys,), bool))
+        nli=jnp.zeros((), jnp.int32), nps=jnp.zeros((), jnp.int32),
+        stall=jnp.zeros((nsys,), bool))
     c = lax.while_loop(cond, body, c)
     return c.Z[:, 0], EnsembleStats(
         steps=c.steps, attempts=c.att, netf=c.netf, nni=c.nni,
         success=c.t >= tf * (1 - 1e-10), nsetups=c.nsetups, ncfn=c.ncfn,
-        nli=jnp.broadcast_to(c.nli, (nsys,)))
+        nli=jnp.broadcast_to(c.nli, (nsys,)),
+        npsolves=jnp.broadcast_to(c.nps, (nsys,)))
 
 
 def ensemble_bdf_integrate_sharded(f: Callable, jac: Callable,
@@ -584,6 +613,10 @@ def ensemble_bdf_integrate_sharded(f: Callable, jac: Callable,
         shard = y0.shape[0] // ndev
         st = st._replace(nli=jnp.broadcast_to(jnp.sum(st.nli[::shard]),
                                               st.nli.shape))
+    if st.npsolves is not None:
+        shard = y0.shape[0] // ndev
+        st = st._replace(npsolves=jnp.broadcast_to(
+            jnp.sum(st.npsolves[::shard]), st.npsolves.shape))
     if pad:
         y = y[:nsys]
         st = jax.tree_util.tree_map(lambda s: s[:nsys], st)

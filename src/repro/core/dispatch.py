@@ -251,6 +251,61 @@ def _pl_blockdiag_spmv_soa(A, x, *, policy: ExecPolicy):
                                    interpret=policy.interpret)
 
 
+# ---------------------------------------------------------------------------
+# Sparse ops (static shared patterns).  Patterns ride along as hashable
+# tuples — ``csr_spmv`` takes ``(indptr, indices)``, the BSR ops take
+# ``(brows, bcols, nblk)`` — so they key the kernel jit caches and the
+# structure is compiled into the program (SUNMATRIX_CUSPARSE's
+# store-the-pattern-once, with zero index arrays in device memory).
+# ---------------------------------------------------------------------------
+
+
+def _jnp_csr_spmv(data, x, pattern, *, policy=None):
+    from repro.kernels import ref as kref
+    indptr, indices = pattern
+    return kref.csr_spmv_ref(data, x, indptr, indices)
+
+
+def _pl_csr_spmv(data, x, pattern, *, policy: ExecPolicy):
+    from repro.kernels import ops as kops
+    indptr, indices = pattern
+    return kops.csr_spmv(data, x, indptr=tuple(indptr),
+                         indices=tuple(indices),
+                         block_elems=policy.block_elems,
+                         interpret=policy.interpret)
+
+
+def _jnp_bsr_spmv_soa(values, x, pattern, *, policy=None):
+    from repro.kernels import ref as kref
+    brows, bcols, nblk = pattern
+    return kref.bsr_spmv_soa_ref(values, x, brows, bcols, nblk)
+
+
+def _pl_bsr_spmv_soa(values, x, pattern, *, policy: ExecPolicy):
+    from repro.kernels import ops as kops
+    brows, bcols, nblk = pattern
+    return kops.bsr_spmv_soa(values, x, brows=tuple(brows),
+                             bcols=tuple(bcols), nblk=nblk,
+                             batch_tile=policy.batch_tile,
+                             interpret=policy.interpret)
+
+
+def _jnp_bsr_block_jacobi_inverse_soa(values, pattern, *, policy=None):
+    from repro.kernels import ref as kref
+    brows, bcols, nblk = pattern
+    return kref.bsr_diag_inverse_soa_ref(values, brows, bcols, nblk)
+
+
+def _pl_bsr_block_jacobi_inverse_soa(values, pattern, *,
+                                     policy: ExecPolicy):
+    from repro.kernels import ops as kops
+    brows, bcols, nblk = pattern
+    return kops.bsr_diag_inverse_soa(values, brows=tuple(brows),
+                                     bcols=tuple(bcols), nblk=nblk,
+                                     batch_tile=policy.batch_tile,
+                                     interpret=policy.interpret)
+
+
 def _ignore_policy(fn):
     @functools.wraps(fn)
     def wrapped(*args, policy=None):
@@ -288,6 +343,13 @@ OP_TABLE = {
                           "pallas": _pl_block_inverse_soa},
     "blockdiag_spmv_soa": {"jnp": _jnp_blockdiag_spmv_soa,
                            "pallas": _pl_blockdiag_spmv_soa},
+    # sparse matrices (static shared patterns)
+    "csr_spmv": {"jnp": _jnp_csr_spmv, "pallas": _pl_csr_spmv},
+    "bsr_spmv_soa": {"jnp": _jnp_bsr_spmv_soa,
+                     "pallas": _pl_bsr_spmv_soa},
+    "bsr_block_jacobi_inverse_soa": {
+        "jnp": _jnp_bsr_block_jacobi_inverse_soa,
+        "pallas": _pl_bsr_block_jacobi_inverse_soa},
 }
 
 
@@ -371,3 +433,26 @@ def blockdiag_spmv_soa(A: jnp.ndarray, x: jnp.ndarray,
                        policy: Optional[ExecPolicy] = None) -> jnp.ndarray:
     """y = blockdiag(A) @ x: A:(b,b,NB), x:(b,NB) -> (b,NB) (lsolve)."""
     return dispatch("blockdiag_spmv_soa", policy)(A, x)
+
+
+def csr_spmv(data: jnp.ndarray, x: jnp.ndarray, pattern,
+             policy: Optional[ExecPolicy] = None) -> jnp.ndarray:
+    """y = A @ x for a static-pattern CSR matrix: data:(nnz,), x:(m,),
+    pattern = (indptr, indices) hashable tuples."""
+    return dispatch("csr_spmv", policy)(data, x, pattern)
+
+
+def bsr_spmv_soa(values: jnp.ndarray, x: jnp.ndarray, pattern,
+                 policy: Optional[ExecPolicy] = None) -> jnp.ndarray:
+    """Ensemble shared-pattern BSR SpMV: values:(nnzb,b,b,NB),
+    x:(nblk,b,NB), pattern = (brows, bcols, nblk) -> y:(nblk,b,NB)."""
+    return dispatch("bsr_spmv_soa", policy)(values, x, pattern)
+
+
+def bsr_block_jacobi_inverse_soa(values: jnp.ndarray, pattern,
+                                 policy: Optional[ExecPolicy] = None
+                                 ) -> jnp.ndarray:
+    """Invert every diagonal block of the shared pattern (block-Jacobi
+    psetup): values:(nnzb,b,b,NB) -> (b,b,nblk*NB), block-major."""
+    return dispatch("bsr_block_jacobi_inverse_soa", policy)(values,
+                                                            pattern)

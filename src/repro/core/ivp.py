@@ -83,6 +83,12 @@ class IVP:
     fi  : implicit (stiff) part for IMEX methods
     jac : analytic Jacobian — required by the ``ensemble_dirk`` /
           ``ensemble_bdf`` methods (batched ``(t, y) -> (nsys, n, n)``)
+    jac_sparsity : static per-system Jacobian sparsity, an (n, n)
+          boolean/0-1 pattern shared by every ensemble member.  When
+          set, ``ensemble_bdf`` binds it to any ``lin_solver`` with a
+          sparse path (``EnsembleSparseGJ``, sparse Krylov): the
+          persistent Newton storage drops from O(n^2) to O(nnz) per
+          system and sparse kernels replace the dense sweeps.
     y0  : initial state pytree (``(nsys, n)`` for ensemble methods)
     """
 
@@ -90,6 +96,7 @@ class IVP:
     fe: Optional[Callable] = None
     fi: Optional[Callable] = None
     jac: Optional[Callable] = None
+    jac_sparsity: Optional[Any] = None
     y0: Pytree = None
 
     def __post_init__(self):
@@ -130,6 +137,9 @@ class Solution(NamedTuple):
     nsetups: Optional[jnp.ndarray]  # lsetup count (ensemble_bdf only)
     workspace_bytes: int           # this call's registered workspace
     high_water_bytes: int          # run-wide memory high-water (ctx.memory)
+    npsolves: Optional[jnp.ndarray] = None   # preconditioner applications
+    npsetups: Optional[jnp.ndarray] = None   # preconditioner setups (ride
+    #                                          the lsetup triggers)
 
 
 def _split(method: str):
@@ -186,6 +196,8 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
     fam, var = _split(method)
     nli = None
     nsetups = None
+    npsolves = None
+    npsetups = None
     # a solver object passed to a family that cannot consume it is an
     # error, not a silent no-op (Solution must never report a swap that
     # did not happen)
@@ -255,11 +267,20 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
         jac = _need(problem, "jac", method)
         y, st = batched.ensemble_bdf_integrate(
             f, jac, problem.y0, t0, tf, order=order, opts=opts,
-            policy=opts.policy, linear_solver=lin_solver, mem=mem,
+            policy=opts.policy, linear_solver=lin_solver,
+            jac_sparsity=problem.jac_sparsity, mem=mem,
             **method_kw)
         lname = lname or "blockdiag_gj"
         nli = st.nli[0] if st.nli is not None else None
         nsetups = st.nsetups
+        npsolves = st.npsolves[0] if st.npsolves is not None else None
+        # SUNDIALS accounting: psetup rides the lsetup triggers, so the
+        # setup count is the lsetup total whenever a psetup/psolve
+        # preconditioner is configured on the solver (same duck test
+        # the solver layer applies)
+        from .linsol import _is_precond_obj
+        if _is_precond_obj(getattr(lin_solver, "precond", None)):
+            npsetups = jnp.sum(st.nsetups)
     else:
         raise ValueError(
             f"unknown method {method!r}; families: erk, dirk, imex, bdf, "
@@ -285,4 +306,5 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
                     method=method, lin_solver=lname or "none",
                     nonlin_solver=nlname, nni=nni, nli=nli,
                     nsetups=nsetups, workspace_bytes=workspace,
-                    high_water_bytes=mem.high_water_bytes)
+                    high_water_bytes=mem.high_water_bytes,
+                    npsolves=npsolves, npsetups=npsetups)

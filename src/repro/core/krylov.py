@@ -11,7 +11,13 @@ sharding.
 All solvers accept:
   matvec  : v -> A v              (pytree -> pytree)
   b       : right-hand side pytree
-  precond : v -> M^{-1} v         (right preconditioning; identity default)
+  precond : v -> M^{-1} v         (right preconditioning; identity
+            default).  For pcg this is the one canonical SPD
+            preconditioner slot (z = M^{-1} r).
+  precond_left : v -> M_L^{-1} v  (LEFT preconditioning: the solver
+            iterates on M_L^{-1} A x = M_L^{-1} b — the SUNDIALS
+            PSol(..., lr=1) path the integrators' Preconditioner
+            objects use; pcg maps it onto its canonical slot)
   mem     : optional MemoryHelper — when given, the solver registers its
             workspace (Krylov basis / work vectors) for the run's
             high-water audit
@@ -22,7 +28,10 @@ SolveStats convention (identical across all five solvers)
 * ``res_norm``  : the TRUE unpreconditioned residual 2-norm
   ``||b - A x||_2`` evaluated at the returned ``x`` (one extra matvec at
   exit) — never the solver's internal recursive/rotation estimate, so
-  callers compare solvers without per-solver special cases.
+  callers compare solvers without per-solver special cases.  (With left
+  preconditioning the INNER iteration necessarily controls the
+  preconditioned residual, SUNDIALS semantics; the exit report is still
+  the unpreconditioned truth.)
 * ``converged`` : ``res_norm <= max(tol * ||b||_2, atol)`` under that
   same true residual, for every solver.
 * ``iters``     : inner iterations actually performed (not budgeted):
@@ -30,6 +39,12 @@ SolveStats convention (identical across all five solvers)
   (1 matvec), full BiCGStab iterations (2 matvecs), TFQMR outer
   iterations (~3 matvecs).  Early exit (breakdown, convergence
   mid-cycle) reports the true count.
+* ``npsolves``  : EXACT count of preconditioner applications (left and
+  right; 0 when unpreconditioned) — the SUNDIALS ``*GetNumPrecSolves``
+  counter the old stats silently dropped.
+* ``npsetups``  : preconditioner setups.  Always 0 here (psetup happens
+  in the LinearSolver layer, which owns the lsetup triggers); the field
+  exists so one stats type serves both layers.
 """
 from __future__ import annotations
 
@@ -48,15 +63,26 @@ from .policies import ExecPolicy, XLA_FUSED
 class SolveStats(NamedTuple):
     """Uniform solver stats — see the module docstring for the exact
     convention (true-residual ``res_norm``, shared ``converged`` test,
-    actual ``iters``)."""
+    actual ``iters``, exact ``npsolves``)."""
 
     iters: jnp.ndarray
     res_norm: jnp.ndarray
     converged: jnp.ndarray
+    npsolves: jnp.ndarray = 0
+    npsetups: jnp.ndarray = 0
 
 
 def _identity(v):
     return v
+
+
+def _left_wrap(matvec, b, precond_left):
+    """Left preconditioning: return (matvec', b', n_ml_initial) so the
+    caller iterates on M_L^{-1} A x = M_L^{-1} b.  The exit-time true
+    residual always uses the ORIGINAL matvec and b."""
+    if precond_left is None:
+        return matvec, b, 0
+    return (lambda v: precond_left(matvec(v))), precond_left(b), 1
 
 
 # ----------------------------------------------------------------------------
@@ -67,6 +93,7 @@ def _identity(v):
 def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
           atol: float = 0.0, restart: int = 30, max_restarts: int = 10,
           precond: Optional[Callable] = None,
+          precond_left: Optional[Callable] = None,
           policy: ExecPolicy = XLA_FUSED, flexible: bool = False,
           mem=None):
     """Restarted GMRES(m).  Solves A x = b with right preconditioning:
@@ -80,7 +107,10 @@ def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
     which is only equivalent when M is fixed for the whole solve.
     """
     M = precond or _identity
+    mv_in, b_in, ml = _left_wrap(matvec, b, precond_left)
+    mr = 1 if precond is not None else 0
     b_flat, unravel = ravel_pytree(b)
+    bin_flat = ravel_pytree(b_in)[0]
     n = b_flat.shape[0]
     dtype = b_flat.dtype
     m = min(restart, n)
@@ -101,17 +131,21 @@ def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
             else jnp.sqrt(dv.dot(a, a, policy))
 
     def mv_flat(v_flat):
-        out = matvec(M(unravel(v_flat)))
+        out = mv_in(M(unravel(v_flat)))
         return ravel_pytree(out)[0]
 
     x0_flat = jnp.zeros_like(b_flat) if x0 is None else ravel_pytree(x0)[0]
     bnorm = jnp.linalg.norm(b_flat)
     target = jnp.maximum(tol * bnorm, atol)
+    # left preconditioning: the inner iteration controls the
+    # PRECONDITIONED residual (SUNDIALS semantics); exit reporting below
+    # stays on the unpreconditioned truth.
+    target_in = jnp.maximum(tol * jnp.linalg.norm(bin_flat), atol)
 
     def cycle(carry):
         x, _, restarts, _, iters = carry
-        # x lives in solution space: true residual is b - A x.
-        r = b_flat - ravel_pytree(matvec(unravel(x)))[0]
+        # x lives in solution space: (inner) residual is M_L^{-1}(b - A x)
+        r = bin_flat - ravel_pytree(mv_in(unravel(x)))[0]
         beta = _norm(r)
         # Arnoldi with MGS + Givens
         V = jnp.zeros((m + 1, n), dtype=dtype)
@@ -128,7 +162,7 @@ def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
             if flexible:
                 zj = ravel_pytree(M(unravel(V[j])))[0]
                 Z = Z.at[j].set(zj)
-                w = ravel_pytree(matvec(unravel(zj)))[0]
+                w = ravel_pytree(mv_in(unravel(zj)))[0]
             else:
                 w = mv_flat(V[j])
             # modified Gram-Schmidt against all basis vectors (masked > j)
@@ -160,7 +194,7 @@ def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
             H = H.at[:, j].set(hcol)
             gj = g[j]
             g = g.at[j].set(c * gj).at[j + 1].set(-s * gj)
-            done = done | (jnp.abs(g[j + 1]) <= target) | (hj1 == 0.0)
+            done = done | (jnp.abs(g[j + 1]) <= target_in) | (hj1 == 0.0)
             return V, Z, H, cs, sn, g, done
 
         def arnoldi_cond_body(j, st):
@@ -197,24 +231,30 @@ def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
             dx_u = V[:m].T @ y
             x_new = x + ravel_pytree(M(unravel(dx_u)))[0]
         res = jnp.abs(g[m])  # estimate; exact residual recomputed in cond
-        return x_new, res, restarts + 1, res <= target, iters + nit
+        return x_new, res, restarts + 1, res <= target_in, iters + nit
 
     def cond(carry):
         x, res, restarts, conv, iters = carry
         return (~conv) & (restarts < max_restarts)
 
     x = x0_flat
-    r0 = b_flat - ravel_pytree(matvec(unravel(x)))[0]
+    r0 = bin_flat - ravel_pytree(mv_in(unravel(x)))[0]
     carry = (x, jnp.linalg.norm(r0), jnp.zeros((), jnp.int32),
-             jnp.linalg.norm(r0) <= target, jnp.zeros((), jnp.int32))
+             jnp.linalg.norm(r0) <= target_in, jnp.zeros((), jnp.int32))
     x, res, restarts, conv, iters = lax.while_loop(cond, cycle, carry)
     # uniform SolveStats convention: report the TRUE residual at exit
     # (the in-loop `res` is the Givens-rotation estimate).  Callers that
     # discard the stats (e.g. the integrators' Newton loops, which run
     # traced) pay nothing: the matvec is dead code and XLA eliminates it.
     rn = jnp.linalg.norm(b_flat - ravel_pytree(matvec(unravel(x)))[0])
+    # exact psolve count: (ml + mr) per Arnoldi step, ml per cycle
+    # (initial residual) plus — non-flexible only — mr per cycle (final
+    # correction), plus 2*ml pre-loop (M_L b and the initial residual).
+    nps = iters * (ml + mr) + \
+        restarts * (ml + (0 if flexible else mr)) + 2 * ml
     return unravel(x), SolveStats(iters=iters, res_norm=rn,
-                                  converged=rn <= target)
+                                  converged=rn <= target,
+                                  npsolves=nps)
 
 
 # ----------------------------------------------------------------------------
@@ -224,8 +264,20 @@ def gmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
 
 def pcg(matvec: Callable, b, x0=None, *, tol: float = 1e-8, atol: float = 0.0,
         maxiter: int = 200, precond: Optional[Callable] = None,
+        precond_left: Optional[Callable] = None,
         policy: ExecPolicy = XLA_FUSED, mem=None):
-    """Preconditioned CG for SPD systems."""
+    """Preconditioned CG for SPD systems.
+
+    CG has ONE canonical (SPD) preconditioner slot, ``z = M^{-1} r``;
+    ``precond_left`` is accepted for interface uniformity and maps onto
+    that same slot.  ``precond=None`` is plain CG: the identity is
+    substituted inline — bit-identical iterates to an explicit identity
+    ``precond`` — and ``npsolves`` stays 0 (identity applications are
+    not preconditioner work).
+    """
+    if precond is None and precond_left is not None:
+        precond = precond_left
+    mp = 1 if precond is not None else 0
     M = precond or _identity
     if mem is not None:
         mem.register("pcg.work", (4, nv.tree_size(b)),
@@ -259,7 +311,9 @@ def pcg(matvec: Callable, b, x0=None, *, tol: float = 1e-8, atol: float = 0.0,
     # uniform convention: true residual at exit, not the recursive one
     rt = dv.linear_sum(1.0, b, -1.0, matvec(x), policy)
     rn = jnp.sqrt(dv.dot(rt, rt, policy))
-    return x, SolveStats(iters=it, res_norm=rn, converged=rn <= target)
+    # exact psolve count: one z = M r before the loop, one per iteration
+    return x, SolveStats(iters=it, res_norm=rn, converged=rn <= target,
+                         npsolves=(it + 1) * mp)
 
 
 # ----------------------------------------------------------------------------
@@ -270,32 +324,39 @@ def pcg(matvec: Callable, b, x0=None, *, tol: float = 1e-8, atol: float = 0.0,
 def bicgstab(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
              atol: float = 0.0, maxiter: int = 200,
              precond: Optional[Callable] = None,
+             precond_left: Optional[Callable] = None,
              policy: ExecPolicy = XLA_FUSED, mem=None):
     M = precond or _identity
+    mr = 1 if precond is not None else 0
+    mv_in, b_in, ml = _left_wrap(matvec, b, precond_left)
     if mem is not None:
         mem.register("spbcgs.work", (8, nv.tree_size(b)),
                      jnp.result_type(*jax.tree_util.tree_leaves(b)))
     x = x0 if x0 is not None else nv.const_like(0.0, b)
-    r = dv.linear_sum(1.0, b, -1.0, matvec(x), policy)
+    r = dv.linear_sum(1.0, b_in, -1.0, mv_in(x), policy)
     rhat = r
     rho = dv.dot(rhat, r, policy)
     p = r
     bnorm = jnp.sqrt(dv.dot(b, b, policy))
     target = jnp.maximum(tol * bnorm, atol)
+    # inner loop controls the (left-)preconditioned residual
+    target_in = jnp.maximum(tol * jnp.sqrt(dv.dot(b_in, b_in, policy)),
+                            atol)
 
     def cond(c):
         x, r, p, rho, it, brk = c
-        return (jnp.sqrt(dv.dot(r, r, policy)) > target) & (it < maxiter) & (~brk)
+        return (jnp.sqrt(dv.dot(r, r, policy)) > target_in) & \
+            (it < maxiter) & (~brk)
 
     def body(c):
         x, r, p, rho, it, brk = c
         ph = M(p)
-        v = matvec(ph)
+        v = mv_in(ph)
         denom = dv.dot(rhat, v, policy)
         alpha = rho / jnp.where(denom != 0, denom, 1.0)
         s = dv.axpy(-alpha, v, r, policy)
         sh = M(s)
-        t = matvec(sh)
+        t = mv_in(sh)
         tt = dv.dot(t, t, policy)
         omega = dv.dot(t, s, policy) / jnp.where(tt != 0, tt, 1.0)
         x_new = dv.linear_combination([1.0, alpha, omega], [x, ph, sh],
@@ -331,7 +392,10 @@ def bicgstab(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
     # uniform convention: true residual at exit, not the recursive one
     rt = dv.linear_sum(1.0, b, -1.0, matvec(x), policy)
     rn = jnp.sqrt(dv.dot(rt, rt, policy))
-    return x, SolveStats(iters=it, res_norm=rn, converged=rn <= target)
+    # exact psolve count: 2 right (ph, sh) + 2 left (inside each of the
+    # two matvecs) per iteration, plus 2*ml pre-loop (M_L b + residual)
+    return x, SolveStats(iters=it, res_norm=rn, converged=rn <= target,
+                         npsolves=it * 2 * (mr + ml) + 2 * ml)
 
 
 # ----------------------------------------------------------------------------
@@ -342,17 +406,20 @@ def bicgstab(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
 def tfqmr(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
           atol: float = 0.0, maxiter: int = 200,
           precond: Optional[Callable] = None,
+          precond_left: Optional[Callable] = None,
           policy: ExecPolicy = XLA_FUSED, mem=None):
     M = precond or _identity
+    mr = 1 if precond is not None else 0
+    mv_in, b_in, ml = _left_wrap(matvec, b, precond_left)
     if mem is not None:
         mem.register("sptfqmr.work", (7, nv.tree_size(b)),
                      jnp.result_type(*jax.tree_util.tree_leaves(b)))
 
     def amv(v):
-        return matvec(M(v))
+        return mv_in(M(v))
 
     u = x0 if x0 is not None else nv.const_like(0.0, b)
-    r0 = dv.linear_sum(1.0, b, -1.0, matvec(u), policy)
+    r0 = dv.linear_sum(1.0, b_in, -1.0, mv_in(u), policy)
     w = r0
     y = r0
     v = amv(y)
@@ -367,10 +434,13 @@ def tfqmr(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
     rho = dv.dot(r0, r0, policy)
     bnorm = jnp.sqrt(dv.dot(b, b, policy))
     target = jnp.maximum(tol * bnorm, atol)
+    # tau tracks the (left-)preconditioned residual estimate
+    target_in = jnp.maximum(tol * jnp.sqrt(dv.dot(b_in, b_in, policy)),
+                            atol)
 
     def cond(c):
         (u, w, y, v, d, tau, theta, eta, rho, it, brk) = c
-        return (tau > target) & (it < maxiter) & (~brk)
+        return (tau > target_in) & (it < maxiter) & (~brk)
 
     def body(c):
         (u, w, y, v, d, tau, theta, eta, rho, it, brk) = c
@@ -410,12 +480,18 @@ def tfqmr(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
     x = M(u) if precond is not None else u
     r = dv.linear_sum(1.0, b, -1.0, matvec(x), policy)
     rn = jnp.sqrt(dv.dot(r, r, policy))
-    return x, SolveStats(iters=it, res_norm=rn, converged=rn <= target)
+    # exact psolve count — right: 4 amv per iteration + the initial
+    # v = amv(y) + the final x = M u; left: those same amv calls plus
+    # M_L b and the initial residual's matvec.
+    nps = it * 4 * (mr + ml) + mr * 2 + ml * 3
+    return x, SolveStats(iters=it, res_norm=rn, converged=rn <= target,
+                         npsolves=nps)
 
 
 def fgmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
            atol: float = 0.0, restart: int = 30, max_restarts: int = 10,
            precond: Optional[Callable] = None,
+           precond_left: Optional[Callable] = None,
            policy: ExecPolicy = XLA_FUSED, mem=None):
     """Flexible GMRES (SUNDIALS SPFGMR): stores the preconditioned basis
     Z[j] = M^{-1} v_j and assembles the correction as Z y, so the
@@ -423,5 +499,6 @@ def fgmres(matvec: Callable, b, x0=None, *, tol: float = 1e-8,
     :func:`gmres`, which applies a (necessarily fixed) M once to the
     assembled correction."""
     return gmres(matvec, b, x0, tol=tol, atol=atol, restart=restart,
-                 max_restarts=max_restarts, precond=precond, policy=policy,
+                 max_restarts=max_restarts, precond=precond,
+                 precond_left=precond_left, policy=policy,
                  flexible=True, mem=mem)

@@ -28,12 +28,18 @@ dot_prod_multi        vector.dot_prod_multi           vecops multi_dot_partial
 block_solve_soa       direct.gauss_jordan_batched     block_solve GJ kernel
 block_inverse_soa     ref.block_inverse_soa_ref       block_solve GJ inverse
 blockdiag_spmv_soa    jnp.einsum                      blockdiag_spmv kernel
+csr_spmv              segment_sum                     sparse ELL gather kernel
+bsr_spmv_soa          einsum+segment_sum              sparse unrolled-pattern
+bsr_block_jacobi_     jnp.linalg.inv                  static diag gather +
+inverse_soa                                           GJ inverse kernel
 ====================  ==============================  =======================
 
-The three ``*_soa`` entries are the ensemble (batched-BDF) linear
-algebra: the system batch rides the 128-wide lane axis and
-``batch_tile`` sets how many systems one grid program owns — the TPU
-analog of the paper's CUDA-stream bundle size.
+The ``*_soa`` entries are the ensemble (batched-BDF) linear algebra:
+the system batch rides the 128-wide lane axis and ``batch_tile`` sets
+how many systems one grid program owns — the TPU analog of the paper's
+CUDA-stream bundle size.  The sparse entries carry their static
+pattern as hashable tuples (see :mod:`repro.core.sunmatrix`), so the
+structure is compiled into the program.
 
 Integrators thread the policy via ``ODEOptions(policy=...)``; Krylov and
 Newton solvers take a ``policy=`` kwarg; :class:`MeshVectorSpec` carries

@@ -1,0 +1,273 @@
+"""Preconditioners — the PSetup/PSolve plug-in point (SUNDIALS §"Enabling
+New Flexibility": user-supplied preconditioning is a first-class
+interface, not a solver detail).
+
+A :class:`Preconditioner` exposes two surfaces, mirroring the
+``LinearSolver`` split:
+
+**Scalar** (single system; used by ``SPGMR(precond=...).bind``):
+
+* ``psetup(t, y, gamma, policy=None) -> pdata`` — build the
+  preconditioner data for the Newton matrix ``M = I - gamma*J`` at the
+  current iterate (called at each lin_solve, the PSetup moment);
+* ``psolve(pdata, r, policy=None) -> z`` — apply ``P^{-1} r`` on the
+  raveled (n,) residual.
+
+**Ensemble SoA** (used by the ``ensemble_bdf`` Krylov path; setup runs
+at CVODE's lsetup triggers, so psetup counts ride ``nsetups``):
+
+* ``soa_psetup(vals, pattern, gamma, policy=None) -> pdata`` where the
+  Newton matrix arrives either dense (``vals: (n, n, nsys)``,
+  ``pattern=None``) or as shared-pattern CSR values
+  (``vals: (nnz, nsys)``, ``pattern=(indptr, indices)``);
+* ``soa_psolve(pdata, r, policy=None) -> z`` with ``r: (n, nsys)``;
+* ``soa_pdata_init(n, nsys, dtype)`` — zero pdata for the integrator
+  carry (every leaf keeps the ``nsys`` lane axis LAST so the masked
+  per-system carry update broadcasts).
+
+Implementations:
+
+=================  ========================================================
+JacobiPrecond      diagonal of M (the cheapest; exact for decoupled systems)
+BlockJacobiPrecond b x b diagonal blocks of M, inverted once per psetup via
+                   the batched GJ inverse kernel (reuses
+                   ``block_inverse_soa`` over the flattened nblk*nsys batch)
+ILU0Precond        incomplete LU with zero fill on the shared CSR pattern
+                   (exact LU whenever the pattern's elimination has no
+                   fill-in, e.g. tridiagonal)
+=================  ========================================================
+
+All are frozen dataclasses (hashable, safe inside ``lax.while_loop``).
+Preconditioner applications are counted by the Krylov solvers in
+``SolveStats.npsolves``; setups surface as ``Solution.npsetups``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import dispatch as dv
+from . import spsolve
+from .sunmatrix import csr_diag_positions as _csr_diag_positions
+
+
+class Preconditioner:
+    """Base protocol; see the module docstring for the two surfaces."""
+
+    name = "precond"
+
+    # -- scalar surface ----------------------------------------------------
+    def psetup(self, t, y, gamma, policy=None):
+        raise NotImplementedError(
+            f"{type(self).__name__} has no scalar psetup")
+
+    def psolve(self, pdata, r, policy=None):
+        raise NotImplementedError
+
+    # -- ensemble SoA surface ----------------------------------------------
+    def soa_psetup(self, vals, pattern, gamma, policy=None):
+        raise NotImplementedError(
+            f"{type(self).__name__} has no ensemble psetup")
+
+    def soa_psolve(self, pdata, r, policy=None):
+        raise NotImplementedError
+
+    def soa_pdata_init(self, n, nsys, dtype):
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class JacobiPrecond(Preconditioner):
+    """Diagonal (point-Jacobi) preconditioner: P = diag(M).
+
+    ``jac_diag(t, y) -> (n,)`` supplies the Jacobian diagonal for the
+    scalar surface (matrix-free integrators cannot extract it); the
+    ensemble surface reads it from the Newton matrix directly.
+    """
+
+    name = "jacobi"
+    jac_diag: Optional[Callable] = None
+
+    def psetup(self, t, y, gamma, policy=None):
+        if self.jac_diag is None:
+            raise ValueError("scalar JacobiPrecond needs jac_diag=")
+        d = 1.0 - gamma * self.jac_diag(t, y)
+        return 1.0 / d
+
+    def psolve(self, pdata, r, policy=None):
+        return pdata * r
+
+    def soa_psetup(self, vals, pattern, gamma, policy=None):
+        if pattern is None:
+            n = vals.shape[0]
+            idx = jnp.arange(n)
+            d = vals[idx, idx]                       # (n, nsys)
+        else:
+            indptr, indices = pattern
+            d = vals[jnp.asarray(_csr_diag_positions(indptr, indices))]
+        return 1.0 / d
+
+    def soa_psolve(self, pdata, r, policy=None):
+        return pdata * r
+
+    def soa_pdata_init(self, n, nsys, dtype):
+        return jnp.zeros((n, nsys), dtype)
+
+
+@dataclass(frozen=True)
+class BlockJacobiPrecond(Preconditioner):
+    """Block-Jacobi: invert the ``b x b`` diagonal blocks of M once per
+    psetup (one batched GJ-inverse over the flattened ``nblk * nsys``
+    batch — the ``block_inverse_soa`` kernel the direct ensemble solver
+    already uses); psolve is one block-diagonal SpMV.
+
+    For ensemble problems whose per-system size equals ``block_size``
+    this is an exact solve, and a preconditioned Krylov method
+    converges in one inner iteration (a useful correctness probe).
+    ``jac(t, y) -> (n, n)`` supplies the dense Jacobian on the scalar
+    surface.
+    """
+
+    name = "block_jacobi"
+    block_size: int = 1
+    jac: Optional[Callable] = None
+
+    def psetup(self, t, y, gamma, policy=None):
+        if self.jac is None:
+            raise ValueError("scalar BlockJacobiPrecond needs jac=")
+        J = self.jac(t, y)
+        n = J.shape[0]
+        b = self.block_size
+        nblk = n // b
+        Jb = J.reshape(nblk, b, nblk, b)
+        D = jnp.eye(b)[None] - gamma * \
+            Jb[jnp.arange(nblk), :, jnp.arange(nblk), :]
+        return jnp.linalg.inv(D)                     # (nblk, b, b)
+
+    def psolve(self, pdata, r, policy=None):
+        nblk, b, _ = pdata.shape
+        return jnp.einsum("nij,nj->ni", pdata,
+                          r.reshape(nblk, b)).reshape(-1)
+
+    # -- ensemble ----------------------------------------------------------
+    def _diag_block_values(self, vals, pattern, n, nsys):
+        """(nblk, b, b, nsys) diagonal-block values of M."""
+        b = self.block_size
+        nblk = n // b
+        if pattern is None:
+            V5 = vals.reshape(nblk, b, nblk, b, nsys)
+            return V5[jnp.arange(nblk), :, jnp.arange(nblk), :, :]
+        # static pattern -> precompute every in-diagonal-block slot on
+        # the host and scatter them in ONE vectorized update
+        indptr, indices = pattern
+        Is, bis, bjs, ks = [], [], [], []
+        for i in range(n):
+            I, bi = divmod(i, b)
+            for k in range(indptr[i], indptr[i + 1]):
+                J_, bj = divmod(indices[k], b)
+                if J_ == I:
+                    Is.append(I)
+                    bis.append(bi)
+                    bjs.append(bj)
+                    ks.append(k)
+        D = jnp.zeros((nblk, b, b, nsys), vals.dtype)
+        return D.at[jnp.asarray(Is), jnp.asarray(bis),
+                    jnp.asarray(bjs)].set(vals[jnp.asarray(ks)])
+
+    def soa_psetup(self, vals, pattern, gamma, policy=None):
+        n = vals.shape[0] if pattern is None else len(pattern[0]) - 1
+        nsys = vals.shape[-1]
+        b = self.block_size
+        nblk = n // b
+        D = self._diag_block_values(vals, pattern, n, nsys)
+        diag_pat = (tuple(range(nblk)), tuple(range(nblk)), nblk)
+        inv = dv.bsr_block_jacobi_inverse_soa(
+            D.reshape(nblk, b, b, nsys), diag_pat, policy)
+        # carry layout: keep the nsys lane axis last and separate
+        return inv.reshape(b, b, nblk, nsys)
+
+    def soa_psolve(self, pdata, r, policy=None):
+        b, _, nblk, nsys = pdata.shape
+        r_soa = r.reshape(nblk, b, nsys).transpose(1, 0, 2) \
+            .reshape(b, nblk * nsys)
+        z = dv.blockdiag_spmv_soa(pdata.reshape(b, b, nblk * nsys),
+                                  r_soa, policy)
+        return z.reshape(b, nblk, nsys).transpose(1, 0, 2) \
+            .reshape(nblk * b, nsys)
+
+    def soa_pdata_init(self, n, nsys, dtype):
+        b = self.block_size
+        return jnp.zeros((b, b, n // b, nsys), dtype)
+
+
+@functools.lru_cache(maxsize=64)
+def _ilu0_plan(indptr: tuple, indices: tuple) -> spsolve.LUPlan:
+    """ILU(0) symbolic phase: no reordering, no fill — the factored
+    pattern IS the matrix pattern, updates outside it are dropped."""
+    return spsolve.symbolic_lu(indptr, indices, order=False, fill=False)
+
+
+@dataclass(frozen=True)
+class ILU0Precond(Preconditioner):
+    """Incomplete LU with zero fill on the shared CSR pattern.
+
+    ``sparsity`` is the static pattern — an encoded ``(indptr,
+    indices)`` pair or anything :func:`repro.core.spsolve.
+    encode_pattern` accepts.  The symbolic phase runs once per pattern
+    (host, cached); each psetup is a numeric refactor unrolled over the
+    pattern, elementwise across the ensemble lanes.  ``jac(t, y) ->
+    (n, n)`` supplies the dense Jacobian on the scalar surface.
+    """
+
+    name = "ilu0"
+    sparsity: Optional[tuple] = None
+    jac: Optional[Callable] = None
+
+    def __post_init__(self):
+        if self.sparsity is not None and not (
+                isinstance(self.sparsity, tuple)
+                and len(self.sparsity) == 2
+                and isinstance(self.sparsity[0], tuple)):
+            object.__setattr__(self, "sparsity",
+                               spsolve.encode_pattern(self.sparsity))
+
+    def with_sparsity(self, enc) -> "ILU0Precond":
+        import dataclasses
+        return self if self.sparsity is not None else \
+            dataclasses.replace(self, sparsity=enc)
+
+    def _plan(self) -> spsolve.LUPlan:
+        if self.sparsity is None:
+            raise ValueError("ILU0Precond needs sparsity= (or a "
+                             "jac_sparsity on the problem)")
+        return _ilu0_plan(*self.sparsity)
+
+    def psetup(self, t, y, gamma, policy=None):
+        if self.jac is None:
+            raise ValueError("scalar ILU0Precond needs jac=")
+        plan = self._plan()
+        J = self.jac(t, y)
+        M = jnp.eye(J.shape[0], dtype=J.dtype) - gamma * J
+        return spsolve.numeric_lu(plan, spsolve.gather_filled(plan, M))
+
+    def psolve(self, pdata, r, policy=None):
+        return spsolve.lu_solve(self._plan(), pdata, r)
+
+    def soa_psetup(self, vals, pattern, gamma, policy=None):
+        plan = self._plan()
+        if pattern is None:
+            vals0 = spsolve.gather_filled(plan, vals)
+        else:
+            vals0 = spsolve.scatter_from_csr(plan, pattern[0],
+                                             pattern[1], vals)
+        return spsolve.numeric_lu(plan, vals0)
+
+    def soa_psolve(self, pdata, r, policy=None):
+        return spsolve.lu_solve(self._plan(), pdata, r)
+
+    def soa_pdata_init(self, n, nsys, dtype):
+        return jnp.zeros((self._plan().nnz_factored, nsys), dtype)

@@ -44,3 +44,72 @@ def batched_robertson(nsys: int):
     y0 = jnp.concatenate([jnp.ones((nsys, 1)), jnp.zeros((nsys, 2))],
                          axis=1)
     return f, jac, y0
+
+
+def ensemble_brusselator(nsys: int, nx: int = 16, du: float = 0.02,
+                         dv: float = 0.02, a: float = 1.0):
+    """An ensemble of 1-D Brusselator reaction-diffusion systems — the
+    sparse-Jacobian submodel workload (arXiv:2405.01713's many-
+    independent-ODE-systems regime with *banded* per-system Jacobians).
+
+    Each of the ``nsys`` members is the classic 2-species Brusselator
+    on ``nx`` cells (no-flux boundaries), with a per-member reaction
+    parameter ``b`` spanning the oscillatory threshold, so stiffness
+    varies across the ensemble.  State layout is interleaved
+    ``[u_0, v_0, u_1, v_1, ...]`` (n = 2*nx), which makes the Jacobian
+    banded: dense 2x2 reaction blocks on the diagonal plus
+    species-diagonal Laplacian coupling to the neighbor cells —
+    fill fraction ~ 4/nx, the exploit-the-sparsity regime.
+
+    Returns ``(f, jac, jac_sparsity, y0)``: batched RHS/Jacobian in the
+    ensemble convention (``(t:(nsys,), y:(nsys, n))``), the static
+    (n, n) boolean pattern, and a perturbed near-steady start.
+    """
+    n = 2 * nx
+    bpar = jnp.linspace(1.8, 3.2, nsys)
+    h2 = 1.0 / ((1.0 / max(nx, 2)) ** 2)
+
+    def lap(w):                       # (nsys, nx), no-flux (reflecting)
+        wl = jnp.concatenate([w[:, :1], w[:, :-1]], axis=1)
+        wr = jnp.concatenate([w[:, 1:], w[:, -1:]], axis=1)
+        return (wl - 2.0 * w + wr) * h2
+
+    def f(t, y):                      # y: (nsys, 2*nx)
+        u, v = y[:, 0::2], y[:, 1::2]
+        uv2 = u * u * v
+        fu = a - (bpar[:, None] + 1.0) * u + uv2 + du * lap(u)
+        fv = bpar[:, None] * u - uv2 + dv * lap(v)
+        return jnp.stack([fu, fv], axis=2).reshape(y.shape[0], n)
+
+    def f_single(t1, y1, b1):
+        u, v = y1[0::2], y1[1::2]
+        ul = jnp.concatenate([u[:1], u[:-1]])
+        ur = jnp.concatenate([u[1:], u[-1:]])
+        vl = jnp.concatenate([v[:1], v[:-1]])
+        vr = jnp.concatenate([v[1:], v[-1:]])
+        uv2 = u * u * v
+        fu = a - (b1 + 1.0) * u + uv2 + du * (ul - 2.0 * u + ur) * h2
+        fv = b1 * u - uv2 + dv * (vl - 2.0 * v + vr) * h2
+        return jnp.stack([fu, fv], axis=1).reshape(n)
+
+    def jac(t, y):
+        # per-member dense (n, n) Jacobians; ensemble BDF compresses
+        # them to the banded pattern at lsetup when jac_sparsity is set
+        tb = jnp.broadcast_to(jnp.asarray(t), (y.shape[0],))
+        return jax.vmap(lambda t1, y1, b1: jax.jacfwd(
+            lambda yy: f_single(t1, yy, b1))(y1))(tb, y, bpar)
+
+    import numpy as np
+    P = np.zeros((n, n), bool)
+    for i in range(nx):
+        P[2 * i:2 * i + 2, 2 * i:2 * i + 2] = True    # reaction block
+        for j in (i - 1, i + 1):                      # Laplacian coupling
+            if 0 <= j < nx:
+                P[2 * i, 2 * j] = True                # u_i <- u_j
+                P[2 * i + 1, 2 * j + 1] = True        # v_i <- v_j
+    x = jnp.linspace(0.0, 1.0, nx)
+    u0 = a + 0.1 * jnp.sin(2 * jnp.pi * x)
+    v0 = (bpar / a)[:, None] + 0.1 * jnp.cos(2 * jnp.pi * x)[None, :]
+    y0 = jnp.stack([jnp.broadcast_to(u0, (nsys, nx)), v0],
+                   axis=2).reshape(nsys, n)
+    return f, jac, P, y0

@@ -1,0 +1,304 @@
+"""Sparse SUNMatrix analogs: scalar CSR and ensemble shared-pattern BSR.
+
+The paper's GPU matrix is ``SUNMATRIX_CUSPARSE``: CSR, plus a
+*block-diagonal/block-sparse* variant where every block of the batched
+Newton matrix shares one sparsity pattern so the integer index arrays
+are stored exactly once for the whole ensemble.  These are the JAX/TPU
+analogs:
+
+* :class:`SparseCSR` — one sparse matrix; the pattern
+  (``indptr``/``indices``) is **static** (hashable tuples), only
+  ``data`` is traced.  One jit cache entry per pattern — the
+  store-the-pattern-once economics, taken to its TPU conclusion where
+  the pattern lives in the compiled program, not in device memory.
+* :class:`EnsembleBSR` — ``nsys`` block-sparse matrices sharing one
+  block pattern, values ``(nsys, nnzb, b, b)`` (SoA across the
+  ensemble; :meth:`values_soa` exposes the lane-major kernel layout).
+  Built from an :attr:`repro.core.ivp.IVP.jac_sparsity` pattern so the
+  ensemble BDF pipeline materializes only the nonzero blocks.
+
+Both types implement ``scale_addI`` — SUNDIALS' ``SUNMatScaleAddI``
+(``A <- c*A + I``), the in-place Newton update ``M = I - gamma*J`` done
+on values only with the pattern reused (the diagonal must be in the
+pattern; the constructors guarantee it when ``ensure_diag=True``).
+
+SpMV routes through :mod:`repro.core.dispatch` (``csr_spmv`` /
+``bsr_spmv_soa``) so the ExecPolicy picks the jnp oracle or the Pallas
+kernel exactly like the vector ops.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def csr_pattern_from_dense(A, tol: float = 0.0,
+                           ensure_diag: bool = False) -> Tuple[tuple, tuple]:
+    """Static (indptr, indices) tuples from a concrete (host) matrix."""
+    An = np.asarray(A)
+    n, m = An.shape
+    keep = np.abs(An) > tol
+    if ensure_diag:
+        for i in range(min(n, m)):
+            keep[i, i] = True
+    indptr, indices = [0], []
+    for i in range(n):
+        cols = np.nonzero(keep[i])[0]
+        indices.extend(int(c) for c in cols)
+        indptr.append(len(indices))
+    return tuple(indptr), tuple(indices)
+
+
+def csr_diag_positions(indptr, indices) -> tuple:
+    """Static nnz slot of entry (i, i) per row of a CSR pattern; raises
+    if any diagonal entry is absent (the Newton/ScaleAddI contract)."""
+    pos = []
+    for i in range(len(indptr) - 1):
+        hits = [k for k in range(indptr[i], indptr[i + 1])
+                if indices[k] == i]
+        if not hits:
+            raise ValueError(
+                f"CSR pattern lacks diagonal entry ({i},{i}); build "
+                "with ensure_diag=True for SUNMatScaleAddI use")
+        pos.append(hits[0])
+    return tuple(pos)
+
+
+def block_pattern_from_element(pattern, block_size: int,
+                               ensure_diag: bool = True
+                               ) -> Tuple[tuple, tuple, int]:
+    """Collapse an elementwise (n, n) sparsity pattern to a block
+    pattern ``(brows, bcols, nblk)`` with ``b = block_size`` blocks —
+    a block is nonzero iff ANY of its b*b entries is.  Row-major block
+    order (the CSR-of-blocks convention)."""
+    P = np.asarray(pattern).astype(bool)
+    n = P.shape[0]
+    assert P.shape == (n, n) and n % block_size == 0, (P.shape, block_size)
+    nblk = n // block_size
+    Pb = P.reshape(nblk, block_size, nblk, block_size).any(axis=(1, 3))
+    if ensure_diag:
+        np.fill_diagonal(Pb, True)
+    br, bc = np.nonzero(Pb)
+    return (tuple(int(i) for i in br), tuple(int(j) for j in bc), nblk)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class SparseCSR:
+    """CSR matrix with a static pattern: ``data`` traced, structure
+    (``indptr``/``indices``/``shape``) hashable aux data."""
+
+    data: jnp.ndarray          # (nnz,)
+    indptr: tuple              # (nrows + 1,) static
+    indices: tuple             # (nnz,) static
+    shape: tuple               # (nrows, ncols)
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.data,), (self.indptr, self.indices, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_dense(cls, A, tol: float = 0.0,
+                   ensure_diag: bool = False) -> "SparseCSR":
+        """Compress a dense matrix.  ``A`` may be traced IF a concrete
+        twin determines the pattern — here the pattern is read from
+        ``A`` itself, so ``A`` must be concrete (host-side setup, the
+        SUNSparseFromDenseMatrix moment)."""
+        indptr, indices = csr_pattern_from_dense(np.asarray(A), tol,
+                                                 ensure_diag)
+        Aj = jnp.asarray(A)
+        rows = np.repeat(np.arange(len(indptr) - 1), np.diff(indptr))
+        data = Aj[jnp.asarray(rows), jnp.asarray(np.asarray(indices,
+                                                            np.int64))]
+        return cls(data, indptr, indices, tuple(np.asarray(A).shape))
+
+    @classmethod
+    def from_pattern(cls, indptr, indices, shape, data=None,
+                     dtype=jnp.float64) -> "SparseCSR":
+        indptr, indices = tuple(int(i) for i in indptr), \
+            tuple(int(i) for i in indices)
+        if data is None:
+            data = jnp.zeros((len(indices),), dtype)
+        return cls(jnp.asarray(data), indptr, indices, tuple(shape))
+
+    # -- structure ---------------------------------------------------------
+    @property
+    def nnz(self) -> int:
+        return len(self.indices)
+
+    @property
+    def pattern(self) -> Tuple[tuple, tuple]:
+        return (self.indptr, self.indices)
+
+    def _diag_positions(self) -> tuple:
+        return csr_diag_positions(self.indptr, self.indices)
+
+    # -- ops (SUNMatScaleAdd / ScaleAddI / Matvec) -------------------------
+    def scale_add(self, c, B: "SparseCSR") -> "SparseCSR":
+        """A <- c*A + B; B must share the pattern (SUNMatScaleAdd's
+        fast path — the only one a shared static pattern permits)."""
+        assert B.pattern == self.pattern, "patterns must match"
+        return SparseCSR(c * self.data + B.data, self.indptr,
+                         self.indices, self.shape)
+
+    def scale_addI(self, c) -> "SparseCSR":
+        """A <- c*A + I in place on values, pattern reused — the Newton
+        update ``M = I - gamma*J`` is ``J.scale_addI(-gamma)``."""
+        diag = jnp.asarray(self._diag_positions())
+        data = c * self.data
+        data = data.at[diag].add(jnp.ones((), data.dtype))
+        return SparseCSR(data, self.indptr, self.indices, self.shape)
+
+    def matvec(self, x: jnp.ndarray, policy=None) -> jnp.ndarray:
+        from . import dispatch as dv
+        return dv.csr_spmv(self.data, x, self.pattern, policy)
+
+    def to_dense(self) -> jnp.ndarray:
+        rows = np.repeat(np.arange(self.shape[0]),
+                         np.diff(np.asarray(self.indptr)))
+        out = jnp.zeros(self.shape, self.data.dtype)
+        return out.at[jnp.asarray(rows),
+                      jnp.asarray(np.asarray(self.indices,
+                                             np.int64))].set(self.data)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class EnsembleBSR:
+    """``nsys`` block-sparse matrices sharing ONE block pattern.
+
+    values : (nsys, nnzb, b, b) — only the nonzero blocks, SoA across
+             the ensemble (:meth:`values_soa` gives the lane-major
+             kernel layout ``(nnzb, b, b, nsys)``)
+    brows / bcols : static block pattern (row-major block order)
+    nblk   : block rows per system (n = nblk * b)
+    """
+
+    values: jnp.ndarray
+    brows: tuple
+    bcols: tuple
+    nblk: int
+
+    def tree_flatten(self):
+        return (self.values,), (self.brows, self.bcols, self.nblk)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_sparsity(cls, pattern, block_size: int, nsys: int,
+                      dtype=jnp.float64) -> "EnsembleBSR":
+        """Allocate zero values for an elementwise ``jac_sparsity``
+        pattern — only the nonzero blocks are materialized (the
+        diagonal blocks are always included for scale_addI)."""
+        brows, bcols, nblk = block_pattern_from_element(pattern, block_size)
+        values = jnp.zeros((nsys, len(brows), block_size, block_size),
+                           dtype)
+        return cls(values, brows, bcols, nblk)
+
+    @classmethod
+    def from_dense(cls, J: jnp.ndarray, block_size: int,
+                   pattern=None) -> "EnsembleBSR":
+        """Compress dense per-system Jacobians ``J: (nsys, n, n)``.
+        ``pattern`` is the elementwise sparsity; if omitted, ``J`` must
+        be concrete and the union pattern over systems is used."""
+        nsys, n, _ = J.shape
+        if pattern is None:
+            pattern = np.any(np.abs(np.asarray(J)) > 0, axis=0)
+        brows, bcols, nblk = block_pattern_from_element(pattern, block_size)
+        values = cls._gather_blocks(jnp.asarray(J), brows, bcols,
+                                    block_size)
+        return cls(values, brows, bcols, nblk)
+
+    @staticmethod
+    def _gather_blocks(J: jnp.ndarray, brows, bcols,
+                       b: int) -> jnp.ndarray:
+        """(nsys, n, n) -> (nsys, nnzb, b, b) at the static positions
+        (works on traced J: the gather indices are static)."""
+        nsys, n, _ = J.shape
+        nblk = n // b
+        Jb = J.reshape(nsys, nblk, b, nblk, b).transpose(0, 1, 3, 2, 4)
+        return Jb[:, jnp.asarray(brows), jnp.asarray(bcols)]
+
+    # -- structure ---------------------------------------------------------
+    @property
+    def nnz_blocks(self) -> int:
+        return len(self.brows)
+
+    @property
+    def block_size(self) -> int:
+        return self.values.shape[-1]
+
+    @property
+    def nsys(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def shape(self):
+        n = self.nblk * self.block_size
+        return (self.nsys, n, n)
+
+    @property
+    def values_soa(self) -> jnp.ndarray:
+        """Lane-major kernel layout: (nnzb, b, b, nsys)."""
+        return jnp.transpose(self.values, (1, 2, 3, 0))
+
+    @property
+    def block_pattern(self) -> Tuple[tuple, tuple, int]:
+        return (self.brows, self.bcols, self.nblk)
+
+    def _diag_block_positions(self) -> tuple:
+        pos = []
+        for I in range(self.nblk):
+            hits = [e for e, (i, j) in enumerate(zip(self.brows,
+                                                     self.bcols))
+                    if i == I and j == I]
+            if not hits:
+                raise ValueError(
+                    f"block pattern lacks diagonal block ({I},{I})")
+            pos.append(hits[0])
+        return tuple(pos)
+
+    # -- ops ---------------------------------------------------------------
+    def scale_addI(self, c) -> "EnsembleBSR":
+        """A_s <- c_s * A_s + I for every system, in place on values
+        with the pattern reused; ``c`` is scalar or per-system
+        ``(nsys,)`` (the per-system gamma of the ensemble BDF)."""
+        c = jnp.asarray(c)
+        cexp = c.reshape((-1,) + (1,) * 3) if c.ndim else c
+        vals = cexp * self.values
+        b = self.block_size
+        eye = jnp.eye(b, dtype=vals.dtype)
+        diag = jnp.asarray(self._diag_block_positions())
+        vals = vals.at[:, diag].add(eye[None, None])
+        return EnsembleBSR(vals, self.brows, self.bcols, self.nblk)
+
+    def matvec(self, x: jnp.ndarray, policy=None) -> jnp.ndarray:
+        """y_s = A_s @ x_s for every system; x: (nsys, n) -> (nsys, n)."""
+        from . import dispatch as dv
+        nsys, n, _ = self.shape
+        b = self.block_size
+        x_soa = x.reshape(nsys, self.nblk, b).transpose(1, 2, 0)
+        y = dv.bsr_spmv_soa(self.values_soa, x_soa, self.block_pattern,
+                            policy)
+        return y.transpose(2, 0, 1).reshape(nsys, n)
+
+    def to_dense(self) -> jnp.ndarray:
+        nsys, n, _ = self.shape
+        b = self.block_size
+        out = jnp.zeros((nsys, self.nblk, self.nblk, b, b),
+                        self.values.dtype)
+        out = out.at[:, jnp.asarray(self.brows),
+                     jnp.asarray(self.bcols)].set(self.values)
+        return out.transpose(0, 1, 3, 2, 4).reshape(nsys, n, n)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from . import block_solve as _bs
 from . import blockdiag_spmv as _sp
+from . import sparse as _sx
 from . import vecops as _vo
 
 LANE = 128
@@ -243,3 +244,88 @@ def blockdiag_spmv_soa(A: jnp.ndarray, x: jnp.ndarray, *,
     xp, _ = _pad_to(x, tile, axis=1)
     y = _sp.blockdiag_spmv_soa(Ap, xp, batch_tile=tile, interpret=interpret)
     return y[:, :nb]
+
+
+# ---------------------------------------------------------------------------
+# Sparse ops (static shared patterns, passed as hashable tuples)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("indptr", "indices",
+                                             "block_elems", "interpret"))
+def csr_spmv(data: jnp.ndarray, x: jnp.ndarray, *, indptr: tuple,
+             indices: tuple, block_elems: int = 8 * LANE,
+             interpret: bool = True):
+    """y = A @ x for CSR A with a STATIC pattern: data:(nnz,), x:(ncol,).
+
+    The pattern is ELL-ized at trace time (host numpy on the static
+    tuples): kmax = max row length, padded slots get zero data and
+    column 0, rows ride the lane axis.  ``indptr``/``indices`` must be
+    hashable tuples — they key the jit cache, one compile per pattern,
+    exactly the SUNMATRIX_CUSPARSE store-the-pattern-once economics.
+    """
+    import numpy as np
+    ip = np.asarray(indptr)
+    ci = np.asarray(indices, np.int32)
+    n_rows = len(ip) - 1
+    row_len = np.diff(ip)
+    kmax = max(1, int(row_len.max()) if n_rows else 1)
+    src = np.zeros((n_rows, kmax), np.int32)
+    valid = np.zeros((n_rows, kmax), bool)
+    for i in range(n_rows):
+        s, e = int(ip[i]), int(ip[i + 1])
+        src[i, : e - s] = np.arange(s, e)
+        valid[i, : e - s] = True
+    cols = np.where(valid, ci[src] if len(ci) else 0, 0).astype(np.int32)
+    data_ell = jnp.where(jnp.asarray(valid), data[jnp.asarray(src)], 0.0)
+    tile = min(block_elems, _lane_ceil(n_rows))
+    d_t, _ = _pad_to(data_ell.T, tile, axis=1)       # (kmax, NR)
+    c_t, _ = _pad_to(jnp.asarray(cols.T), tile, axis=1)
+    xp, _ = _pad_to(x, LANE, axis=0)
+    y = _sx.csr_spmv_ell(d_t, c_t, xp, row_tile=tile, interpret=interpret)
+    return y[:n_rows]
+
+
+@functools.partial(jax.jit, static_argnames=("brows", "bcols", "nblk",
+                                             "batch_tile", "interpret"))
+def bsr_spmv_soa(values: jnp.ndarray, x: jnp.ndarray, *, brows: tuple,
+                 bcols: tuple, nblk: int, batch_tile: int = 4 * LANE,
+                 interpret: bool = True):
+    """Ensemble shared-pattern BSR SpMV: values (nnzb, b, b, NB),
+    x (nblk, b, NB) -> y (nblk, b, NB); pads the system batch NB to the
+    bundle tile (zero-padded systems produce zeros, sliced off)."""
+    nnzb, b, _, nb = values.shape
+    tile = _batch_tile(nb, batch_tile)
+    Vp, _ = _pad_to(values, tile, axis=3)
+    xp, _ = _pad_to(x, tile, axis=2)
+    y = _sx.bsr_spmv_soa(Vp, xp, brows=tuple(brows), bcols=tuple(bcols),
+                         nblk=nblk, batch_tile=tile, interpret=interpret)
+    return y[:, :, :nb]
+
+
+@functools.partial(jax.jit, static_argnames=("brows", "bcols", "nblk",
+                                             "batch_tile", "interpret"))
+def bsr_diag_inverse_soa(values: jnp.ndarray, *, brows: tuple,
+                         bcols: tuple, nblk: int,
+                         batch_tile: int = 4 * LANE,
+                         interpret: bool = True):
+    """Invert every diagonal block of the shared pattern — the
+    block-Jacobi psetup: values (nnzb, b, b, NB) -> (b, b, nblk*NB),
+    flattened batch block-major (block I of system s at I*NB + s).
+
+    No new kernel: the diagonal-block positions are static, so this is
+    a trace-time gather plus the existing Gauss-Jordan inverse kernel
+    over the flattened nblk*NB batch.
+    """
+    nnzb, b, _, NB = values.shape
+    diag_idx = []
+    for I in range(nblk):
+        hits = [e for e, (i, j) in enumerate(zip(brows, bcols))
+                if i == I and j == I]
+        if not hits:
+            raise ValueError(f"pattern lacks diagonal block ({I},{I})")
+        diag_idx.append(hits[0])
+    D = values[jnp.asarray(diag_idx)]                # (nblk, b, b, NB)
+    Dsoa = jnp.transpose(D, (1, 2, 0, 3)).reshape(b, b, nblk * NB)
+    return block_inverse_soa(Dsoa, batch_tile=batch_tile,
+                             interpret=interpret)

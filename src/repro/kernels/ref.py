@@ -5,6 +5,7 @@ against with assert_allclose over shape/dtype sweeps.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -61,3 +62,41 @@ def block_inverse_soa_ref(A: jnp.ndarray) -> jnp.ndarray:
     """Per-block inverse in SoA; A:(b,b,NB) -> A^{-1}:(b,b,NB)."""
     Ainv = jnp.linalg.inv(jnp.transpose(A, (2, 0, 1)))
     return jnp.transpose(Ainv, (1, 2, 0))
+
+
+def csr_spmv_ref(data: jnp.ndarray, x: jnp.ndarray, indptr,
+                 indices) -> jnp.ndarray:
+    """y = A @ x for CSR A with static (indptr, indices); data:(nnz,)."""
+    import numpy as np
+    ip = np.asarray(indptr)
+    n = len(ip) - 1
+    seg = jnp.asarray(np.repeat(np.arange(n), np.diff(ip)))
+    cols = jnp.asarray(np.asarray(indices, np.int32))
+    return jax.ops.segment_sum(data * x[cols], seg, num_segments=n)
+
+
+def bsr_spmv_soa_ref(values: jnp.ndarray, x: jnp.ndarray, brows, bcols,
+                     nblk: int) -> jnp.ndarray:
+    """Shared-pattern ensemble BSR SpMV oracle: values (nnzb, b, b, NB),
+    x (nblk, b, NB) -> y (nblk, b, NB)."""
+    bc = jnp.asarray(bcols)
+    contrib = jnp.einsum("eijn,ejn->ein", values, x[bc])
+    return jax.ops.segment_sum(contrib, jnp.asarray(brows),
+                               num_segments=nblk)
+
+
+def bsr_diag_inverse_soa_ref(values: jnp.ndarray, brows, bcols,
+                             nblk: int) -> jnp.ndarray:
+    """Inverse of every diagonal block of the shared pattern:
+    values (nnzb, b, b, NB) -> (b, b, nblk*NB), block (I, sys) ordered
+    with the block index major (matches the op's flattened SoA batch)."""
+    diag_idx = []
+    for I in range(nblk):
+        hits = [e for e, (i, j) in enumerate(zip(brows, bcols))
+                if i == I and j == I]
+        assert hits, f"pattern lacks diagonal block ({I},{I})"
+        diag_idx.append(hits[0])
+    D = values[jnp.asarray(diag_idx)]                # (nblk, b, b, NB)
+    Dinv = jnp.linalg.inv(jnp.transpose(D, (0, 3, 1, 2)))
+    b = values.shape[1]
+    return jnp.transpose(Dinv, (2, 3, 0, 1)).reshape(b, b, -1)

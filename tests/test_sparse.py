@@ -1,0 +1,228 @@
+"""Sparse SUNMatrix subsystem: matrix types (SparseCSR / EnsembleBSR),
+the three dispatched sparse ops (jnp oracle vs Pallas-interpret to
+1e-10, ragged batches included), and the static-pattern LU split
+backing EnsembleSparseGJ."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch as dv
+from repro.core import spsolve
+from repro.core.linsol import EnsembleSparseGJ, encode_sparsity
+from repro.core.policies import ExecPolicy, XLA_FUSED
+from repro.core.sunmatrix import (EnsembleBSR, SparseCSR,
+                                  block_pattern_from_element)
+
+PALLAS = ExecPolicy(backend="pallas", interpret=True)
+
+
+def _random_sparse(n, density, key=0, diag_boost=6.0):
+    rng = np.random.default_rng(key)
+    A = rng.normal(size=(n, n)) * (rng.random((n, n)) < density)
+    A += np.diag(diag_boost + rng.random(n))
+    return A
+
+
+# ---------------------------------------------------------------------------
+# SparseCSR
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_csr_roundtrip_and_scale_addi():
+    A = _random_sparse(13, 0.25)
+    csr = SparseCSR.from_dense(A)
+    assert csr.nnz == int((np.abs(A) > 0).sum())
+    np.testing.assert_allclose(np.asarray(csr.to_dense()), A, atol=0)
+    # SUNMatScaleAddI: values-only update, pattern reused
+    M = csr.scale_addI(-0.37)
+    np.testing.assert_allclose(np.asarray(M.to_dense()),
+                               np.eye(13) - 0.37 * A, atol=1e-15)
+    assert M.pattern == csr.pattern
+
+
+def test_sparse_csr_scale_addi_requires_diagonal():
+    A = np.zeros((3, 3))
+    A[0, 1] = 1.0
+    A[1, 0] = 2.0
+    A[2, 2] = 3.0
+    csr = SparseCSR.from_dense(A)          # diagonal (0,0),(1,1) absent
+    with pytest.raises(ValueError, match="diagonal"):
+        csr.scale_addI(-1.0)
+    # ensure_diag materializes explicit zeros so the update is legal
+    csr2 = SparseCSR.from_dense(A, ensure_diag=True)
+    np.testing.assert_allclose(np.asarray(csr2.scale_addI(-1.0).to_dense()),
+                               np.eye(3) - A, atol=0)
+
+
+@pytest.mark.parametrize("n", [6, 130, 517])
+def test_csr_spmv_dispatch_parity(n):
+    A = _random_sparse(n, 0.1, key=n)
+    csr = SparseCSR.from_dense(A)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=n))
+    y_ref = jnp.asarray(A) @ x
+    y_j = dv.csr_spmv(csr.data, x, csr.pattern, XLA_FUSED)
+    y_p = dv.csr_spmv(csr.data, x, csr.pattern, PALLAS)
+    np.testing.assert_allclose(np.asarray(y_j), np.asarray(y_ref),
+                               atol=1e-12)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_j),
+                               atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# EnsembleBSR
+# ---------------------------------------------------------------------------
+
+
+def _block_tridiag_pattern(nblk, b):
+    n = nblk * b
+    P = np.zeros((n, n), bool)
+    for i in range(nblk):
+        for j in (i - 1, i, i + 1):
+            if 0 <= j < nblk:
+                P[i * b:(i + 1) * b, j * b:(j + 1) * b] = True
+    return P
+
+
+@pytest.mark.parametrize("nsys", [7, 130])
+@pytest.mark.parametrize("nblk,b", [(4, 3), (3, 8)])
+def test_ensemble_bsr_roundtrip_spmv_scale_addi(nsys, nblk, b):
+    P = _block_tridiag_pattern(nblk, b)
+    n = nblk * b
+    rng = np.random.default_rng(0)
+    J = jnp.asarray(rng.normal(size=(nsys, n, n)) * P)
+    bsr = EnsembleBSR.from_dense(J, b, pattern=P)
+    assert bsr.nnz_blocks == 3 * nblk - 2
+    assert bsr.values.shape == (nsys, bsr.nnz_blocks, b, b)
+    np.testing.assert_allclose(np.asarray(bsr.to_dense()), np.asarray(J),
+                               atol=0)
+    x = jnp.asarray(rng.normal(size=(nsys, n)))
+    y_ref = jnp.einsum("sij,sj->si", J, x)
+    for pol in (XLA_FUSED, PALLAS):
+        np.testing.assert_allclose(np.asarray(bsr.matvec(x, pol)),
+                                   np.asarray(y_ref), atol=1e-10)
+    gam = jnp.asarray(rng.random(nsys))
+    M = bsr.scale_addI(-gam)
+    M_ref = jnp.eye(n)[None] - gam[:, None, None] * J
+    np.testing.assert_allclose(np.asarray(M.to_dense()),
+                               np.asarray(M_ref), atol=1e-15)
+
+
+def test_block_pattern_from_element_collapses_and_keeps_diag():
+    P = np.zeros((6, 6), bool)
+    P[0, 3] = True                  # one entry -> whole (0,1) block
+    brows, bcols, nblk = block_pattern_from_element(P, 3)
+    assert nblk == 2
+    assert set(zip(brows, bcols)) == {(0, 0), (0, 1), (1, 1)}
+
+
+@pytest.mark.parametrize("nsys", [7, 130, 517])
+def test_bsr_ops_dispatch_parity_ragged_batches(nsys):
+    nblk, b = 5, 3
+    P = _block_tridiag_pattern(nblk, b)
+    rng = np.random.default_rng(nsys)
+    n = nblk * b
+    J = jnp.asarray(rng.normal(size=(nsys, n, n)) * P +
+                    (b + 3.0) * np.eye(n))
+    bsr = EnsembleBSR.from_dense(J, b, pattern=P)
+    V = bsr.values_soa                       # (nnzb, b, b, nsys)
+    x = jnp.asarray(rng.normal(size=(nblk, b, nsys)))
+    pat = bsr.block_pattern
+    for tile in (128, 512):
+        pol = ExecPolicy(backend="pallas", interpret=True,
+                         batch_tile=tile)
+        np.testing.assert_allclose(
+            np.asarray(dv.bsr_spmv_soa(V, x, pat, pol)),
+            np.asarray(dv.bsr_spmv_soa(V, x, pat, XLA_FUSED)),
+            atol=1e-10)
+        np.testing.assert_allclose(
+            np.asarray(dv.bsr_block_jacobi_inverse_soa(V, pat, pol)),
+            np.asarray(dv.bsr_block_jacobi_inverse_soa(V, pat,
+                                                       XLA_FUSED)),
+            atol=1e-10)
+
+
+def test_bsr_diag_inverse_inverts():
+    nblk, b, nsys = 4, 3, 9
+    P = _block_tridiag_pattern(nblk, b)
+    rng = np.random.default_rng(3)
+    n = nblk * b
+    J = jnp.asarray(rng.normal(size=(nsys, n, n)) * P +
+                    (b + 3.0) * np.eye(n))
+    bsr = EnsembleBSR.from_dense(J, b, pattern=P)
+    inv = dv.bsr_block_jacobi_inverse_soa(bsr.values_soa,
+                                          bsr.block_pattern, XLA_FUSED)
+    inv = np.asarray(inv).reshape(b, b, nblk, nsys)
+    for I in range(nblk):
+        for s in range(nsys):
+            D = np.asarray(J)[s, I * b:(I + 1) * b, I * b:(I + 1) * b]
+            np.testing.assert_allclose(inv[:, :, I, s] @ D, np.eye(b),
+                                       atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# static-pattern LU (the EnsembleSparseGJ engine)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("order", [True, False])
+def test_spsolve_lu_matches_dense(order):
+    n, nsys = 14, 6
+    A = _random_sparse(n, 0.2, key=5)
+    enc = spsolve.encode_pattern(np.abs(A) > 0)
+    plan = spsolve.symbolic_lu(*enc, order=order, fill=True)
+    rng = np.random.default_rng(7)
+    M = jnp.asarray(A)[:, :, None] * jnp.ones((1, 1, nsys)) + \
+        jnp.asarray(rng.normal(size=(n, n, nsys)) * 0.1 *
+                    (np.abs(A) > 0)[..., None])
+    f = spsolve.numeric_lu(plan, spsolve.gather_filled(plan, M))
+    rhs = jnp.asarray(rng.normal(size=(n, nsys)))
+    x = spsolve.lu_solve(plan, f, rhs)
+    ref = jnp.linalg.solve(jnp.transpose(M, (2, 0, 1)),
+                           jnp.transpose(rhs)[..., None])[..., 0].T
+    np.testing.assert_allclose(np.asarray(x), np.asarray(ref),
+                               atol=1e-10)
+
+
+def test_spsolve_rcm_ordering_reduces_fill():
+    # an arrowhead matrix eliminated in natural order fills completely;
+    # RCM pushes the hub last and the factorization stays sparse
+    n = 12
+    P = np.eye(n, dtype=bool)
+    P[0, :] = True
+    P[:, 0] = True
+    enc = spsolve.encode_pattern(P)
+    plan_nat = spsolve.symbolic_lu(*enc, order=False, fill=True)
+    plan_rcm = spsolve.symbolic_lu(*enc, order=True, fill=True)
+    assert plan_nat.nnz_factored == n * n
+    assert plan_rcm.nnz_factored == int(P.sum())
+
+
+def test_ensemble_sparse_gj_setup_solve_roundtrip():
+    n, nsys = 10, 5
+    A = _random_sparse(n, 0.25, key=11)
+    P = np.abs(A) > 0
+    ls = EnsembleSparseGJ(sparsity=P)
+    rng = np.random.default_rng(1)
+    Jsoa = jnp.asarray(A)[:, :, None] + \
+        jnp.asarray(rng.normal(size=(n, n, nsys)) * 0.05 * P[..., None])
+    gamma = jnp.asarray(0.1 + 0.05 * rng.random(nsys))
+    F = ls.soa_setup(Jsoa, gamma, None)
+    # saved object is O(nnz_factored), not O(n^2)
+    assert F.shape[0] < n * n and F.shape[1] == nsys
+    rhs = jnp.asarray(rng.normal(size=(n, nsys)))
+    x, nli, nps = ls.soa_solve(F, gamma, jnp.ones((nsys,)), rhs, None)
+    assert int(nli) == 0 and int(nps) == 0
+    M = jnp.eye(n)[:, :, None] - gamma[None, None, :] * Jsoa
+    ref = jnp.linalg.solve(jnp.transpose(M, (2, 0, 1)),
+                           jnp.transpose(rhs)[..., None])[..., 0].T
+    np.testing.assert_allclose(np.asarray(x), np.asarray(ref),
+                               atol=1e-9)
+
+
+def test_ensemble_sparse_gj_needs_pattern():
+    ls = EnsembleSparseGJ()
+    with pytest.raises(ValueError, match="sparsity"):
+        ls.soa_carry_init(4, 2, jnp.float64)
+    bound = ls.with_sparsity(encode_sparsity(np.eye(4, dtype=bool)))
+    assert bound.soa_carry_init(4, 2, jnp.float64).shape == (4, 2)

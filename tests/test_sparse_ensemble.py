@@ -1,0 +1,201 @@
+"""Acceptance gates for the sparse subsystem (ISSUE 4): EnsembleSparseGJ
+and preconditioned SPGMR each reproduce the dense BlockDiagGJ ensemble-
+BDF trajectory on batched_robertson within 1e-8; workspace bytes are
+strictly lower than dense at fill <= 25%; npsolves/npsetups surface
+through Solution; and the MemoryHelper label accounting survives two
+back-to-back integrate() calls on one Context."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batched
+from repro.core.arkode import ODEOptions
+from repro.core.context import Context
+from repro.core.ivp import IVP, integrate
+from repro.core.linsol import SPGMR, BlockDiagGJ, EnsembleSparseGJ
+from repro.core.policies import ExecPolicy, XLA_FUSED
+from repro.core.precond import BlockJacobiPrecond, ILU0Precond
+from repro.core.problems import batched_robertson, ensemble_brusselator
+
+# the Robertson Jacobian pattern (row 3 of the analytic jac has a lone
+# k3 term; the diagonal is forced in by the encoders)
+ROBERTSON_PATTERN = np.array([[1, 1, 1], [1, 1, 1], [0, 1, 0]], bool)
+
+
+def _robertson_runs(lin_solver, jac_sparsity=None, nsys=24, tf=10.0):
+    f, jac, y0 = batched_robertson(nsys)
+    opts = ODEOptions(rtol=1e-9, atol=1e-13, max_steps=400_000)
+    return batched.ensemble_bdf_integrate(
+        f, jac, y0, 0.0, tf, opts=opts, linear_solver=lin_solver,
+        jac_sparsity=jac_sparsity)
+
+
+@pytest.fixture(scope="module")
+def dense_reference():
+    return _robertson_runs(BlockDiagGJ())
+
+
+def test_sparse_direct_matches_dense_trajectory(dense_reference):
+    """Acceptance: EnsembleSparseGJ reproduces the dense BlockDiagGJ
+    batched_robertson trajectory within 1e-8."""
+    y_d, st_d = dense_reference
+    y_s, st_s = _robertson_runs(EnsembleSparseGJ(),
+                                jac_sparsity=ROBERTSON_PATTERN)
+    assert bool(jnp.all(st_d.success)) and bool(jnp.all(st_s.success))
+    np.testing.assert_allclose(np.asarray(y_s), np.asarray(y_d),
+                               rtol=0, atol=1e-8)
+    # direct solver: no inner iterations, no psolves
+    assert int(st_s.nli[0]) == 0 and int(st_s.npsolves[0]) == 0
+
+
+def test_preconditioned_spgmr_matches_dense_trajectory(dense_reference):
+    """Acceptance: SPGMR(precond=BlockJacobiPrecond) reproduces the
+    dense trajectory within 1e-8 with NONZERO npsolves."""
+    y_d, st_d = dense_reference
+    ls = SPGMR(tol=1e-12, restart=30, max_restarts=6,
+               precond=BlockJacobiPrecond(block_size=3))
+    y_k, st_k = _robertson_runs(ls)
+    assert bool(jnp.all(st_k.success))
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_d),
+                               rtol=0, atol=1e-8)
+    assert int(st_k.npsolves[0]) > 0
+    assert int(st_k.nli[0]) > 0
+    # block size == system size: the preconditioner is the exact
+    # inverse, so GMRES needs ~1 inner iteration per Newton solve
+    assert int(st_k.nli[0]) <= 1.05 * int(jnp.sum(st_k.nni))
+
+
+def test_sparse_workspace_below_dense_at_low_fill():
+    """Acceptance: Solution workspace strictly lower than dense for
+    fill <= 25% — both the sparse direct solver and the preconditioned
+    sparse Krylov path."""
+    nsys, nx = 8, 16
+    f, jac, P, y0 = ensemble_brusselator(nsys, nx)
+    n = 2 * nx
+    fill = P.sum() / (n * n)
+    assert fill <= 0.25, fill
+    prob = IVP(f=f, jac=jac, jac_sparsity=P, y0=y0)
+    ctx = Context()
+    opts = ctx.options(rtol=1e-5, atol=1e-8, max_steps=100_000)
+    runs = {}
+    for name, ls in (
+            ("dense", BlockDiagGJ()),
+            ("sparse", EnsembleSparseGJ()),
+            ("krylov", SPGMR(tol=1e-9, restart=10, max_restarts=6,
+                             precond=BlockJacobiPrecond(block_size=2)))):
+        runs[name] = integrate(prob, 0.0, 0.5, "ensemble_bdf", ctx=ctx,
+                               opts=opts, lin_solver=ls)
+        assert bool(runs[name].success), name
+    ws = {k: s.workspace_bytes for k, s in runs.items()}
+    assert ws["sparse"] < ws["dense"], ws
+    assert ws["krylov"] < ws["dense"], ws
+    # and the solutions agree at tolerance scale
+    for k in ("sparse", "krylov"):
+        np.testing.assert_allclose(np.asarray(runs[k].y),
+                                   np.asarray(runs["dense"].y),
+                                   rtol=0, atol=1e-3)
+
+
+def test_solution_surfaces_npsolves_and_npsetups():
+    nsys = 6
+    f, jac, y0 = batched_robertson(nsys)
+    prob = IVP(f=f, jac=jac, jac_sparsity=ROBERTSON_PATTERN, y0=y0)
+    ctx = Context()
+    opts = ctx.options(rtol=1e-5, atol=1e-10, max_steps=100_000)
+    ls = SPGMR(tol=1e-10, restart=20, max_restarts=4,
+               precond=BlockJacobiPrecond(block_size=3))
+    sol = integrate(prob, 0.0, 1.0, "ensemble_bdf", ctx=ctx, opts=opts,
+                    lin_solver=ls)
+    assert bool(sol.success)
+    assert sol.npsolves is not None and int(sol.npsolves) > 0
+    # psetup rides the lsetup triggers: counts must match exactly
+    assert sol.npsetups is not None
+    assert int(sol.npsetups) == int(jnp.sum(sol.stats.nsetups)) > 0
+    # an unpreconditioned direct run reports zero psolves, no psetups
+    sol_d = integrate(prob, 0.0, 1.0, "ensemble_bdf", ctx=ctx,
+                      opts=opts, lin_solver=BlockDiagGJ())
+    assert int(sol_d.npsolves) == 0 and sol_d.npsetups is None
+
+
+def test_ilu0_precond_through_ensemble_bdf():
+    """ILU(0) on the banded shared pattern drives the sparse Krylov SoA
+    path end to end (pattern-aware psetup at the lsetup triggers)."""
+    nsys, nx = 6, 8
+    f, jac, P, y0 = ensemble_brusselator(nsys, nx)
+    prob = IVP(f=f, jac=jac, jac_sparsity=P, y0=y0)
+    opts = ODEOptions(rtol=1e-5, atol=1e-8, max_steps=100_000)
+    ls_ref = BlockDiagGJ()
+    sol_ref = integrate(prob, 0.0, 0.3, "ensemble_bdf", opts=opts,
+                        lin_solver=ls_ref)
+    # a BARE ILU0Precond: the pattern must arrive via IVP.jac_sparsity
+    # through the same with_sparsity binding the solver gets
+    ls = SPGMR(tol=1e-9, restart=10, max_restarts=6,
+               precond=ILU0Precond())
+    sol = integrate(prob, 0.0, 0.3, "ensemble_bdf", opts=opts,
+                    lin_solver=ls)
+    assert bool(sol.success)
+    assert int(sol.npsolves) > 0
+    np.testing.assert_allclose(np.asarray(sol.y), np.asarray(sol_ref.y),
+                               rtol=0, atol=1e-3)
+
+
+def test_sparse_solvers_jnp_vs_pallas_parity():
+    """The sparse lsolve path dispatches through the op table: jnp and
+    Pallas(interpret) trajectories agree to 1e-8 (ragged nsys)."""
+    nsys = 10
+    f, jac, y0 = batched_robertson(nsys)
+    opts = ODEOptions(rtol=1e-8, atol=1e-12, max_steps=400_000)
+    ls = SPGMR(tol=1e-11, restart=20, max_restarts=6,
+               precond=BlockJacobiPrecond(block_size=3))
+    enc_kw = dict(linear_solver=ls, jac_sparsity=ROBERTSON_PATTERN)
+    y_j, st_j = batched.ensemble_bdf_integrate(
+        f, jac, y0, 0.0, 4.0, opts=opts, policy=XLA_FUSED, **enc_kw)
+    pol = ExecPolicy(backend="pallas", interpret=True, batch_tile=256)
+    y_p, st_p = batched.ensemble_bdf_integrate(
+        f, jac, y0, 0.0, 4.0, opts=opts, policy=pol, **enc_kw)
+    assert bool(jnp.all(st_j.success)) and bool(jnp.all(st_p.success))
+    np.testing.assert_allclose(np.asarray(y_j), np.asarray(y_p),
+                               rtol=0, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# MemoryHelper accounting across back-to-back runs (PR 3 label guard)
+# ---------------------------------------------------------------------------
+
+
+def test_memory_highwater_two_back_to_back_integrations():
+    """Two integrate() calls on ONE Context: each call's labels are
+    released afterwards (live returns to the pre-call level), foreign
+    labels survive, and the high-water mark is monotone and reflects
+    the larger run."""
+    nsys = 6
+    f, jac, y0 = batched_robertson(nsys)
+    ctx = Context()
+    # a foreign registration must survive both runs untouched
+    ctx.memory.register("user.buffer", (128,), jnp.float64)
+    foreign = ctx.memory.live_bytes
+    assert foreign == 128 * 8
+    prob = IVP(f=f, jac=jac, y0=y0)
+    opts = ctx.options(rtol=1e-5, atol=1e-10, max_steps=100_000)
+    s1 = integrate(prob, 0.0, 1.0, "ensemble_bdf", ctx=ctx, opts=opts,
+                   lin_solver=BlockDiagGJ())
+    hw1 = ctx.memory.high_water_bytes
+    assert s1.workspace_bytes > 0
+    assert ctx.memory.live_bytes == foreign         # labels released
+    assert set(ctx.memory.workspaces) == {"user.buffer"}
+    assert hw1 >= foreign + s1.workspace_bytes
+    # second, larger run on the same context: high-water is monotone
+    # and grows to cover the bigger workspace
+    f2, jac2, y02 = batched_robertson(4 * nsys)
+    prob2 = IVP(f=f2, jac=jac2, y0=y02)
+    s2 = integrate(prob2, 0.0, 1.0, "ensemble_bdf", ctx=ctx, opts=opts,
+                   lin_solver=BlockDiagGJ())
+    hw2 = ctx.memory.high_water_bytes
+    assert s2.workspace_bytes > s1.workspace_bytes
+    assert ctx.memory.live_bytes == foreign
+    assert set(ctx.memory.workspaces) == {"user.buffer"}
+    assert hw2 >= hw1
+    assert hw2 >= foreign + s2.workspace_bytes
+    # and both Solutions report the run-wide (not per-call) high water
+    assert s2.high_water_bytes == hw2 >= s1.high_water_bytes == hw1
