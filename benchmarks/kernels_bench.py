@@ -80,6 +80,18 @@ def smoke(n: int = 4096, tol: float = 1e-5):
     Ab = jax.random.normal(jax.random.PRNGKey(3), (bs, bs, nb)) + \
         (bs + 2.0) * jnp.eye(bs)[:, :, None]
     rb = jax.random.normal(jax.random.PRNGKey(4), (bs, nb))
+    # row-tiled GJ regime (b > 8) under the same ragged batch
+    bt = 16
+    At = jax.random.normal(jax.random.PRNGKey(9), (bt, bt, nb)) + \
+        (bt + 2.0) * jnp.eye(bt)[:, :, None]
+    rt = jax.random.normal(jax.random.PRNGKey(10), (bt, nb))
+    # fused ensemble-Newton op operands (SoA (n, nsys), ragged batch)
+    gmb = jnp.abs(jax.random.normal(jax.random.PRNGKey(11), (nb,)))
+    wb = jnp.abs(jax.random.normal(jax.random.PRNGKey(12), (bs, nb))) + 0.1
+    mb = jax.random.uniform(jax.random.PRNGKey(13), (nb,)) > 0.4
+    q1 = 6
+    Wh = jax.random.normal(jax.random.PRNGKey(14), (q1, q1, nb))
+    Zh = jax.random.normal(jax.random.PRNGKey(15), (q1, bs, nb))
     # sparse ops: a banded CSR pattern (non-lane-multiple rows) and a
     # shared block pattern with a ragged system batch
     ncsr = 133
@@ -113,6 +125,16 @@ def smoke(n: int = 4096, tol: float = 1e-5):
         "block_solve_soa": lambda p: dp.block_solve_soa(Ab, rb, p),
         "block_inverse_soa": lambda p: dp.block_inverse_soa(Ab, p),
         "blockdiag_spmv_soa": lambda p: dp.blockdiag_spmv_soa(Ab, rb, p),
+        "block_solve_soa.b16": lambda p: dp.block_solve_soa(At, rt, p),
+        "block_inverse_soa.b16": lambda p: dp.block_inverse_soa(At, p),
+        "newton_residual_soa": lambda p: dp.newton_residual_soa(
+            rb, wb, rb, gmb, p, negate=True),
+        "masked_update_wrms_soa": lambda p: jnp.concatenate(
+            [x.ravel() for x in dp.masked_update_wrms_soa(rb, rb, wb,
+                                                          mb, p)]),
+        "history_rescale_soa": lambda p: dp.history_rescale_soa(
+            Wh, Zh, mb, p),
+        "wrms_soa": lambda p: dp.wrms_soa(rb, wb, p),
         "csr_spmv": lambda p: dp.csr_spmv(csr.data, xs, csr.pattern, p),
         "bsr_spmv_soa": lambda p: dp.bsr_spmv_soa(Vb, xb, bpat, p),
         "bsr_block_jacobi_inverse_soa":

@@ -7,6 +7,18 @@ during ``run()``; the harness writes it out (e.g. ``ensemble_bench`` ->
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run vector_ops # one module
+  PYTHONPATH=src python -m benchmarks.run --check    # CI perf gate
+
+``--check`` re-times every configuration recorded in the committed
+``BENCH_ensemble.json`` and exits 1 if any pallas-interpret config
+falls below its regression floor — 80% of the committed pallas/jnp
+speedup ratio, with the committed ratio capped at 1.25 first, so in
+practice the gate asserts the kernels keep BEATING the jnp oracle
+rather than reproducing a noisy high-water mark (timing gates the
+>=4096-system configs; smaller ones are timer-noise-bound and
+informational) — or if ANY config drifts past the 1e-14 accuracy
+bound.  This is the gate the CI smoke step runs (ensemble_bench.check
+documents the cap rationale).
 """
 from __future__ import annotations
 
@@ -31,6 +43,11 @@ MODULES = [
 
 
 def main() -> None:
+    if "--check" in sys.argv[1:]:
+        from benchmarks import ensemble_bench
+        ok = ensemble_bench.check()
+        print(f"perf_check,{'PASS' if ok else 'FAIL'},BENCH_ensemble.json")
+        sys.exit(0 if ok else 1)
     picked = sys.argv[1:] or MODULES
     print("name,us_per_call,derived")
     for name in picked:

@@ -37,7 +37,7 @@ from repro.core.context import Context
 from repro.core.ivp import IVP, integrate
 from repro.core.linsol import SPGMR, BlockDiagGJ
 from repro.core.policies import ExecPolicy, XLA_FUSED
-from repro.core.problems import batched_robertson
+from repro.core.problems import batched_robertson, batched_robertson_soa
 
 
 def main():
@@ -68,7 +68,10 @@ def main():
            "direct": BlockDiagGJ(factor_once=False),
            "spgmr": SPGMR(tol=1e-9, restart=30, max_restarts=4)}[
         args.lin_solver]
-    prob = IVP(f=f, jac=jac, y0=y0)
+    # native SoA RHS/Jacobian forms (system axis last) make the ensemble
+    # Newton hot loop fully conversion-free; same bits as the AoS forms
+    f_soa, jac_soa = batched_robertson_soa(n)
+    prob = IVP(f=f, jac=jac, y0=y0, f_soa=f_soa, jac_soa=jac_soa)
     kind = (f"BDF(1-{args.order}, {lin.name})" if args.bdf else "SDIRK2")
     print(f"integrating {n} independent stiff kinetics systems with {kind} "
           f"(block-diagonal Jacobian: {n} blocks of 3x3) to t={args.tf}")

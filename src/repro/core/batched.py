@@ -23,6 +23,26 @@ Three integrators share the masked-while_loop pattern:
   algebra routed through the SoA block kernels via ExecPolicy dispatch,
   and a :func:`ensemble_bdf_integrate_sharded` shard_map path that
   scales the system axis across devices.
+
+**Hot-loop layout (SoA everywhere, nsys LAST).**  The BDF and DIRK
+Newton paths carry every iteration-sized array — BDF history ``Z``
+(QMAX+1, n, nsys), Newton iterate ``z`` (n, nsys), weights, residuals —
+in the structure-of-arrays layout the kernels and the LinearSolver SoA
+surface speak natively, so the loop body performs ZERO layout
+conversions per Newton iteration (the old AoS carry transposed the
+residual in and the correction out on every iteration, and the Jacobian
+at every lsetup).  User RHS/Jacobian callables stay in the documented
+AoS batch convention (``(t:(nsys,), y:(nsys,n))``); pass native SoA
+forms (``f_soa(t, y:(n,nsys))``, ``jac_soa -> (n,n,nsys)``) to make the
+boundary conversion-free as well — otherwise a thin wrapper transposes
+at the call site only (same cost as the old layout, paid once per RHS
+evaluation instead of spread over every op).
+
+The per-iteration work runs through three fused dispatch ops
+(``newton_residual_soa``, ``masked_update_wrms_soa``,
+``history_rescale_soa``; see :mod:`repro.kernels.newton`), and the BDF
+step loop is executed with its carry **donated** so XLA updates the
+history window in place instead of double-buffering it.
 """
 from __future__ import annotations
 
@@ -38,8 +58,37 @@ from . import cvode as _cv
 from . import dispatch as dv
 from .arkode import ODEOptions
 from .butcher import ButcherTable
-from .direct import gauss_jordan_batched
 from .policies import ExecPolicy, XLA_FUSED
+
+
+def _donated_loop(cond, body, carry):
+    """Run the masked step loop with the carry buffers donated.
+
+    Only safe when every carry leaf is a distinct buffer freshly
+    allocated inside the integrator — true for the BDF carry (``y0``
+    is copied into the history window and ``t`` is an explicit copy,
+    since broadcast_to can alias a caller-shaped ``t0``), NOT for the
+    ERK/DIRK carries, which hold ``y0`` itself and must leave the
+    caller's buffer alive.
+    At top level XLA may then reuse the carry in place — back-to-back
+    integrations never hold two live copies of the (QMAX+1, n, nsys)
+    history.  Under an outer trace (an enclosing jit or shard_map) the
+    inner jit inlines and donation is a no-op, which is exactly the
+    while_loop carry aliasing XLA applies there anyway.
+    """
+    return jax.jit(lambda c: lax.while_loop(cond, body, c),
+                   donate_argnums=0)(carry)
+
+
+def _wrap_soa(f, jac, f_soa, jac_soa):
+    """Default SoA RHS/Jacobian forms: thin transposing wrappers around
+    the AoS batch callables when no native SoA form is supplied (the
+    only remaining layout conversion, at the user-function boundary)."""
+    if f_soa is None:
+        f_soa = lambda t, z: f(t, z.T).T
+    if jac_soa is None:
+        jac_soa = lambda t, z: jnp.transpose(jac(t, z.T), (1, 2, 0))
+    return f_soa, jac_soa
 
 
 class EnsembleStats(NamedTuple):
@@ -107,7 +156,11 @@ def ensemble_erk_integrate(f: Callable, y0: jnp.ndarray, t0, tf,
                 if (bi - bh) != 0.0:
                     y_err = y_err + (hs * (bi - bh))[:, None] * k
         w = 1.0 / (opts.rtol * jnp.abs(y) + opts.atol)
-        err = jnp.sqrt(jnp.mean((y_err * w) ** 2, axis=1))  # (nsys,)
+        # per-system WRMS through the dispatched op (ExecPolicy-routed;
+        # the .T views are exact layout changes XLA folds away on the
+        # jnp backend — the ERK carry itself stays AoS, it has no
+        # Newton hot loop to justify an SoA flip)
+        err = dv.wrms_soa(y_err.T, w.T, opts.policy)        # (nsys,)
         bad = ~jnp.isfinite(err) | ~jnp.all(jnp.isfinite(y_new), axis=1)
         err = jnp.where(bad, 2.0, err)
         accept = (err <= 1.0) & ~bad & active
@@ -147,7 +200,9 @@ def ensemble_dirk_integrate(fi: Callable, jac: Callable, y0: jnp.ndarray,
                             t0, tf, table: ButcherTable,
                             opts: ODEOptions = ODEOptions(),
                             policy: ExecPolicy = XLA_FUSED,
-                            newton_iters: int = 4):
+                            newton_iters: int = 4,
+                            f_soa: Optional[Callable] = None,
+                            jac_soa: Optional[Callable] = None):
     """Adaptive DIRK over a batch of independent *stiff* systems with the
     batched block-diagonal Newton solve (the paper's submodel solver).
 
@@ -155,23 +210,26 @@ def ensemble_dirk_integrate(fi: Callable, jac: Callable, y0: jnp.ndarray,
     jac : (t:(nsys,), y:(nsys,n)) -> (nsys,n,n)   per-system Jacobian
     Newton matrix M_j = I - h a_ii J_j is solved for ALL systems in one
     batched Gauss-Jordan (kernels/block_solve on TPU).
+
+    The stage Newton iterations run in the SoA hot-loop layout shared
+    with :func:`ensemble_bdf_integrate` (iterate/residual ``(n, nsys)``,
+    fused ``newton_residual_soa`` + dispatched ``block_solve_soa``);
+    the layout flips once per *stage*, not once per iteration.  Native
+    SoA forms ``f_soa(t, y:(n,nsys)) -> (n,nsys)`` /
+    ``jac_soa -> (n,n,nsys)`` remove even the per-RHS-call transposes.
     """
+    from .linsol import newton_blocks_soa
+
     nsys, n = y0.shape
     dtype = y0.dtype
+    f_s, jac_s = _wrap_soa(fi, jac, f_soa, jac_soa)
     t0 = jnp.broadcast_to(jnp.asarray(t0, dtype), (nsys,))
     tf = jnp.broadcast_to(jnp.asarray(tf, dtype), (nsys,))
     # opts.h0 seeds the step, same contract as ensemble_erk_integrate
     h = jnp.where(opts.h0 > 0, jnp.full((nsys,), opts.h0, dtype),
                   jnp.maximum(1e-6 * (tf - t0), 1e-12))
     p = max(table.emb_order + 1, 2)
-    eye = jnp.eye(n, dtype=dtype)
-
-    def solve_blocks(A, rhs):
-        if policy.backend == "pallas":
-            from repro.kernels import ops as kops
-            return kops.block_solve(A, rhs, batch_tile=policy.batch_tile,
-                                    interpret=policy.interpret)
-        return gauss_jordan_batched(A, rhs)
+    unit_w = jnp.ones((n, nsys), dtype)      # unweighted per-system RMS
 
     def cond(c):
         t, y, h, e1, steps, att, netf, nni, stall = c
@@ -193,27 +251,32 @@ def ensemble_dirk_integrate(fi: Callable, jac: Callable, y0: jnp.ndarray,
             aii = table.A[i][i]
             ti = t + table.c[i] * hs
             if aii == 0.0:
-                z = r
+                ks.append(fi(ti, r))
             else:
+                # ---- SoA stage Newton (shared hot-loop layout) ----
                 gam = hs * aii                            # (nsys,)
-                z = r
+                rs = r.T                                  # (n, nsys), once
+                z_s = rs
                 for _ in range(newton_iters):
-                    g = z - gam[:, None] * fi(ti, z) - r
-                    J = jac(ti, z)                        # (nsys,n,n)
-                    M = eye[None] - gam[:, None, None] * J
-                    dz = solve_blocks(M, -g)
-                    z = z + dz
+                    rhs = dv.newton_residual_soa(z_s, f_s(ti, z_s), rs,
+                                                 gam, policy, negate=True)
+                    M = newton_blocks_soa(jac_s(ti, z_s), gam)
+                    z_s = z_s + dv.block_solve_soa(M, rhs, policy)
                     # nni counts per ACTIVE system: finished systems are
                     # masked no-ops and must not accrue iterations
                     nni_step = nni_step + active.astype(jnp.int32)
-                g = z - gam[:, None] * fi(ti, z) - r
-                res = jnp.sqrt(jnp.mean(g ** 2, axis=1))
-                tol_nl = opts.newton_tol_fac * (opts.rtol *
-                                                jnp.sqrt(jnp.mean(z ** 2, axis=1))
-                                                + opts.atol)
+                fz = f_s(ti, z_s)          # final RHS: residual AND stage
+                g = dv.newton_residual_soa(z_s, fz, rs, gam, policy)
+                res = dv.wrms_soa(g, unit_w, policy)
+                tol_nl = opts.newton_tol_fac * (
+                    opts.rtol * dv.wrms_soa(z_s, unit_w, policy)
+                    + opts.atol)
                 nl_ok = nl_ok & ((res <= jnp.maximum(tol_nl, 1e-12)) |
                                  ~active)
-            ks.append(fi(ti, z))
+                # the stage derivative is the SAME evaluation the
+                # residual used (a native f_soa has no AoS twin XLA
+                # could CSE against) — back to AoS once per stage
+                ks.append(fz.T)
         y_new = y
         for bi, k in zip(table.b, ks):
             if bi != 0.0:
@@ -224,7 +287,8 @@ def ensemble_dirk_integrate(fi: Callable, jac: Callable, y0: jnp.ndarray,
                 if (bi - bh) != 0.0:
                     y_err = y_err + (hs * (bi - bh))[:, None] * k
         w = 1.0 / (opts.rtol * jnp.abs(y) + opts.atol)
-        err = jnp.sqrt(jnp.mean((y_err * w) ** 2, axis=1))
+        # dispatched per-system WRMS (.T views fuse on the jnp backend)
+        err = dv.wrms_soa(y_err.T, w.T, policy)
         bad = ~jnp.isfinite(err) | ~nl_ok
         err = jnp.where(bad, 2.0, err)
         accept = (err <= 1.0) & ~bad & active
@@ -264,7 +328,7 @@ class _BdfCarry(NamedTuple):
     t: jnp.ndarray            # (nsys,)
     h: jnp.ndarray            # (nsys,)
     q: jnp.ndarray            # (nsys,) current BDF order
-    Z: jnp.ndarray            # (nsys, QMAX+1, n) uniform-grid history
+    Z: jnp.ndarray            # (QMAX+1, n, nsys) uniform-grid history, SoA
     e1: jnp.ndarray           # (nsys,) controller err_prev
     e2: jnp.ndarray           # (nsys,) controller err_prev2
     MJ: Any                   # saved linear object (solver-defined pytree;
@@ -291,13 +355,33 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
                            lin_mode: Optional[str] = None,
                            jac_sparsity=None,
                            msbp: int = 20, dgmax: float = 0.3,
-                           mem=None):
+                           mem=None,
+                           f_soa: Optional[Callable] = None,
+                           jac_soa: Optional[Callable] = None):
     """Adaptive batched BDF (orders 1-``order``) over ``nsys`` independent
     stiff systems — the CVODE submodel pipeline, TPU-native.
 
     f   : (t:(nsys,), y:(nsys,n)) -> (nsys,n)   vectorized RHS
     jac : (t:(nsys,), y:(nsys,n)) -> (nsys,n,n) per-system dense Jacobian
     y0  : (nsys, n);  t0, tf broadcastable to (nsys,)
+
+    **SoA hot loop.**  The entire step-loop carry is structure-of-arrays
+    with the system axis LAST: history ``Z`` is (QMAX+1, n, nsys), the
+    Newton iterate/residual/weights are (n, nsys) — the layout the
+    LinearSolver SoA surface and the fused kernels consume natively, so
+    the Newton body performs no transposes at all.  Each iteration is
+    exactly: one fused residual (``newton_residual_soa``, emitting the
+    rhs ``-g`` in a single HBM pass), one lsolve, and one fused masked
+    update + correction norm (``masked_update_wrms_soa``).  The
+    twice-per-step Lagrange history rebuild runs through
+    ``history_rescale_soa``, which short-circuits bundles with no
+    active system instead of sweeping the full (QMAX+1, n, nsys) window.
+    ``f_soa`` / ``jac_soa`` (signatures ``(t:(nsys,), y:(n,nsys)) ->
+    (n,nsys)`` and ``-> (n,n,nsys)``) supply native SoA RHS/Jacobian
+    forms; without them the AoS callables are wrapped with a transpose
+    at the call boundary only.  The step loop runs with its carry
+    donated (:func:`_donated_loop`), so repeated integrations reuse the
+    history buffers in place.
 
     Each system carries its own (t, h, order, history, controller state):
     step size and order ramp are controlled per system, and systems that
@@ -310,6 +394,17 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
     convergence failure, every ``msbp`` attempts, or when gamma has
     drifted by more than ``dgmax`` since the last lsetup (CVODE's
     ``CVLsetup`` triggers).
+
+    **lsetup cost note:** the refresh is a single ``lax.cond`` over the
+    whole batch, so whenever ANY system trips a trigger, ``jac`` (and
+    the solver's setup) is evaluated over ALL ``nsys`` systems and the
+    fresh results are merged into the carry only where ``need`` holds.
+    This is the right trade for a vectorized ensemble (per-system
+    branching would serialize the batch), but it means lsetup cost
+    scales with nsys, not with the number of stale systems.  The merge
+    select itself is skipped when every system needs the refresh (the
+    cold-start and post-failure common case) — the fresh object is
+    taken wholesale instead of paying an MJ-sized ``where`` per leaf.
 
     Linear algebra is a **pluggable object**: ``linear_solver`` is any
     :class:`repro.core.linsol.LinearSolver` with an SoA batch path
@@ -378,8 +473,9 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
     nsys, n = y0.shape
     dtype = y0.dtype
     QMAX = _cv.QMAX
+    f_s, jac_s = _wrap_soa(f, jac, f_soa, jac_soa)
     if mem is not None:
-        mem.register("ensemble_bdf.history", (nsys, QMAX + 1, n), dtype)
+        mem.register("ensemble_bdf.history", (QMAX + 1, n, nsys), dtype)
         # the persistent saved linear object is solver-defined: dense
         # Newton blocks, sparse values, preconditioner data, ...
         for suffix, shape in ls.soa_workspace_shapes(n, nsys):
@@ -390,9 +486,6 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
                    jnp.maximum(1e-6 * (tf - t0), 1e-12))
     one = jnp.ones((), dtype)
 
-    def wrms(v, w):                                  # (nsys,n) -> (nsys,)
-        return jnp.sqrt(jnp.mean((v * w) ** 2, axis=1))
-
     def cond(c):
         return jnp.any((c.t < tf * (1 - 1e-12)) & (~c.stall)) & \
             jnp.all(c.att < opts.max_steps)
@@ -402,44 +495,63 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
         hs = jnp.where(active, jnp.minimum(c.h, tf - c.t), c.h)
         nvalid = jnp.minimum(c.steps, QMAX)
         # if h was clipped to hit tf, rescale the history accordingly
+        # (fused masked rebuild).  Unclipped systems have eta_clip ==
+        # 1.0 exactly (hs == c.h -> hs/c.h == 1.0) and _lagrange_matrix
+        # at eta=1 is the exact identity, so masking them out is a
+        # value-level no-op that lets the kernel short-circuit whole
+        # bundles in the common no-clip case instead of sweeping the
+        # full (QMAX+1, n, nsys) window every step
         eta_clip = jnp.where(active, hs / c.h, one)
         W = jax.vmap(_cv._lagrange_matrix)(eta_clip, nvalid)
-        Z = jnp.einsum("sji,sik->sjk", W, c.Z)
+        Z = dv.history_rescale_soa(jnp.transpose(W, (1, 2, 0)), c.Z,
+                                   active & (eta_clip != one), policy)
         qi = c.q - 1
         alphas = _cv._ALPHA_T[qi].astype(dtype)      # (nsys, QMAX+1)
         beta = _cv._BETA_T[qi].astype(dtype)         # (nsys,)
         p_pred = jnp.minimum(nvalid, c.q)
         pred_c = _cv._PREDP_T[p_pred].astype(dtype)
-        y_pred = jnp.einsum("sj,sjk->sk", pred_c, Z)
-        psi = -jnp.einsum("sj,sjk->sk", alphas[:, 1:], Z[:, :-1])
+        # predictor / psi: per-system coefficient contractions over the
+        # history, evaluated as the AoS einsum on transposed views so
+        # the jnp backend keeps the pre-SoA accumulation order bitwise
+        # (XLA folds the layout changes into the contraction).  O(Q*n*
+        # nsys) once per step — NOT per Newton iteration.
+        Zaos = jnp.transpose(Z, (2, 0, 1))           # (nsys, QMAX+1, n)
+        y_pred = jnp.einsum("sj,sjk->sk", pred_c, Zaos).T    # (n, nsys)
+        psi = (-jnp.einsum("sj,sjk->sk", alphas[:, 1:], Zaos[:, :-1])).T
         gamma = beta * hs                            # (nsys,)
         t_new = c.t + hs
-        w = 1.0 / (opts.rtol * jnp.abs(Z[:, 0]) + opts.atol)
+        w = 1.0 / (opts.rtol * jnp.abs(Z[0]) + opts.atol)   # (n, nsys)
 
         # ---- lsetup: refresh J (and in 'setup' mode the block inverse)
-        # only where stale; skipped entirely when no system needs it ----
+        # only where stale; skipped entirely when no system needs it.
+        # NOTE the batch-granular cost: one system tripping a trigger
+        # evaluates jac over ALL nsys systems (docstring lsetup note) --
         gamrat = gamma / jnp.where(c.gam_saved != 0, c.gam_saved, gamma)
         need = active & ((c.gam_saved == 0) | c.ncf_prev |
                          (c.since_jac >= msbp) |
                          (jnp.abs(gamrat - 1.0) > dgmax))
 
         def do_setup(_):
-            J = jac(t_new, y_pred)                   # (nsys, n, n)
-            Jsoa = jnp.transpose(J, (1, 2, 0))       # (n, n, nsys)
-            return ls.soa_setup(Jsoa, gamma, policy)
+            return ls.soa_setup(jac_s(t_new, y_pred), gamma, policy)
 
         MJ_new = lax.cond(jnp.any(need), do_setup, lambda _: c.MJ,
                           operand=None)
         # solver-defined pytree; every leaf keeps nsys LAST, so the
-        # per-system mask broadcasts against the trailing axis
-        MJ = jax.tree_util.tree_map(
-            lambda new, old: jnp.where(need, new, old), MJ_new, c.MJ)
+        # per-system mask broadcasts against the trailing axis.  When
+        # EVERY system needs the refresh (cold start, the common case)
+        # the fresh object is taken wholesale — no MJ-sized select.
+        MJ = lax.cond(
+            jnp.all(need),
+            lambda: MJ_new,
+            lambda: jax.tree_util.tree_map(
+                lambda new, old: jnp.where(need, new, old), MJ_new, c.MJ))
         gam_saved = jnp.where(need, gamma, c.gam_saved)
         since_jac = jnp.where(need, 0, c.since_jac)
         gamrat = jnp.where(need, 1.0, gamrat)
 
-        # ---- convergence-tested modified Newton; the linear solve is
-        # the pluggable object's lsolve (rhs is SoA: (n, nsys)) ----
+        # ---- convergence-tested modified Newton, all-SoA: residual,
+        # lsolve, masked update and correction norm each one fused op
+        # on (n, nsys) arrays — no layout conversion per iteration ----
         def lsolve(rhs):
             return ls.soa_solve(MJ, gamma, gamrat, rhs, policy, mem=mem)
 
@@ -450,11 +562,11 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
         def nl_body(s):
             z, it, dn_prev, crate, conv, div, nni_s, nli_s, nps_s = s
             iterate = active & ~conv & ~div
-            g = z - gamma[:, None] * f(t_new, z) - psi
-            dz_soa, nli_inc, nps_inc = lsolve(-g.T)
-            dz = dz_soa.T
-            z_new = jnp.where(iterate[:, None], z + dz, z)
-            dn = wrms(dz, w)
+            rhs = dv.newton_residual_soa(z, f_s(t_new, z), psi, gamma,
+                                         policy, negate=True)
+            dz, nli_inc, nps_inc = lsolve(rhs)
+            z_new, dn = dv.masked_update_wrms_soa(z, dz, w, iterate,
+                                                  policy)
             crate_new = jnp.where(
                 it > 0,
                 jnp.maximum(0.3 * crate,
@@ -477,7 +589,8 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
             nl_cond, nl_body, s0)
 
         # ---- local error test (LTE ~ (z - pred)/(q+1), uniform grid) ----
-        err = wrms(z - y_pred, w) / (c.q.astype(dtype) + 1.0)
+        err = dv.wrms_soa(z - y_pred, w, policy) / \
+            (c.q.astype(dtype) + 1.0)
         bad = ~jnp.isfinite(err) | ~conv
         err = jnp.where(bad, 2.0, err)
         accept = (err <= 1.0) & ~bad & active
@@ -498,14 +611,15 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
         e2 = jnp.where(accept, cst_new.err_prev2, c.e2)
 
         # accepted systems: shift history, insert z, ramp order
-        Z_acc = jnp.roll(Z, 1, axis=1).at[:, 0].set(z)
-        Z_next = jnp.where(accept[:, None, None], Z_acc, Z)
+        Z_acc = jnp.roll(Z, 1, axis=0).at[0].set(z)
+        Z_next = jnp.where(accept[None, None, :], Z_acc, Z)
         q_next = jnp.where(accept, jnp.minimum(c.q + 1, order), c.q)
         # rescale each system's history onto its new uniform grid
         nval_after = jnp.minimum(c.steps + accept.astype(jnp.int32), QMAX)
         W2 = jax.vmap(_cv._lagrange_matrix)(
             jnp.where(active, eta, one), nval_after)
-        Z_next = jnp.einsum("sji,sik->sjk", W2, Z_next)
+        Z_next = dv.history_rescale_soa(jnp.transpose(W2, (1, 2, 0)),
+                                        Z_next, active, policy)
 
         t_next = jnp.where(accept, t_new, c.t)
         h_next = jnp.where(active, hs * eta, c.h)
@@ -524,19 +638,27 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
             ncfn=c.ncfn + ncf.astype(jnp.int32),
             nli=c.nli + nli_s, nps=c.nps + nps_s, stall=stall)
 
-    zero = jnp.zeros((nsys,), jnp.int32)
-    Z0 = jnp.zeros((nsys, QMAX + 1, n), dtype).at[:, 0].set(y0)
+    # donation requires every carry leaf to be a DISTINCT, internally
+    # owned buffer: each counter gets its own zeros, and t is an
+    # explicit copy — broadcast_to/asarray short-circuit when the
+    # caller already passes an (nsys,) array of the right dtype, and
+    # donating that alias would delete the CALLER's t0
+    zero = lambda: jnp.zeros((nsys,), jnp.int32)
+    Z0 = jnp.zeros((QMAX + 1, n, nsys), dtype).at[0].set(y0.T)
     c = _BdfCarry(
-        t=t0, h=h0, q=jnp.ones((nsys,), jnp.int32), Z=Z0,
+        t=jnp.array(t0, copy=True), h=h0,
+        q=jnp.ones((nsys,), jnp.int32), Z=Z0,
         e1=jnp.ones((nsys,), dtype), e2=jnp.ones((nsys,), dtype),
         MJ=ls.soa_carry_init(n, nsys, dtype),
-        gam_saved=jnp.zeros((nsys,), dtype), since_jac=zero,
-        ncf_prev=jnp.zeros((nsys,), bool), steps=zero, att=zero,
-        netf=zero, nni=zero, nsetups=zero, ncfn=zero,
+        gam_saved=jnp.zeros((nsys,), dtype), since_jac=zero(),
+        ncf_prev=jnp.zeros((nsys,), bool), steps=zero(), att=zero(),
+        netf=zero(), nni=zero(), nsetups=zero(), ncfn=zero(),
         nli=jnp.zeros((), jnp.int32), nps=jnp.zeros((), jnp.int32),
         stall=jnp.zeros((nsys,), bool))
-    c = lax.while_loop(cond, body, c)
-    return c.Z[:, 0], EnsembleStats(
+    # every carry leaf is freshly allocated above -> donate, so the
+    # history window is updated in place across the step loop
+    c = _donated_loop(cond, body, c)
+    return c.Z[0].T, EnsembleStats(
         steps=c.steps, attempts=c.att, netf=c.netf, nni=c.nni,
         success=c.t >= tf * (1 - 1e-10), nsetups=c.nsetups, ncfn=c.ncfn,
         nli=jnp.broadcast_to(c.nli, (nsys,)),
@@ -571,6 +693,15 @@ def ensemble_bdf_integrate_sharded(f: Callable, jac: Callable,
     from repro.launch.mesh import make_ensemble_mesh
     from repro.parallel.sharding import shard_map_compat
 
+    # an explicit None is the documented "no native SoA form" default of
+    # the non-sharded API — only an actual callable is rejected here
+    if kw.pop("f_soa", None) is not None or \
+            kw.pop("jac_soa", None) is not None:
+        raise ValueError(
+            "ensemble_bdf_integrate_sharded takes the AoS f/jac only: a "
+            "native SoA callable would close over unsharded (.., nsys) "
+            "arrays; route per-system data through params= instead (the "
+            "per-shard SoA wrapping happens inside each device's loop)")
     if mesh is None:
         mesh = make_ensemble_mesh()
     ndev = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]

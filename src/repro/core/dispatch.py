@@ -252,6 +252,64 @@ def _pl_blockdiag_spmv_soa(A, x, *, policy: ExecPolicy):
 
 
 # ---------------------------------------------------------------------------
+# Fused ensemble-Newton ops (SoA (n, nsys) layout, nsys on the lanes).
+# The jnp oracles are the bitwise ground truth of the pre-SoA integrator
+# (the history-rescale oracle deliberately evaluates the AoS einsum on
+# transposed views so the jnp backend keeps its accumulation order; see
+# kernels/ref.py); the pallas kernels are the one-HBM-pass fusions.
+# ---------------------------------------------------------------------------
+
+
+def _jnp_newton_residual_soa(z, fval, psi, gamma, negate, *, policy=None):
+    from repro.kernels import ref as kref
+    return kref.newton_residual_soa_ref(z, fval, psi, gamma, negate)
+
+
+def _pl_newton_residual_soa(z, fval, psi, gamma, negate, *,
+                            policy: ExecPolicy):
+    from repro.kernels import ops as kops
+    return kops.newton_residual_soa(z, fval, psi, gamma,
+                                    batch_tile=policy.batch_tile,
+                                    interpret=policy.interpret,
+                                    negate=negate)
+
+
+def _jnp_masked_update_wrms_soa(z, dz, w, mask, *, policy=None):
+    from repro.kernels import ref as kref
+    return kref.masked_update_wrms_soa_ref(z, dz, w, mask)
+
+
+def _pl_masked_update_wrms_soa(z, dz, w, mask, *, policy: ExecPolicy):
+    from repro.kernels import ops as kops
+    return kops.masked_update_wrms_soa(z, dz, w, mask,
+                                       batch_tile=policy.batch_tile,
+                                       interpret=policy.interpret)
+
+
+def _jnp_history_rescale_soa(W, Z, active, *, policy=None):
+    from repro.kernels import ref as kref
+    return kref.history_rescale_soa_ref(W, Z, active)
+
+
+def _pl_history_rescale_soa(W, Z, active, *, policy: ExecPolicy):
+    from repro.kernels import ops as kops
+    return kops.history_rescale_soa(W, Z, active,
+                                    batch_tile=policy.batch_tile,
+                                    interpret=policy.interpret)
+
+
+def _jnp_wrms_soa(v, w, *, policy=None):
+    from repro.kernels import ref as kref
+    return kref.wrms_soa_ref(v, w)
+
+
+def _pl_wrms_soa(v, w, *, policy: ExecPolicy):
+    from repro.kernels import ops as kops
+    return kops.wrms_soa(v, w, batch_tile=policy.batch_tile,
+                         interpret=policy.interpret)
+
+
+# ---------------------------------------------------------------------------
 # Sparse ops (static shared patterns).  Patterns ride along as hashable
 # tuples — ``csr_spmv`` takes ``(indptr, indices)``, the BSR ops take
 # ``(brows, bcols, nblk)`` — so they key the kernel jit caches and the
@@ -343,6 +401,14 @@ OP_TABLE = {
                           "pallas": _pl_block_inverse_soa},
     "blockdiag_spmv_soa": {"jnp": _jnp_blockdiag_spmv_soa,
                            "pallas": _pl_blockdiag_spmv_soa},
+    # fused ensemble-Newton hot-loop ops (SoA, nsys last)
+    "newton_residual_soa": {"jnp": _jnp_newton_residual_soa,
+                            "pallas": _pl_newton_residual_soa},
+    "masked_update_wrms_soa": {"jnp": _jnp_masked_update_wrms_soa,
+                               "pallas": _pl_masked_update_wrms_soa},
+    "history_rescale_soa": {"jnp": _jnp_history_rescale_soa,
+                            "pallas": _pl_history_rescale_soa},
+    "wrms_soa": {"jnp": _jnp_wrms_soa, "pallas": _pl_wrms_soa},
     # sparse matrices (static shared patterns)
     "csr_spmv": {"jnp": _jnp_csr_spmv, "pallas": _pl_csr_spmv},
     "bsr_spmv_soa": {"jnp": _jnp_bsr_spmv_soa,
@@ -433,6 +499,42 @@ def blockdiag_spmv_soa(A: jnp.ndarray, x: jnp.ndarray,
                        policy: Optional[ExecPolicy] = None) -> jnp.ndarray:
     """y = blockdiag(A) @ x: A:(b,b,NB), x:(b,NB) -> (b,NB) (lsolve)."""
     return dispatch("blockdiag_spmv_soa", policy)(A, x)
+
+
+def newton_residual_soa(z: jnp.ndarray, fval: jnp.ndarray,
+                        psi: jnp.ndarray, gamma: jnp.ndarray,
+                        policy: Optional[ExecPolicy] = None, *,
+                        negate: bool = False) -> jnp.ndarray:
+    """Fused Newton residual g = z - gamma*f - psi; z/f/psi (n, nsys),
+    gamma (nsys,).  ``negate=True`` emits -g (the Newton rhs) in the
+    same pass; the sign is applied to the computed g so both variants
+    round identically."""
+    return dispatch("newton_residual_soa", policy)(z, fval, psi, gamma,
+                                                   negate)
+
+
+def masked_update_wrms_soa(z: jnp.ndarray, dz: jnp.ndarray,
+                           w: jnp.ndarray, mask: jnp.ndarray,
+                           policy: Optional[ExecPolicy] = None):
+    """Fused masked iterate update + per-system WRMS of the correction:
+    -> (where(mask, z+dz, z), wrms-per-system of dz)."""
+    return dispatch("masked_update_wrms_soa", policy)(z, dz, w, mask)
+
+
+def history_rescale_soa(W: jnp.ndarray, Z: jnp.ndarray,
+                        active: jnp.ndarray,
+                        policy: Optional[ExecPolicy] = None) -> jnp.ndarray:
+    """Masked per-system Lagrange history rebuild: W (q1,q1,nsys),
+    Z (q1,n,nsys) -> where(active, sum_i W[j,i]*Z[i], Z[j]); inactive
+    bundles are short-circuited on the pallas backend."""
+    return dispatch("history_rescale_soa", policy)(W, Z, active)
+
+
+def wrms_soa(v: jnp.ndarray, w: jnp.ndarray,
+             policy: Optional[ExecPolicy] = None) -> jnp.ndarray:
+    """Per-system WRMS over the state axis: v/w (n, nsys) -> (nsys,) —
+    the batched row of the wrms_norm family (ensemble error tests)."""
+    return dispatch("wrms_soa", policy)(v, w)
 
 
 def csr_spmv(data: jnp.ndarray, x: jnp.ndarray, pattern,

@@ -83,6 +83,12 @@ class IVP:
     fi  : implicit (stiff) part for IMEX methods
     jac : analytic Jacobian — required by the ``ensemble_dirk`` /
           ``ensemble_bdf`` methods (batched ``(t, y) -> (nsys, n, n)``)
+    f_soa, jac_soa : optional native SoA forms of ``f``/``jac`` for the
+          ensemble hot loop (system axis LAST: ``f_soa(t, y:(n,nsys))
+          -> (n,nsys)``, ``jac_soa -> (n,n,nsys)``).  When supplied,
+          ``ensemble_bdf``/``ensemble_dirk`` evaluate the RHS/Jacobian
+          with ZERO layout conversions; otherwise the AoS forms are
+          wrapped with a transpose at the call boundary.
     jac_sparsity : static per-system Jacobian sparsity, an (n, n)
           boolean/0-1 pattern shared by every ensemble member.  When
           set, ``ensemble_bdf`` binds it to any ``lin_solver`` with a
@@ -96,6 +102,8 @@ class IVP:
     fe: Optional[Callable] = None
     fi: Optional[Callable] = None
     jac: Optional[Callable] = None
+    f_soa: Optional[Callable] = None
+    jac_soa: Optional[Callable] = None
     jac_sparsity: Optional[Any] = None
     y0: Pytree = None
 
@@ -260,7 +268,8 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
         jac = _need(problem, "jac", method)
         y, st = batched.ensemble_dirk_integrate(
             f, jac, problem.y0, t0, tf, _dirk_table(var), opts,
-            policy=opts.policy, **method_kw)
+            policy=opts.policy, f_soa=problem.f_soa,
+            jac_soa=problem.jac_soa, **method_kw)
         lname = lname or "blockdiag_gj"
     elif fam == "ensemble_bdf":
         f = _need(problem, "f", method)
@@ -269,6 +278,7 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
             f, jac, problem.y0, t0, tf, order=order, opts=opts,
             policy=opts.policy, linear_solver=lin_solver,
             jac_sparsity=problem.jac_sparsity, mem=mem,
+            f_soa=problem.f_soa, jac_soa=problem.jac_soa,
             **method_kw)
         lname = lname or "blockdiag_gj"
         nli = st.nli[0] if st.nli is not None else None

@@ -113,6 +113,17 @@ def _is_precond_obj(p) -> bool:
     return p is not None and hasattr(p, "psetup") and hasattr(p, "psolve")
 
 
+def newton_blocks_soa(Jsoa: jnp.ndarray, gamma: jnp.ndarray) -> jnp.ndarray:
+    """Dense SoA Newton blocks M = I - gamma*J: Jsoa (n, n, nsys),
+    gamma (nsys,) -> (n, n, nsys).  Shared by the BlockDiagGJ lsetup,
+    its factor_once=False lsolve, and the dense Krylov matvec — one
+    definition so every solver forms the identical matrix (the ensemble
+    integrator's SoA layout contract: nsys stays LAST)."""
+    n = Jsoa.shape[0]
+    eye = jnp.eye(n, dtype=Jsoa.dtype)
+    return eye[:, :, None] - gamma[None, None, :] * Jsoa
+
+
 class LinearSolver:
     """Base protocol; see the module docstring for the two surfaces."""
 
@@ -282,9 +293,7 @@ class _KrylovSolver(LinearSolver):
                 pdata = ()
             return (Jrepr, pdata)
         if pobj is not None:
-            n = Jsoa.shape[0]
-            eye = jnp.eye(n, dtype=Jsoa.dtype)
-            M = eye[:, :, None] - gamma[None, None, :] * Jsoa
+            M = newton_blocks_soa(Jsoa, gamma)
             pdata = pobj.soa_psetup(M, None, gamma, policy=policy)
         else:
             pdata = ()
@@ -306,9 +315,7 @@ class _KrylovSolver(LinearSolver):
                 return dv.bsr_spmv_soa(V, v[:, None, :], pat,
                                        policy)[:, 0, :]
         else:
-            n = Jrepr.shape[0]
-            eye = jnp.eye(n, dtype=Jrepr.dtype)
-            M_cur = eye[:, :, None] - gamma[None, None, :] * Jrepr
+            M_cur = newton_blocks_soa(Jrepr, gamma)
 
             def matvec(v):
                 return dv.blockdiag_spmv_soa(M_cur, v, policy)
@@ -476,10 +483,7 @@ class BlockDiagGJ(LinearSolver):
     def soa_setup(self, Jsoa, gamma, policy=None):
         if not self.factor_once:
             return Jsoa
-        n = Jsoa.shape[0]
-        eye = jnp.eye(n, dtype=Jsoa.dtype)
-        M = eye[:, :, None] - gamma[None, None, :] * Jsoa
-        return dv.block_inverse_soa(M, policy)
+        return dv.block_inverse_soa(newton_blocks_soa(Jsoa, gamma), policy)
 
     def soa_solve(self, MJ, gamma, gamrat, rhs, policy=None, mem=None):
         zero = jnp.zeros((), jnp.int32)
@@ -487,9 +491,7 @@ class BlockDiagGJ(LinearSolver):
             corr = 2.0 / (1.0 + gamrat)
             return corr[None, :] * dv.blockdiag_spmv_soa(MJ, rhs, policy), \
                 zero, zero
-        n = MJ.shape[0]
-        eye = jnp.eye(n, dtype=MJ.dtype)
-        M_cur = eye[:, :, None] - gamma[None, None, :] * MJ
+        M_cur = newton_blocks_soa(MJ, gamma)
         return dv.block_solve_soa(M_cur, rhs, policy), zero, zero
 
     def bind(self, fi, *, policy=None, mem=None):

@@ -26,8 +26,16 @@ wrms_norm             vector.wrms_norm                vecops wrms_partial
 wrms_norm_mask        vector.wrms_norm_mask           vecops wrms_mask_partial
 dot_prod_multi        vector.dot_prod_multi           vecops multi_dot_partial
 block_solve_soa       direct.gauss_jordan_batched     block_solve GJ kernel
+                                                      (b>8: row-tiled GJ)
 block_inverse_soa     ref.block_inverse_soa_ref       block_solve GJ inverse
+                                                      (b>8: row-tiled GJ)
 blockdiag_spmv_soa    jnp.einsum                      blockdiag_spmv kernel
+newton_residual_soa   ref (z - gamma*f - psi)         newton fused residual
+masked_update_wrms_   ref (where + wrms)              newton fused update+
+soa                                                   per-system WRMS
+history_rescale_soa   ref (masked AoS einsum)         newton lane-parallel
+                                                      masked rebuild
+wrms_soa              ref (per-system WRMS)           newton wrms_soa kernel
 csr_spmv              segment_sum                     sparse ELL gather kernel
 bsr_spmv_soa          einsum+segment_sum              sparse unrolled-pattern
 bsr_block_jacobi_     jnp.linalg.inv                  static diag gather +

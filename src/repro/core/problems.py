@@ -46,6 +46,39 @@ def batched_robertson(nsys: int):
     return f, jac, y0
 
 
+def batched_robertson_soa(nsys: int):
+    """Native SoA companions to :func:`batched_robertson` — the same
+    per-cell rates (identical PRNG keys), with the system axis LAST:
+    ``f_soa(t, y:(3,nsys)) -> (3,nsys)`` and ``jac_soa -> (3,3,nsys)``.
+
+    Passing these to ``ensemble_bdf``/``ensemble_dirk`` (directly or via
+    ``IVP(f_soa=..., jac_soa=...)``) makes the Newton hot loop fully
+    conversion-free: the arithmetic is expression-for-expression the
+    AoS form's, only the stacking axes differ, so trajectories stay
+    bitwise-identical to the wrapped-AoS path (tests/test_soa_carry.py).
+    """
+    key = jax.random.PRNGKey(0)
+    k1 = 0.04 * jnp.ones((nsys,))
+    k2 = 1e4 * (0.5 + jax.random.uniform(key, (nsys,)))
+    k3 = 3e7 * 10.0 ** jax.random.uniform(jax.random.PRNGKey(1), (nsys,),
+                                          minval=-1.0, maxval=1.0)
+
+    def f_soa(t, y):  # y: (3, nsys)
+        a, b, c = y[0], y[1], y[2]
+        r1, r2, r3 = k1 * a, k2 * b * c, k3 * b * b
+        return jnp.stack([-r1 + r2, r1 - r2 - r3, r3], axis=0)
+
+    def jac_soa(t, y):  # -> (3, 3, nsys)
+        a, b, c = y[0], y[1], y[2]
+        z = jnp.zeros_like(a)
+        return jnp.stack([
+            jnp.stack([-k1, k2 * c, k2 * b], axis=0),
+            jnp.stack([k1, -k2 * c - 2 * k3 * b, -k2 * b], axis=0),
+            jnp.stack([z, 2 * k3 * b, z], axis=0)], axis=0)
+
+    return f_soa, jac_soa
+
+
 def ensemble_brusselator(nsys: int, nx: int = 16, du: float = 0.02,
                          dv: float = 0.02, a: float = 1.0):
     """An ensemble of 1-D Brusselator reaction-diffusion systems — the

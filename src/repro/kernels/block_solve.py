@@ -21,6 +21,20 @@ No pivoting: Newton matrices M = I - gamma*J of chemical-kinetics blocks
 are strongly diagonally dominant for acceptable gamma (same assumption
 as the paper's embedded symbolic solver).  A diagonal-scaling variant is
 exposed for robustness.  ``ref.py`` holds the pure-jnp oracle.
+
+Two elimination kernels, selected by block size:
+
+* ``b <= UNROLL_MAX_B`` — the fully-unrolled form above: every block
+  entry is its own live lane-vector (b^2 of them), which is the fastest
+  shape while they all fit in vector registers;
+* ``b > UNROLL_MAX_B``  — a **row-tiled** elimination: the b^2 live
+  vectors of the unrolled form spill registers at b=16 (256 vectors per
+  tile — the BENCH_ensemble.json regression this replaces), so the
+  augmented system instead lives in ONE ``(b, b+1, TN)`` VMEM-resident
+  accumulator and each of the b pivot steps is a handful of whole-array
+  VPU ops (normalize pivot row, mask it out of the factor column, one
+  rank-1 update).  ``ops.py`` additionally shrinks the bundle tile with
+  b^2 so the accumulator stays inside a fixed VMEM budget.
 """
 from __future__ import annotations
 
@@ -31,6 +45,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 LANE = 128
+
+# largest block size the fully-unrolled kernels handle before register
+# pressure wins over unrolling (b^2 live lane-vectors; 64 at b=8 is
+# fine, 256 at b=16 spills — measured in BENCH_ensemble.json)
+UNROLL_MAX_B = 8
 
 
 def _gj_kernel(a_ref, r_ref, x_ref, *, b: int, scale_rows: bool):
@@ -110,18 +129,82 @@ def _gj_inverse_kernel(a_ref, x_ref, *, b: int, scale_rows: bool):
             x_ref[i, j, :] = R[i][j]
 
 
+def _gj_tiled_kernel(a_ref, r_ref, x_ref, *, b: int, scale_rows: bool):
+    """Row-tiled Gauss-Jordan for large blocks (b > UNROLL_MAX_B).
+
+    The augmented system [A | r] lives in one (b, b+1, TN) accumulator;
+    each pivot step is three whole-array ops instead of b^2 per-entry
+    register updates, so the live set is O(b*TN) (one pivot row + one
+    factor column) rather than O(b^2*TN).  The accumulator is held as a
+    functional value: Mosaic materializes it in VMEM either way, and
+    under interpret emulation an explicit ``scratch_shapes`` ref
+    measures 3-7x slower (every ref op round-trips the interpreter's
+    state), which would mask the very regression this kernel fixes.
+    """
+    a = a_ref[...]
+    rr = r_ref[...]
+    if scale_rows:
+        inv_m = 1.0 / jnp.maximum(jnp.max(jnp.abs(a), axis=1), 1e-30)
+        a = a * inv_m[:, None, :]
+        rr = rr * inv_m
+    S = jnp.concatenate([a, rr[:, None, :]], axis=1)    # (b, b+1, TN)
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (b, 1), 0)
+    for k in range(b):
+        inv = 1.0 / S[k, k, :]
+        rowk = S[k, :, :] * inv[None, :]                # normalized pivot row
+        f = jnp.where(row_ids == k, 0.0, S[:, k, :])    # factor column
+        S = S - f[:, None, :] * rowk[None, :, :]        # rank-1 eliminate
+        S = S.at[k, :, :].set(rowk)
+    x_ref[...] = S[:, b, :]
+
+
+def _gj_tiled_inverse_kernel(a_ref, x_ref, *, b: int, scale_rows: bool):
+    """Row-tiled in-place Gauss-Jordan inversion (b > UNROLL_MAX_B).
+
+    Classic in-place GJ: the inverse replaces A in the same (b, b, TN)
+    accumulator (no [A | I] augmentation, so the working set is half the
+    unrolled kernel's).  Per pivot step: normalized pivot row with the
+    pivot slot replaced by 1/piv, rank-1 update, then column k is
+    rewritten as -f/piv (the in-place bookkeeping for the identity
+    columns the augmented form would carry).
+    """
+    a = a_ref[...]
+    if scale_rows:
+        inv_m = 1.0 / jnp.maximum(jnp.max(jnp.abs(a), axis=1), 1e-30)
+        a = a * inv_m[:, None, :]                       # (b, b, TN)
+    S = a
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (b, 1), 0)
+    for k in range(b):
+        inv = 1.0 / S[k, k, :]
+        rowk = jnp.where(row_ids == k, inv[None, :],
+                         S[k, :, :] * inv[None, :])     # (b, TN), col-indexed
+        f = jnp.where(row_ids == k, 0.0, S[:, k, :])
+        S = S - f[:, None, :] * rowk[None, :, :]
+        S = S.at[k, :, :].set(rowk)
+        S = S.at[:, k, :].set(jnp.where(row_ids == k, inv[None, :],
+                                        -f * inv[None, :]))
+    if scale_rows:
+        # rows of A were pre-scaled by D = diag(inv_m):  S = (D A)^-1
+        # = A^-1 D^-1, so post-scale the COLUMNS to recover A^-1
+        S = S * inv_m[None, :, :]
+    x_ref[...] = S
+
+
 def block_inverse_soa(A: jnp.ndarray, *, batch_tile: int = 4 * LANE,
                       interpret: bool = True,
                       scale_rows: bool = True) -> jnp.ndarray:
     """Invert every block: A:(b,b,NB) -> Ainv:(b,b,NB), NB % tile == 0
-    (ops.py pads).  VMEM per program is 2*b*b*tile words (A + R), so the
-    default tile keeps even b=16 f64 at ~2 MiB."""
+    (ops.py pads).  b <= UNROLL_MAX_B uses the unrolled [A | I] kernel
+    (2*b*b*tile VMEM words); larger b the row-tiled IN-PLACE inversion
+    (b*b*tile words) — ops.py additionally shrinks the tile with b^2 to
+    hold a fixed VMEM budget."""
     b, b2, NB = A.shape
     assert b == b2
     assert NB % batch_tile == 0, (NB, batch_tile)
     grid = (NB // batch_tile,)
-    kernel = functools.partial(_gj_inverse_kernel, b=b,
-                               scale_rows=scale_rows)
+    kern = _gj_inverse_kernel if b <= UNROLL_MAX_B \
+        else _gj_tiled_inverse_kernel
+    kernel = functools.partial(kern, b=b, scale_rows=scale_rows)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -140,12 +223,16 @@ def block_solve_soa(A: jnp.ndarray, r: jnp.ndarray, *,
     NB must be a multiple of ``batch_tile`` (ops.py pads).  Each grid
     program owns a (b, b, batch_tile) VMEM tile: for b=8, tile=512 that
     is 8*8*512*4B = 128 KiB of A — comfortably inside ~16 MiB VMEM.
+    b > UNROLL_MAX_B routes to the row-tiled kernel, whose (b, b+1,
+    tile) augmented accumulator ops.py keeps under GJ_VMEM_BYTES by
+    shrinking the tile with b^2.
     """
     b, b2, NB = A.shape
     assert b == b2 and r.shape == (b, NB)
     assert NB % batch_tile == 0, (NB, batch_tile)
     grid = (NB // batch_tile,)
-    kernel = functools.partial(_gj_kernel, b=b, scale_rows=scale_rows)
+    kern = _gj_kernel if b <= UNROLL_MAX_B else _gj_tiled_kernel
+    kernel = functools.partial(kern, b=b, scale_rows=scale_rows)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -14,10 +14,19 @@ import jax.numpy as jnp
 
 from . import block_solve as _bs
 from . import blockdiag_spmv as _sp
+from . import newton as _nw
 from . import sparse as _sx
 from . import vecops as _vo
 
 LANE = 128
+
+# VMEM budget for the row-tiled Gauss-Jordan accumulator (compiled
+# mode): the (b, width, tile) working set is kept under this many
+# bytes, so the bundle tile shrinks ~1/b^2 as blocks grow (b=16 f64
+# caps near 7 lanes, b=24 near 3) instead of spilling.  Interpret mode
+# (CPU emulation) has no VMEM and pays per-grid-step interpreter
+# overhead instead, so the cap only applies when compiling.
+GJ_VMEM_BYTES = 2 * 1024 * 1024
 
 
 def _lane_ceil(n: int) -> int:
@@ -50,6 +59,19 @@ def _batch_tile(nb: int, batch_tile: int) -> int:
     return d * LANE
 
 
+def _gj_batch_tile(nb: int, batch_tile: int, *, b: int, width: int,
+                   itemsize: int, interpret: bool) -> int:
+    """Bundle tile for the Gauss-Jordan kernels: :func:`_batch_tile`
+    with, in compiled mode, the requested tile first clamped so the
+    row-tiled accumulator ``(b, width, tile)`` fits ``GJ_VMEM_BYTES``
+    — i.e. the tile shrinks with b^2.  Small blocks (the unrolled
+    kernels) are unaffected: their cap exceeds any practical tile."""
+    if not interpret:
+        cap = GJ_VMEM_BYTES // (itemsize * b * width)
+        batch_tile = min(batch_tile, max(LANE, cap // LANE * LANE))
+    return _batch_tile(nb, batch_tile)
+
+
 def _pad_blocks_identity(Ap: jnp.ndarray, nb: int) -> jnp.ndarray:
     """Make padding blocks (SoA batch axis 2 beyond ``nb``) identity so
     the no-pivot elimination stays well-defined on them."""
@@ -73,7 +95,8 @@ def block_solve(A: jnp.ndarray, r: jnp.ndarray, *, batch_tile: int = 4 * LANE,
     should call :func:`block_solve_soa` directly and skip the transposes.
     """
     nb, b, _ = A.shape
-    tile = _batch_tile(nb, batch_tile)
+    tile = _gj_batch_tile(nb, batch_tile, b=b, width=b + 1,
+                          itemsize=A.dtype.itemsize, interpret=interpret)
     Asoa = jnp.transpose(A, (1, 2, 0))          # (b, b, nb)
     rsoa = jnp.transpose(r, (1, 0))             # (b, nb)
     Ap, _ = _pad_to(Asoa, tile, axis=2)
@@ -92,7 +115,8 @@ def block_solve_soa(A: jnp.ndarray, r: jnp.ndarray, *,
                     scale_rows: bool = True):
     """SoA API (lane-major batch): A:(b,b,NB), r:(b,NB) -> x:(b,NB)."""
     b, _, nb = A.shape
-    tile = _batch_tile(nb, batch_tile)
+    tile = _gj_batch_tile(nb, batch_tile, b=b, width=b + 1,
+                          itemsize=A.dtype.itemsize, interpret=interpret)
     Ap, _ = _pad_to(A, tile, axis=2)
     Ap = _pad_blocks_identity(Ap, nb)
     rp, _ = _pad_to(r, tile, axis=1)
@@ -111,7 +135,8 @@ def block_inverse_soa(A: jnp.ndarray, *, batch_tile: int = 4 * LANE,
     block once, then each Newton iteration applies it with one
     :func:`blockdiag_spmv_soa` pass (lsolve)."""
     b, _, nb = A.shape
-    tile = _batch_tile(nb, batch_tile)
+    tile = _gj_batch_tile(nb, batch_tile, b=b, width=b,
+                          itemsize=A.dtype.itemsize, interpret=interpret)
     Ap, _ = _pad_to(A, tile, axis=2)
     Ap = _pad_blocks_identity(Ap, nb)
     x = _bs.block_inverse_soa(Ap, batch_tile=tile, interpret=interpret,
@@ -244,6 +269,77 @@ def blockdiag_spmv_soa(A: jnp.ndarray, x: jnp.ndarray, *,
     xp, _ = _pad_to(x, tile, axis=1)
     y = _sp.blockdiag_spmv_soa(Ap, xp, batch_tile=tile, interpret=interpret)
     return y[:, :nb]
+
+
+# ---------------------------------------------------------------------------
+# Fused ensemble-Newton ops (SoA layout, batch on the lane axis)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "interpret",
+                                             "negate"))
+def newton_residual_soa(z: jnp.ndarray, fval: jnp.ndarray,
+                        psi: jnp.ndarray, gamma: jnp.ndarray, *,
+                        batch_tile: int = 4 * LANE, interpret: bool = True,
+                        negate: bool = False):
+    """Fused g = z - gamma*f - psi (``negate=True`` -> -g, the Newton
+    rhs); z/f/psi (n, NB), gamma (NB,), any NB (padded inside)."""
+    n, nb = z.shape
+    tile = _batch_tile(nb, batch_tile)
+    zp, _ = _pad_to(z, tile, axis=1)
+    fp, _ = _pad_to(fval, tile, axis=1)
+    pp, _ = _pad_to(psi, tile, axis=1)
+    gp, _ = _pad_to(gamma, tile, axis=0)
+    g = _nw.newton_residual(zp, fp, pp, gp, batch_tile=tile,
+                            interpret=interpret, negate=negate)
+    return g[:, :nb]
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "interpret"))
+def masked_update_wrms_soa(z: jnp.ndarray, dz: jnp.ndarray, w: jnp.ndarray,
+                           mask: jnp.ndarray, *,
+                           batch_tile: int = 4 * LANE,
+                           interpret: bool = True):
+    """Fused masked z += dz and per-system WRMS of dz: z/dz/w (n, NB),
+    mask (NB,) -> (z_new, dn); padded systems report dn = 0."""
+    n, nb = z.shape
+    tile = _batch_tile(nb, batch_tile)
+    zp, _ = _pad_to(z, tile, axis=1)
+    dp, _ = _pad_to(dz, tile, axis=1)
+    wp, _ = _pad_to(w, tile, axis=1)
+    mp, _ = _pad_to(mask.astype(z.dtype), tile, axis=0)
+    z_new, dn = _nw.masked_update_wrms(zp, dp, wp, mp, batch_tile=tile,
+                                       interpret=interpret)
+    return z_new[:, :nb], dn[:nb]
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "interpret"))
+def history_rescale_soa(W: jnp.ndarray, Z: jnp.ndarray,
+                        active: jnp.ndarray, *,
+                        batch_tile: int = 4 * LANE,
+                        interpret: bool = True):
+    """Masked Lagrange history rebuild: W (q1,q1,NB), Z (q1,n,NB),
+    active (NB,) -> Z_new; padded systems are inactive (Z copied)."""
+    q1, _, nb = W.shape
+    tile = _batch_tile(nb, batch_tile)
+    Wp, _ = _pad_to(W, tile, axis=2)
+    Zp, _ = _pad_to(Z, tile, axis=2)
+    ap, _ = _pad_to(active.astype(Z.dtype), tile, axis=0)
+    Zn = _nw.history_rescale(Wp, Zp, ap, batch_tile=tile,
+                             interpret=interpret)
+    return Zn[:, :, :nb]
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "interpret"))
+def wrms_soa(v: jnp.ndarray, w: jnp.ndarray, *,
+             batch_tile: int = 4 * LANE, interpret: bool = True):
+    """Per-system WRMS over the state axis: v/w (n, NB) -> (NB,)."""
+    n, nb = v.shape
+    tile = _batch_tile(nb, batch_tile)
+    vp, _ = _pad_to(v, tile, axis=1)
+    wp, _ = _pad_to(w, tile, axis=1)
+    return _nw.wrms_soa(vp, wp, batch_tile=tile,
+                        interpret=interpret)[:nb]
 
 
 # ---------------------------------------------------------------------------

@@ -64,6 +64,48 @@ def block_inverse_soa_ref(A: jnp.ndarray) -> jnp.ndarray:
     return jnp.transpose(Ainv, (1, 2, 0))
 
 
+def newton_residual_soa_ref(z: jnp.ndarray, fval: jnp.ndarray,
+                            psi: jnp.ndarray, gamma: jnp.ndarray,
+                            negate: bool = False) -> jnp.ndarray:
+    """g = z - gamma*f - psi in SoA; z/f/psi (n, NB), gamma (NB,).
+    ``negate=True`` returns -g (the Newton rhs); the sign flip is
+    applied to the computed g so both variants round identically."""
+    g = z - gamma[None, :] * fval - psi
+    return -g if negate else g
+
+
+def masked_update_wrms_soa_ref(z: jnp.ndarray, dz: jnp.ndarray,
+                               w: jnp.ndarray, mask: jnp.ndarray):
+    """(z_new, dn): z_new = where(mask, z+dz, z); dn = per-system WRMS
+    of dz (over ALL systems, masked or not); SoA (n, NB) / mask (NB,)."""
+    z_new = jnp.where(mask[None, :] != 0, z + dz, z)
+    t = dz * w
+    return z_new, jnp.sqrt(jnp.mean(t * t, axis=0))
+
+
+def history_rescale_soa_ref(W: jnp.ndarray, Z: jnp.ndarray,
+                            active: jnp.ndarray) -> jnp.ndarray:
+    """Z_new[j,k,s] = sum_i W[j,i,s] Z[i,k,s] where active[s], else
+    Z[j,k,s];  W (q1,q1,NB), Z (q1,n,NB), active (NB,).
+
+    The contraction is evaluated as the AoS einsum on transposed views
+    (exact layout changes XLA folds into the contraction) so the jnp
+    backend reproduces the pre-SoA integrator's accumulation order
+    bitwise — a reformulated sum reassociates and breaks the
+    bitwise-trajectory pin (tests/test_soa_carry.py).
+    """
+    Waos = jnp.transpose(W, (2, 0, 1))
+    Zaos = jnp.transpose(Z, (2, 0, 1))
+    R = jnp.transpose(jnp.einsum("sji,sik->sjk", Waos, Zaos), (1, 2, 0))
+    return jnp.where(active[None, None, :] != 0, R, Z)
+
+
+def wrms_soa_ref(v: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Per-system WRMS over the state axis: v/w (n, NB) -> (NB,)."""
+    t = v * w
+    return jnp.sqrt(jnp.mean(t * t, axis=0))
+
+
 def csr_spmv_ref(data: jnp.ndarray, x: jnp.ndarray, indptr,
                  indices) -> jnp.ndarray:
     """y = A @ x for CSR A with static (indptr, indices); data:(nnz,)."""

@@ -88,8 +88,21 @@ def test_bdf_high_order_beats_low_order():
                          ids=["setup", "direct"])
 def test_bdf_kinetics_jnp_vs_pallas_parity(factor_once):
     """Acceptance gate: trajectories agree between the jnp oracle and the
-    Pallas(interpret) block-kernel path to 1e-8 on the batched-kinetics
-    example, with nsys NOT a multiple of 128."""
+    Pallas(interpret) fused-kernel path at controller-tolerance scale on
+    the batched-kinetics example, with nsys NOT a multiple of 128.
+
+    The bound is the controller's, not machine eps: the fused
+    Newton/history kernels round independently of XLA's fusion of the
+    inline oracles (e.g. z + corr*spmv FMA-contracts inline but not
+    across a kernel boundary), so per-system accept/order decisions can
+    flip and the two *valid* adaptive trajectories separate by the
+    local error the controller permits — which the WRMS control bounds
+    PER COMPONENT as C*(rtol*|y_i| + atol), so the comparison uses the
+    same mixed form (C=100) and the ~1e-5-magnitude intermediate
+    species stays genuinely exercised.  Op-level parity is gated
+    separately at 1e-10 (test_soa_carry.py, kernels_bench --smoke); the
+    jnp path itself is pinned bitwise to the pre-SoA integrator in
+    test_soa_carry.py."""
     nsys = 130
     ls = BlockDiagGJ(factor_once=factor_once)
     f, jac, y0 = _kinetics(nsys)
@@ -102,9 +115,10 @@ def test_bdf_kinetics_jnp_vs_pallas_parity(factor_once):
         f, jac, y0, 0.0, 10.0, opts=opts, policy=pol, linear_solver=ls)
     assert bool(jnp.all(st_j.success)) and bool(jnp.all(st_p.success))
     np.testing.assert_allclose(np.asarray(y_j), np.asarray(y_p),
-                               rtol=0, atol=1e-8)
-    # physically sensible: mass conserved to tolerance scale
+                               rtol=100 * opts.rtol, atol=100 * opts.atol)
+    # physically sensible on BOTH backends: mass conserved to tol scale
     assert float(jnp.max(jnp.abs(jnp.sum(y_j, 1) - 1.0))) < 1e-4
+    assert float(jnp.max(jnp.abs(jnp.sum(y_p, 1) - 1.0))) < 1e-4
 
 
 def test_bdf_matches_scalar_cvode_reference():
@@ -138,8 +152,10 @@ def test_bdf_matches_scalar_cvode_reference():
 
 
 @pytest.mark.parametrize("nb", [7, 130, 516])
-@pytest.mark.parametrize("b", [3, 8])
+@pytest.mark.parametrize("b", [3, 8, 16, 24])
 def test_block_ops_dispatch_parity_ragged_batches(nb, b):
+    """b <= 8 exercises the fully-unrolled GJ kernels, b >= 16 the
+    row-tiled elimination that replaced them at large block sizes."""
     key = jax.random.PRNGKey(0)
     A = jax.random.normal(key, (b, b, nb)) + \
         (b + 2.0) * jnp.eye(b)[:, :, None]
@@ -182,6 +198,26 @@ def test_batch_tile_knob_is_honored():
     assert _batch_tile(7, 128) == 128
     assert _batch_tile(516, 512) == 128      # 640 % 512 != 0 -> one lane
     assert _batch_tile(516, 128 * 5) == 640  # exact bundle still taken
+
+
+def test_gj_vmem_tile_cap_shrinks_with_b_squared():
+    """Compiled-mode GJ tiles are clamped so the (b, width, tile) f64
+    accumulator stays under GJ_VMEM_BYTES — the cap shrinks ~1/b^2.
+    Interpret mode (CPU emulation, no VMEM) is uncapped.  This branch
+    only executes on real TPU, so it is pinned here as pure arithmetic."""
+    from repro.kernels.ops import _gj_batch_tile
+    kw = dict(itemsize=8, interpret=False)
+    # no cap under interpret emulation
+    assert _gj_batch_tile(4096, 4096, b=16, width=17,
+                          itemsize=8, interpret=True) == 4096
+    # b=16 solve: 2MiB/(8*16*17)=963 -> 896 lanes-floor -> divisor 512
+    assert _gj_batch_tile(4096, 4096, b=16, width=17, **kw) == 512
+    # b=24 solve: 2MiB/(8*24*25)=436 -> 384 -> divisor 256
+    assert _gj_batch_tile(4096, 4096, b=24, width=25, **kw) == 256
+    # small blocks: cap (21k+) never binds on a practical tile
+    assert _gj_batch_tile(4096, 512, b=3, width=4, **kw) == 512
+    # floor at one lane even when the budget math rounds to zero
+    assert _gj_batch_tile(4096, 4096, b=64, width=65, **kw) == 128
 
 
 # ---------------------------------------------------------------------------

@@ -250,8 +250,17 @@ def test_ensemble_dirk_with_pallas_backend():
     y_jnp, _ = batched.ensemble_dirk_integrate(
         f, jac, y0, 0.0, 1.0, butcher.SDIRK2,
         ODEOptions(rtol=1e-5, atol=1e-8))
+    # cross-backend agreement of an adaptive integrator is bounded by
+    # the controller: the DIRK stage Newton now runs through the fused
+    # pallas kernels, which round independently of XLA's fusion of the
+    # inline jnp oracles, so accept/step decisions may flip and the
+    # trajectories separate by the permitted local error — which the
+    # WRMS control bounds PER COMPONENT as C*(rtol*|y_i| + atol), so
+    # the comparison uses the same mixed form (C=100) and small
+    # components stay genuinely exercised (see test_ensemble_bdf.py /
+    # test_soa_carry.py for the op-level and bitwise gates)
     np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_jnp),
-                               rtol=1e-10, atol=1e-12)
+                               rtol=100 * 1e-5, atol=100 * 1e-8)
 
 
 def test_ensemble_dirk_honors_h0_and_counts_nni_per_system():

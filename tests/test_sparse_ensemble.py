@@ -142,7 +142,14 @@ def test_ilu0_precond_through_ensemble_bdf():
 
 def test_sparse_solvers_jnp_vs_pallas_parity():
     """The sparse lsolve path dispatches through the op table: jnp and
-    Pallas(interpret) trajectories agree to 1e-8 (ragged nsys)."""
+    Pallas(interpret) trajectories agree at controller-tolerance scale
+    (ragged nsys).  Cross-backend agreement of an adaptive integrator
+    is bounded by decision flips at the permitted local error — the
+    WRMS control's per-component C*(rtol*|y_i| + atol), mirrored in
+    the mixed comparison below (C=100) — not machine eps, now that the
+    fused hot-loop kernels round independently of XLA's fusion of the
+    inline oracles (see test_ensemble_bdf.py's parity gate; op-level
+    parity is pinned at 1e-10 in test_soa_carry.py)."""
     nsys = 10
     f, jac, y0 = batched_robertson(nsys)
     opts = ODEOptions(rtol=1e-8, atol=1e-12, max_steps=400_000)
@@ -156,7 +163,7 @@ def test_sparse_solvers_jnp_vs_pallas_parity():
         f, jac, y0, 0.0, 4.0, opts=opts, policy=pol, **enc_kw)
     assert bool(jnp.all(st_j.success)) and bool(jnp.all(st_p.success))
     np.testing.assert_allclose(np.asarray(y_j), np.asarray(y_p),
-                               rtol=0, atol=1e-8)
+                               rtol=100 * opts.rtol, atol=100 * opts.atol)
 
 
 # ---------------------------------------------------------------------------
