@@ -7,11 +7,13 @@ is modeled in EXPERIMENTS.md §Perf from BlockSpec arithmetic).
 
 ``--smoke`` runs the fast jnp-vs-pallas(interpret) A/B check over every
 dispatched vector op (the CI gate): both backends are invoked through
-the repro.core.dispatch table and must agree to tolerance.  It also
-sweeps the unified front-end: one ``repro.core.ivp.integrate`` call per
-canonical method string under BOTH the jnp and the pallas-interpret
-policy, asserting success (so a regression in any method family or in
-the policy plumbing fails CI before the full suite runs).
+the repro.core.dispatch table and must agree to tolerance, and every op
+is additionally run under ``backend='auto'`` (the autotune-cache /
+cost-model resolver) against the jnp oracle.  It also sweeps the
+unified front-end: one ``repro.core.ivp.integrate`` call per canonical
+method string under the jnp, pallas-interpret, AND auto policies,
+asserting success (so a regression in any method family or in the
+policy plumbing fails CI before the full suite runs).
 """
 from __future__ import annotations
 
@@ -61,11 +63,13 @@ def run():
 
 
 def smoke(n: int = 4096, tol: float = 1e-5):
-    """Fast dispatch-layer A/B: every op, jnp vs pallas-interpret, with a
-    per-op timing row.  Exits nonzero on any mismatch (CI gate)."""
+    """Fast dispatch-layer A/B: every op, jnp vs pallas-interpret AND
+    jnp vs backend='auto' (cache/cost-model-resolved per call site),
+    with a per-op timing row.  Exits nonzero on any mismatch (CI
+    gate)."""
     from repro.core import dispatch as dp
     from repro.core import vector as nv
-    from repro.core.policies import GRID_STRIDE, XLA_FUSED
+    from repro.core.policies import AUTO, GRID_STRIDE, XLA_FUSED
 
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (n,))
@@ -151,6 +155,13 @@ def smoke(n: int = 4096, tol: float = 1e-5):
         ok &= good
         rows.append((f"smoke.{name}", "PASS" if good else "FAIL",
                      f"maxerr={err:.2e},pallas_us={t_p:.0f}"))
+        # auto backend: whatever the cache/model resolves must agree too
+        c = np.asarray(fn(AUTO))
+        err_a = float(np.max(np.abs(a - c)))
+        good_a = err_a <= tol
+        ok &= good_a
+        rows.append((f"smoke.auto.{name}", "PASS" if good_a else "FAIL",
+                     f"maxerr={err_a:.2e}"))
     return rows, ok
 
 
@@ -163,7 +174,7 @@ def frontend_smoke():
     from repro.core.arkode import ODEOptions
     from repro.core.context import Context
     from repro.core.ivp import IVP, METHOD_STRINGS, integrate
-    from repro.core.policies import GRID_STRIDE, XLA_FUSED
+    from repro.core.policies import AUTO, GRID_STRIDE, XLA_FUSED
 
     lam = 12.0
     f1 = lambda t, y: -lam * (y - jnp.cos(t))
@@ -180,7 +191,8 @@ def frontend_smoke():
     ens = IVP(f=fb, jac=jb, y0=jnp.zeros((nsys, n)))
 
     rows, ok = [], True
-    for pname, pol in (("jnp", XLA_FUSED), ("pallas", GRID_STRIDE)):
+    for pname, pol in (("jnp", XLA_FUSED), ("pallas", GRID_STRIDE),
+                       ("auto", AUTO)):
         ctx = Context(policy=pol)
         opts = ctx.options(rtol=1e-4, atol=1e-7, max_steps=20_000)
         for m in METHOD_STRINGS:

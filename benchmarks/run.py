@@ -8,6 +8,7 @@ during ``run()``; the harness writes it out (e.g. ``ensemble_bench`` ->
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run vector_ops # one module
   PYTHONPATH=src python -m benchmarks.run --check    # CI perf gate
+  PYTHONPATH=src python -m benchmarks.run --tune     # autotune cache
 
 ``--check`` re-times every configuration recorded in the committed
 ``BENCH_ensemble.json`` and exits 1 if any pallas-interpret config
@@ -17,8 +18,17 @@ practice the gate asserts the kernels keep BEATING the jnp oracle
 rather than reproducing a noisy high-water mark (timing gates the
 >=4096-system configs; smaller ones are timer-noise-bound and
 informational) — or if ANY config drifts past the 1e-14 accuracy
-bound.  This is the gate the CI smoke step runs (ensemble_bench.check
-documents the cap rationale).
+bound.  It then applies the same discipline to every entry in the
+committed autotune cache (``.autotune/interpret.json``): the recorded
+jnp-vs-pallas winner must still win on re-measure
+(autotune_bench.check).  This is the gate the CI smoke step runs
+(ensemble_bench.check documents the cap rationale).
+
+``--tune`` regenerates the autotune cache: every OP_TABLE op is timed
+on both backends over a grid of shape signatures and the measured
+winners/tiles are written to ``.autotune/interpret.json`` (committed,
+like the BENCH files) — the measurement store that ``backend='auto'``
+dispatch resolves from.
 """
 from __future__ import annotations
 
@@ -43,11 +53,19 @@ MODULES = [
 
 
 def main() -> None:
+    if "--tune" in sys.argv[1:]:
+        from benchmarks import autotune_bench
+        cache = autotune_bench.tune()
+        print(f"tune,{len(cache.entries)},{cache.path}")
+        sys.exit(0)
     if "--check" in sys.argv[1:]:
-        from benchmarks import ensemble_bench
+        from benchmarks import autotune_bench, ensemble_bench
         ok = ensemble_bench.check()
         print(f"perf_check,{'PASS' if ok else 'FAIL'},BENCH_ensemble.json")
-        sys.exit(0 if ok else 1)
+        ok_tune = autotune_bench.check()
+        print(f"autotune_check,{'PASS' if ok_tune else 'FAIL'},"
+              f".autotune/interpret.json")
+        sys.exit(0 if (ok and ok_tune) else 1)
     picked = sys.argv[1:] or MODULES
     print("name,us_per_call,derived")
     for name in picked:

@@ -17,10 +17,95 @@ import json
 import re
 from typing import Dict, Optional
 
-# TPU v5e per chip
-PEAK_FLOPS = 197e12          # bf16
-HBM_BW = 819e9               # bytes/s
-ICI_BW = 50e9                # bytes/s per link
+
+@dataclasses.dataclass(frozen=True)
+class Device:
+    """One roofline device entry (per chip).
+
+    The physical ceilings (``peak_flops``/``hbm_bw``/``ici_bw``) drive
+    :meth:`Roofline.finalize`; the remaining fields parameterize the
+    per-op dispatch cost model in :mod:`repro.analysis.opcost`:
+
+    vmem_bytes        : working-set budget for row-tiled Pallas
+                        accumulators (the ``GJ_VMEM_BYTES`` knob, now a
+                        device property); ``None`` = uncapped (interpret
+                        mode has no VMEM — it pays per-step interpreter
+                        overhead instead).
+    jnp_bw/pallas_bw  : effective streamed bandwidth each backend
+                        sustains on this device (<= hbm_bw; on the
+                        ``interpret`` pseudo-device these are host-RAM
+                        figures calibrated against ``--tune`` data).
+    jnp_launch        : per-dispatch overhead on the jnp side [s] —
+                        one fused XLA kernel launch on compiled
+                        devices; on the ``interpret`` pseudo-device it
+                        is the eager per-primitive dispatch cost the
+                        oracle pays ``jnp_kernels`` times (opcost
+                        counts the oracle's primitive dispatches).
+    pallas_call       : fixed pallas_call entry overhead [s].
+    pallas_step       : per-grid-step cost [s] — compiled program
+                        prologue, or the interpreter's per-step Python
+                        loop on the pseudo-device.
+    interp_op         : interpret mode only: per kernel-body primitive
+                        per grid step [s] (numpy dispatch overhead);
+                        0.0 on compiled devices.
+    interpret         : True for the CPU-emulation pseudo-device.
+    """
+
+    name: str
+    peak_flops: float
+    hbm_bw: float
+    ici_bw: float
+    vmem_bytes: Optional[int] = 2 * 1024 * 1024
+    jnp_bw: float = 0.0          # 0 -> defaults to hbm_bw
+    pallas_bw: float = 0.0       # 0 -> defaults to hbm_bw
+    jnp_launch: float = 2e-6
+    pallas_call: float = 2e-6
+    pallas_step: float = 1e-7
+    interp_op: float = 0.0
+    interpret: bool = False
+
+    def bw(self, backend: str) -> float:
+        eff = self.jnp_bw if backend == "jnp" else self.pallas_bw
+        return eff or self.hbm_bw
+
+
+DEVICES: Dict[str, Device] = {
+    # TPU v5e per chip (bf16 peak) — the paper-model target.
+    "tpu_v5e": Device(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
+                      ici_bw=50e9),
+    # TPU v4 per chip: larger part, same model structure.
+    "tpu_v4": Device(name="tpu_v4", peak_flops=275e12, hbm_bw=1228e9,
+                     ici_bw=100e9),
+    # The interpret/CPU pseudo-device: Pallas kernels run under the
+    # interpreter (numpy per grid step), jnp runs through XLA:CPU.  The
+    # effective-rate and overhead constants are calibrated against the
+    # committed .autotune/interpret.json measurements on this host
+    # class (weighted relative-error fit over the 62-entry grid); they
+    # exist to rank backends, not to predict wall time.  jnp_launch is
+    # the eager per-primitive dispatch cost — the oracle's fixed
+    # overhead scales with opcost's jnp_kernels dispatch counts.
+    "interpret": Device(name="interpret", peak_flops=5e9, hbm_bw=10e9,
+                        ici_bw=10e9, vmem_bytes=None,
+                        jnp_bw=7e9, pallas_bw=9e9,
+                        jnp_launch=70e-6, pallas_call=20e-6,
+                        pallas_step=10e-6, interp_op=2e-6,
+                        interpret=True),
+}
+
+
+def get_device(name: str) -> Device:
+    try:
+        return DEVICES[name]
+    except KeyError:
+        raise ValueError(f"unknown roofline device {name!r}; "
+                         f"known: {sorted(DEVICES)}") from None
+
+
+# Back-compat module constants (TPU v5e per chip) — Roofline.finalize
+# and older callers read these; they alias the device-table entry.
+PEAK_FLOPS = DEVICES["tpu_v5e"].peak_flops    # bf16
+HBM_BW = DEVICES["tpu_v5e"].hbm_bw            # bytes/s
+ICI_BW = DEVICES["tpu_v5e"].ici_bw            # bytes/s per link
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -196,10 +281,11 @@ class Roofline:
     coll_detail: Optional[Dict] = None
     memory_per_chip: Optional[Dict] = None
 
-    def finalize(self):
-        self.t_compute = self.hlo_flops / PEAK_FLOPS
-        self.t_memory = self.hlo_bytes / HBM_BW
-        self.t_collective = self.coll_bytes / ICI_BW
+    def finalize(self, device: str = "tpu_v5e"):
+        dev = get_device(device)
+        self.t_compute = self.hlo_flops / dev.peak_flops
+        self.t_memory = self.hlo_bytes / dev.hbm_bw
+        self.t_collective = self.coll_bytes / dev.ici_bw
         terms = {"compute": self.t_compute, "memory": self.t_memory,
                  "collective": self.t_collective}
         self.bottleneck = max(terms, key=terms.get)
@@ -207,7 +293,7 @@ class Roofline:
         self.useful_ratio = (self.model_flops / total_hlo
                              if total_hlo else 0.0)
         t_dom = max(terms.values())
-        ideal = self.model_flops / self.chips / PEAK_FLOPS
+        ideal = self.model_flops / self.chips / dev.peak_flops
         self.mfu_bound = ideal / t_dom if t_dom > 0 else 0.0
         return self
 

@@ -1,0 +1,310 @@
+"""Persisted autotune cache + the ``backend='auto'`` resolver.
+
+The measured half of cost-model-driven dispatch: ``benchmarks/run.py
+--tune`` times every OP_TABLE op over a grid of signatures on both
+backends and writes the winners to ``.autotune/<device>.json``
+(committed alongside the BENCH files).  ``backend='auto'`` dispatch
+resolves each call site at trace time:
+
+1. per-op override on the policy (``ExecPolicy.op_overrides``) — forced;
+2. exact autotune-cache hit for (op, shape-signature, dtype) — the
+   measured winner and its measured-best tile;
+3. nearest cache entry (same op/dtype/structural params, closest tiled-
+   axis length within 8x) — measurement generalizes along the batch
+   axis far better than across block sizes;
+4. the analytical model (:mod:`repro.analysis.opcost`) — always
+   evaluated anyway, so every decision records whether model and
+   measurement agree (``ctx.dispatch_report()`` surfaces mismatches).
+
+Cache files are schema-versioned: a loader seeing a different
+``schema`` (or an entry whose key disagrees with its recorded
+signature) drops the stale data and falls back to the model — never an
+error, exactly like a cold cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.analysis import opcost
+from repro.analysis.opcost import OpSig
+from repro.analysis.roofline import get_device
+
+#: bump when the key derivation or entry layout changes; mismatched
+#: files are discarded wholesale (stale winners are worse than a cold
+#: cache — they would silently pin yesterday's loser).
+SCHEMA_VERSION = 1
+
+#: nearest-entry fallback range along the tiled axis (log-distance cap).
+NEAREST_MAX_FACTOR = 8.0
+
+
+def default_cache_dir() -> Path:
+    """``$REPRO_AUTOTUNE_DIR`` or ``<repo_root>/.autotune`` (resolved
+    from this file so tests/benchmarks work from any cwd)."""
+    env = os.environ.get("REPRO_AUTOTUNE_DIR")
+    if env:
+        return Path(env)
+    return Path(__file__).resolve().parents[3] / ".autotune"
+
+
+@dataclasses.dataclass
+class Entry:
+    """One measured (op, signature) record."""
+
+    sig: OpSig
+    t_jnp: float              # best-of-reps seconds
+    t_pallas: float
+    tile: int = 0             # measured-best pallas tile (0 = default)
+
+    @property
+    def winner(self) -> str:
+        return "jnp" if self.t_jnp <= self.t_pallas else "pallas"
+
+    @property
+    def ratio(self) -> float:
+        """Measured jnp/pallas time ratio (>1 -> pallas wins)."""
+        return self.t_jnp / max(self.t_pallas, 1e-12)
+
+    def to_json(self) -> dict:
+        return {"sig": dataclasses.asdict(self.sig), "t_jnp": self.t_jnp,
+                "t_pallas": self.t_pallas, "tile": self.tile,
+                "winner": self.winner}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Entry":
+        return cls(sig=OpSig(**d["sig"]), t_jnp=float(d["t_jnp"]),
+                   t_pallas=float(d["t_pallas"]), tile=int(d.get("tile", 0)))
+
+
+class AutotuneCache:
+    """Schema-versioned, per-device persisted measurement store."""
+
+    def __init__(self, device: str, path: Optional[Path] = None):
+        self.device = device
+        self.path = Path(path) if path is not None else \
+            default_cache_dir() / f"{device}.json"
+        self.entries: Dict[str, Entry] = {}
+        self.stale = False        # a file existed but was invalidated
+
+    # -- persistence --------------------------------------------------------
+
+    def load(self) -> "AutotuneCache":
+        """Read the cache file; schema or key mismatches discard the
+        file's (or entry's) data silently — a cold cache, not an error."""
+        self.entries = {}
+        try:
+            payload = json.loads(self.path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return self
+        if payload.get("schema") != SCHEMA_VERSION or \
+                payload.get("device") != self.device:
+            self.stale = True
+            return self
+        for key, raw in payload.get("entries", {}).items():
+            try:
+                entry = Entry.from_json(raw)
+            except (KeyError, TypeError, ValueError):
+                self.stale = True
+                continue
+            if entry.sig.key() != key:          # mismatched/corrupt key
+                self.stale = True
+                continue
+            self.entries[key] = entry
+        return self
+
+    def save(self) -> Path:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        payload = {"schema": SCHEMA_VERSION, "device": self.device,
+                   "note": ("measured best-of-reps seconds per backend; "
+                            "regenerate with: PYTHONPATH=src python -m "
+                            "benchmarks.run --tune"),
+                   "entries": {k: e.to_json()
+                               for k, e in sorted(self.entries.items())}}
+        self.path.write_text(json.dumps(payload, indent=2) + "\n")
+        return self.path
+
+    # -- lookup -------------------------------------------------------------
+
+    def put(self, entry: Entry) -> None:
+        self.entries[entry.sig.key()] = entry
+
+    def get(self, sig: OpSig) -> Optional[Entry]:
+        return self.entries.get(sig.key())
+
+    def nearest(self, sig: OpSig) -> Optional[Entry]:
+        """Closest entry with the same op/dtype and structural params
+        (b, k, nnz), ranked by log-distance along the tiled axis and
+        capped at :data:`NEAREST_MAX_FACTOR` — batch size extrapolates;
+        block structure does not."""
+        best, best_d = None, math.inf
+        for e in self.entries.values():
+            es = e.sig
+            if (es.op, es.dtype, es.b, es.k, es.nnz) != \
+                    (sig.op, sig.dtype, sig.b, sig.k, sig.nnz):
+                continue
+            a, c = max(1, es.axis_len), max(1, sig.axis_len)
+            d = abs(math.log(a / c))
+            if d < best_d:
+                best, best_d = e, d
+        if best is not None and best_d <= math.log(NEAREST_MAX_FACTOR):
+            return best
+        return None
+
+
+@dataclasses.dataclass
+class Decision:
+    """One resolved call site (recorded once per unique signature)."""
+
+    sig: OpSig
+    backend: str
+    source: str               # 'override' | 'cache' | 'near' | 'model'
+    tile: int
+    model_winner: str
+    cached_winner: Optional[str] = None
+    hits: int = 1
+
+    @property
+    def agree(self) -> Optional[bool]:
+        """Model-vs-measurement agreement (None without a measurement)."""
+        if self.cached_winner is None:
+            return None
+        return self.model_winner == self.cached_winner
+
+    def to_dict(self) -> dict:
+        return {"op": self.sig.op, "sig": self.sig.key(),
+                "backend": self.backend, "source": self.source,
+                "tile": self.tile, "model_winner": self.model_winner,
+                "cached_winner": self.cached_winner, "agree": self.agree,
+                "hits": self.hits}
+
+
+class Resolver:
+    """Per-device decision engine for ``backend='auto'`` dispatch."""
+
+    def __init__(self, device: str, cache: Optional[AutotuneCache] = None):
+        self.device = device
+        self.cache = cache if cache is not None else \
+            AutotuneCache(device).load()
+        self.decisions: Dict[str, Decision] = {}
+
+    def decide(self, sig: OpSig, requested_tile: Optional[int] = None,
+               override: Optional[str] = None) -> Decision:
+        """Resolve one call site; memoized per unique signature."""
+        key = sig.key()
+        hit = self.decisions.get(key)
+        if hit is not None and override is None:
+            hit.hits += 1
+            return hit
+        pred = opcost.predict(sig, self.device, requested_tile)
+        entry = self.cache.get(sig)
+        near = None if entry is not None else self.cache.nearest(sig)
+        measured = entry or near
+        if override:
+            backend, source = override, "override"
+        elif entry is not None:
+            backend, source = entry.winner, "cache"
+        elif near is not None:
+            backend, source = near.winner, "near"
+        else:
+            backend, source = pred.winner, "model"
+        tile = pred.tile
+        if measured is not None and measured.tile and backend == "pallas":
+            tile = min(measured.tile,
+                       opcost._lane_ceil(max(1, sig.axis_len)))
+        dec = Decision(sig=sig, backend=backend, source=source, tile=tile,
+                       model_winner=pred.winner,
+                       cached_winner=measured.winner if measured else None)
+        self.decisions[key] = dec
+        return dec
+
+    # -- reporting ----------------------------------------------------------
+
+    def report(self) -> dict:
+        """Decisions so far + a model-vs-cache audit over the *whole*
+        cache (the >=80%-agreement acceptance metric), mispredictions
+        listed explicitly."""
+        audit = model_audit(self.cache)
+        return {"device": self.device,
+                "cache_path": str(self.cache.path),
+                "cache_entries": len(self.cache.entries),
+                "cache_stale": self.cache.stale,
+                "decisions": [d.to_dict()
+                              for d in self.decisions.values()],
+                **audit}
+
+
+def model_audit(cache: AutotuneCache) -> dict:
+    """Compare the analytical model's predicted winner against every
+    measured cache entry."""
+    agree, mispredictions = 0, []
+    for e in cache.entries.values():
+        pred = opcost.predict(e.sig, cache.device)
+        if pred.winner == e.winner:
+            agree += 1
+        else:
+            mispredictions.append(
+                {"sig": e.sig.key(), "measured": e.winner,
+                 "predicted": pred.winner,
+                 "measured_ratio": round(e.ratio, 3),
+                 "predicted_ratio": round(pred.ratio, 3)})
+    total = len(cache.entries)
+    return {"model_agreement": (agree / total) if total else None,
+            "model_agree": agree, "model_total": total,
+            "mispredictions": mispredictions}
+
+
+# ---------------------------------------------------------------------------
+# Process-wide resolver registry.  ExecPolicy stays a frozen hashable
+# value type (it keys jit caches), so it carries only the device *name*;
+# the mutable resolver/cache state lives here and Context fronts it.
+# ---------------------------------------------------------------------------
+
+_RESOLVERS: Dict[str, Resolver] = {}
+
+
+def get_resolver(device: str) -> Resolver:
+    get_device(device)                      # validate the name early
+    res = _RESOLVERS.get(device)
+    if res is None:
+        res = _RESOLVERS[device] = Resolver(device)
+    return res
+
+
+def reset_resolver(device: Optional[str] = None) -> None:
+    """Drop memoized resolvers (tests; after regenerating a cache)."""
+    if device is None:
+        _RESOLVERS.clear()
+    else:
+        _RESOLVERS.pop(device, None)
+
+
+def resolve(op: str, policy, *args):
+    """Trace-time entry point for ``backend='auto'`` dispatch: extract
+    the call-site signature, decide, and run the chosen implementation
+    under a concretized policy.  Imported lazily by
+    :func:`repro.core.dispatch.dispatch` to avoid an import cycle."""
+    from . import dispatch as dp
+    sig = opcost.signature(op, args)
+    res = get_resolver(policy.device_name())
+    dec = res.decide(sig, requested_tile=None)
+    fields = {"backend": dec.backend}
+    if dec.backend == "pallas":
+        if op in opcost.BATCHED_OPS:
+            fields["batch_tile"] = dec.tile
+        elif op in opcost.REDUCTION_OPS:
+            fields["reduce_tile"] = dec.tile
+        else:
+            fields["block_elems"] = dec.tile
+    concrete = dataclasses.replace(policy, op_overrides=(), **fields)
+    fn = dp.OP_TABLE[op].get(dec.backend, dp.OP_TABLE[op]["jnp"])
+    return fn(*args, policy=concrete)
+
+
+def decisions_report(policy) -> dict:
+    """Report for the resolver belonging to ``policy``'s device."""
+    return get_resolver(policy.device_name()).report()

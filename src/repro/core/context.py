@@ -48,6 +48,25 @@ class Context:
         kw.setdefault("policy", self.policy)
         return ODEOptions(**kw)
 
+    # -- cost-model-driven dispatch ('auto' backend) -------------------------
+
+    @property
+    def autotune(self) -> Any:
+        """The :class:`~repro.core.autotune.Resolver` for this context's
+        policy device — loading the persisted ``.autotune/<device>.json``
+        cache on first touch.  The resolver is process-wide per device
+        (ExecPolicy must stay a hashable value type), so the context is
+        the owning front-end, not a second copy."""
+        from . import autotune
+        return autotune.get_resolver(self.policy.device_name())
+
+    def dispatch_report(self) -> dict:
+        """Inspectable record of every ``backend='auto'`` decision made
+        for this context's device — per-signature backend/tile/source —
+        plus the model-vs-measurement audit over the whole autotune
+        cache (agreement fraction and explicit mispredictions)."""
+        return self.autotune.report()
+
     # -- counter accumulation ------------------------------------------------
 
     @staticmethod

@@ -216,6 +216,17 @@ def _jnp_wrms_ss(x, w, *, policy=None):
 # ---------------------------------------------------------------------------
 
 
+def _gj_vmem(policy: ExecPolicy):
+    """VMEM budget for the row-tiled GJ accumulator, from the policy's
+    roofline device entry (None -> the kernels' GJ_VMEM_BYTES default;
+    only consulted in compiled mode)."""
+    from repro.analysis.roofline import get_device
+    try:
+        return get_device(policy.device_name()).vmem_bytes
+    except ValueError:
+        return None
+
+
 def _jnp_block_solve_soa(A, r, *, policy=None):
     from .direct import gauss_jordan_batched
     x = gauss_jordan_batched(jnp.transpose(A, (2, 0, 1)),
@@ -226,7 +237,8 @@ def _jnp_block_solve_soa(A, r, *, policy=None):
 def _pl_block_solve_soa(A, r, *, policy: ExecPolicy):
     from repro.kernels import ops as kops
     return kops.block_solve_soa(A, r, batch_tile=policy.batch_tile,
-                                interpret=policy.interpret)
+                                interpret=policy.interpret,
+                                vmem_bytes=_gj_vmem(policy))
 
 
 def _jnp_block_inverse_soa(A, *, policy=None):
@@ -237,7 +249,8 @@ def _jnp_block_inverse_soa(A, *, policy=None):
 def _pl_block_inverse_soa(A, *, policy: ExecPolicy):
     from repro.kernels import ops as kops
     return kops.block_inverse_soa(A, batch_tile=policy.batch_tile,
-                                  interpret=policy.interpret)
+                                  interpret=policy.interpret,
+                                  vmem_bytes=_gj_vmem(policy))
 
 
 def _jnp_blockdiag_spmv_soa(A, x, *, policy=None):
@@ -422,16 +435,100 @@ OP_TABLE = {
 def dispatch(op: str, policy: Optional[ExecPolicy] = None):
     """Resolve `op` to the implementation selected by `policy`.
 
-    ``None`` means :data:`~repro.core.policies.XLA_FUSED`.  Unknown
-    backends raise; ops without a pallas implementation fall back to jnp
-    (there are none today, but the table is the extension point).
+    ``None`` means :data:`~repro.core.policies.XLA_FUSED`.  Unknown ops
+    and backends raise ``ValueError``; ops without a pallas
+    implementation fall back to jnp (there are none today, but the
+    table is the extension point).
+
+    ``backend='auto'`` defers the choice to the call site: the returned
+    callable extracts the argument shape signature at trace time and
+    lets :mod:`repro.core.autotune` pick the backend and tile from the
+    measured cache (falling back to the analytical model in
+    :mod:`repro.analysis.opcost`).  Per-op ``policy.op_overrides`` pin
+    individual ops first.
     """
     policy = XLA_FUSED if policy is None else policy
-    impls = OP_TABLE[op]
-    if policy.backend not in ("jnp", "pallas"):
-        raise ValueError(f"unknown ExecPolicy backend: {policy.backend!r}")
-    fn = impls.get(policy.backend, impls["jnp"])
+    impls = OP_TABLE.get(op)
+    if impls is None:
+        raise ValueError(f"unknown dispatch op {op!r}; valid OP_TABLE "
+                         f"ops: {', '.join(sorted(OP_TABLE))}")
+    backend = policy.backend_for(op) if hasattr(policy, "backend_for") \
+        else policy.backend
+    if backend == "auto":
+        from . import autotune
+        return functools.partial(autotune.resolve, op, policy)
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown ExecPolicy backend: {backend!r}")
+    fn = impls.get(backend, impls["jnp"])
     return functools.partial(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# Documentation rendering: the op-table matrices in the policies module
+# docstring and the README are generated FROM this table (one row per
+# OP_TABLE key), so new ops cannot drift out of the docs — a test
+# asserts the rendered text is embedded verbatim.
+# ---------------------------------------------------------------------------
+
+# short impl descriptions per backend; the renderer iterates OP_TABLE
+# keys, so an op missing here still gets a row (with generic text).
+OP_NOTES = {
+    "linear_sum": ("vector.linear_sum", "vecops lincomb (K=2)"),
+    "linear_combination": ("vector.linear_combination",
+                           "vecops lincomb kernel"),
+    "scale_add_multi": ("vector.scale_add_multi", "vecops scale_add_multi"),
+    "axpy": ("vector.axpy", "vecops lincomb (K=2)"),
+    "dot": ("vector.dot", "vecops dot_partial"),
+    "wrms_norm": ("vector.wrms_norm", "vecops wrms_partial"),
+    "wrms_norm_mask": ("vector.wrms_norm_mask", "vecops wrms_mask_partial"),
+    "dot_prod_multi": ("vector.dot_prod_multi", "vecops multi_dot_partial"),
+    "wrms_ss": ("vector prod+dot", "vecops wrms_partial (raw ss)"),
+    "block_solve_soa": ("direct.gauss_jordan_batched",
+                        "GJ kernel (b>8: row-tiled)"),
+    "block_inverse_soa": ("ref.block_inverse_soa_ref",
+                          "GJ inverse (b>8: row-tiled)"),
+    "blockdiag_spmv_soa": ("jnp.einsum", "blockdiag_spmv kernel"),
+    "newton_residual_soa": ("ref (z - gamma*f - psi)",
+                            "newton fused residual"),
+    "masked_update_wrms_soa": ("ref (where + wrms)",
+                               "newton fused update+WRMS"),
+    "history_rescale_soa": ("ref (masked AoS einsum)",
+                            "newton masked rebuild"),
+    "wrms_soa": ("ref (per-system WRMS)", "newton wrms_soa kernel"),
+    "csr_spmv": ("segment_sum", "sparse ELL gather kernel"),
+    "bsr_spmv_soa": ("einsum+segment_sum", "sparse unrolled-pattern"),
+    "bsr_block_jacobi_inverse_soa": ("jnp.linalg.inv",
+                                     "diag gather + GJ inverse"),
+}
+
+
+def op_table_rows():
+    """(op, jnp description, pallas description) per OP_TABLE entry."""
+    return [(op,) + OP_NOTES.get(op, ("jnp oracle", "pallas kernel"))
+            for op in OP_TABLE]
+
+
+def render_op_table(fmt: str = "rst") -> str:
+    """Render the backend matrix from :data:`OP_TABLE` ('rst' for the
+    policies-module docstring, 'md' for the README)."""
+    rows = op_table_rows()
+    heads = ("op", "'jnp' backend", "'pallas' backend")
+    widths = [max(len(r[i]) for r in rows + [heads]) for i in range(3)]
+    if fmt == "md":
+        lines = ["| " + " | ".join(h.ljust(w)
+                                   for h, w in zip(heads, widths)) + " |",
+                 "|" + "|".join("-" * (w + 2) for w in widths) + "|"]
+        lines += ["| " + " | ".join(c.ljust(w)
+                                    for c, w in zip(r, widths)) + " |"
+                  for r in rows]
+        return "\n".join(lines)
+    rule = "  ".join("=" * w for w in widths)
+    lines = [rule, "  ".join(h.ljust(w)
+                             for h, w in zip(heads, widths)).rstrip(), rule]
+    lines += ["  ".join(c.ljust(w)
+                        for c, w in zip(r, widths)).rstrip() for r in rows]
+    lines.append(rule)
+    return "\n".join(lines)
 
 
 # ---------------------------------------------------------------------------
@@ -558,3 +655,9 @@ def bsr_block_jacobi_inverse_soa(values: jnp.ndarray, pattern,
     psetup): values:(nnzb,b,b,NB) -> (b,b,nblk*NB), block-major."""
     return dispatch("bsr_block_jacobi_inverse_soa", policy)(values,
                                                             pattern)
+
+
+if __name__ == "__main__":      # regenerate the docs' op-table matrices
+    print(render_op_table("rst"))
+    print()
+    print(render_op_table("md"))

@@ -60,14 +60,21 @@ def _batch_tile(nb: int, batch_tile: int) -> int:
 
 
 def _gj_batch_tile(nb: int, batch_tile: int, *, b: int, width: int,
-                   itemsize: int, interpret: bool) -> int:
+                   itemsize: int, interpret: bool,
+                   vmem_bytes=None) -> int:
     """Bundle tile for the Gauss-Jordan kernels: :func:`_batch_tile`
     with, in compiled mode, the requested tile first clamped so the
-    row-tiled accumulator ``(b, width, tile)`` fits ``GJ_VMEM_BYTES``
+    row-tiled accumulator ``(b, width, tile)`` fits the VMEM budget
     — i.e. the tile shrinks with b^2.  Small blocks (the unrolled
-    kernels) are unaffected: their cap exceeds any practical tile."""
+    kernels) are unaffected: their cap exceeds any practical tile.
+
+    ``vmem_bytes`` overrides the default :data:`GJ_VMEM_BYTES` budget —
+    the cost-model dispatch layer passes the roofline device table's
+    budget here so the clamp is a policy-visible decision rather than a
+    module constant."""
     if not interpret:
-        cap = GJ_VMEM_BYTES // (itemsize * b * width)
+        budget = GJ_VMEM_BYTES if vmem_bytes is None else vmem_bytes
+        cap = budget // (itemsize * b * width)
         batch_tile = min(batch_tile, max(LANE, cap // LANE * LANE))
     return _batch_tile(nb, batch_tile)
 
@@ -84,9 +91,10 @@ def _pad_blocks_identity(Ap: jnp.ndarray, nb: int) -> jnp.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=("batch_tile", "interpret",
-                                             "scale_rows"))
+                                             "scale_rows", "vmem_bytes"))
 def block_solve(A: jnp.ndarray, r: jnp.ndarray, *, batch_tile: int = 4 * LANE,
-                interpret: bool = True, scale_rows: bool = True):
+                interpret: bool = True, scale_rows: bool = True,
+                vmem_bytes=None):
     """Batched block solve, AoS API: A:(nb,b,b), r:(nb,b) -> x:(nb,b).
 
     Transposes to the SoA lane-major layout, pads the batch to the tile
@@ -96,7 +104,8 @@ def block_solve(A: jnp.ndarray, r: jnp.ndarray, *, batch_tile: int = 4 * LANE,
     """
     nb, b, _ = A.shape
     tile = _gj_batch_tile(nb, batch_tile, b=b, width=b + 1,
-                          itemsize=A.dtype.itemsize, interpret=interpret)
+                          itemsize=A.dtype.itemsize, interpret=interpret,
+                          vmem_bytes=vmem_bytes)
     Asoa = jnp.transpose(A, (1, 2, 0))          # (b, b, nb)
     rsoa = jnp.transpose(r, (1, 0))             # (b, nb)
     Ap, _ = _pad_to(Asoa, tile, axis=2)
@@ -109,14 +118,15 @@ def block_solve(A: jnp.ndarray, r: jnp.ndarray, *, batch_tile: int = 4 * LANE,
 
 
 @functools.partial(jax.jit, static_argnames=("batch_tile", "interpret",
-                                             "scale_rows"))
+                                             "scale_rows", "vmem_bytes"))
 def block_solve_soa(A: jnp.ndarray, r: jnp.ndarray, *,
                     batch_tile: int = 4 * LANE, interpret: bool = True,
-                    scale_rows: bool = True):
+                    scale_rows: bool = True, vmem_bytes=None):
     """SoA API (lane-major batch): A:(b,b,NB), r:(b,NB) -> x:(b,NB)."""
     b, _, nb = A.shape
     tile = _gj_batch_tile(nb, batch_tile, b=b, width=b + 1,
-                          itemsize=A.dtype.itemsize, interpret=interpret)
+                          itemsize=A.dtype.itemsize, interpret=interpret,
+                          vmem_bytes=vmem_bytes)
     Ap, _ = _pad_to(A, tile, axis=2)
     Ap = _pad_blocks_identity(Ap, nb)
     rp, _ = _pad_to(r, tile, axis=1)
@@ -126,9 +136,10 @@ def block_solve_soa(A: jnp.ndarray, r: jnp.ndarray, *,
 
 
 @functools.partial(jax.jit, static_argnames=("batch_tile", "interpret",
-                                             "scale_rows"))
+                                             "scale_rows", "vmem_bytes"))
 def block_inverse_soa(A: jnp.ndarray, *, batch_tile: int = 4 * LANE,
-                      interpret: bool = True, scale_rows: bool = True):
+                      interpret: bool = True, scale_rows: bool = True,
+                      vmem_bytes=None):
     """Per-block inverse, SoA layout: A:(b,b,NB) -> A^{-1}:(b,b,NB).
 
     The lsetup half of the ensemble Newton pipeline: invert every Newton
@@ -136,7 +147,8 @@ def block_inverse_soa(A: jnp.ndarray, *, batch_tile: int = 4 * LANE,
     :func:`blockdiag_spmv_soa` pass (lsolve)."""
     b, _, nb = A.shape
     tile = _gj_batch_tile(nb, batch_tile, b=b, width=b,
-                          itemsize=A.dtype.itemsize, interpret=interpret)
+                          itemsize=A.dtype.itemsize, interpret=interpret,
+                          vmem_bytes=vmem_bytes)
     Ap, _ = _pad_to(A, tile, axis=2)
     Ap = _pad_blocks_identity(Ap, nb)
     x = _bs.block_inverse_soa(Ap, batch_tile=tile, interpret=interpret,
