@@ -84,7 +84,6 @@ def _cases():
     ``args`` are the public-wrapper positional arguments — the same
     tuple opcost.signature consumes, so tuner keys and auto-dispatch
     keys agree by construction."""
-    key = jax.random.PRNGKey(0)
 
     def rnd(i, shape):
         return jax.random.normal(jax.random.PRNGKey(i), shape)

@@ -79,9 +79,6 @@ def perf_table():
             continue
         rl = r["roofline"]
         hc = r.get("hlocost", {})
-        tag = os.path.basename(
-            [f for f in glob.glob(os.path.join(DIR, "*.json"))
-             if json.load(open(f)) == r][0])
         name = f"{r['arch'][:12]} {r['shape']} {r.get('profile','')}"
         coll = (f"{hc.get('coll_all-gather',0)/1e9:.0f}/"
                 f"{hc.get('coll_all-reduce',0)/1e9:.0f}/"

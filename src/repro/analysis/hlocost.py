@@ -418,7 +418,6 @@ def top_collectives(hlo_text: str, n_devices: int = 1, k: int = 12):
     def walk(name, mult, depth=0):
         if depth > 12 or name not in hc.comps:
             return
-        tab = None
         for raw in hc.comps[name]:
             line = raw.strip()
             m = _INSTR_RE.match(line)

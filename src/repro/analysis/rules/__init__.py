@@ -1,0 +1,9 @@
+"""sunlint rules — importing this package registers every rule with
+:data:`repro.analysis.lint.RULES` (each module calls
+``lint.register`` at import time)."""
+from . import coherence     # noqa: F401
+from . import contract      # noqa: F401
+from . import donation      # noqa: F401
+from . import dtype         # noqa: F401
+from . import layout        # noqa: F401
+from . import purity        # noqa: F401

@@ -1,0 +1,80 @@
+"""table-coherence: one op set, named identically everywhere.
+
+The dispatch OP_TABLE is the source of truth.  The opcost signature
+extractors and cost models must cover exactly the same ops (a missing
+entry means ``backend='auto'`` crashes at the first call site; an
+extra entry is dead modeling), OP_NOTES must document every op, every
+committed autotune-cache entry must key a known op, and the generated
+README / policies-docstring op matrices must be the verbatim render of
+the current table.
+"""
+import json
+
+from repro.analysis import lint
+
+
+def _diff(where, label, ops, keys, out, extra_only=False):
+    for m in sorted(ops - keys):
+        if not extra_only:
+            out.append(lint.Violation(
+                "table-coherence", where,
+                f"{label} is missing op {m!r}"))
+    for e in sorted(keys - ops):
+        out.append(lint.Violation(
+            "table-coherence", where,
+            f"{label} names an op {e!r} that is not in the op table"))
+
+
+@lint.register(
+    "table-coherence",
+    "OP_TABLE, opcost registries, autotune cache keys, and the "
+    "generated op matrices name the same op set")
+def check(ctx):
+    from repro.analysis import opcost
+    from repro.core import dispatch, policies
+
+    ops = set(ctx.op_table)
+    out = []
+    _diff("opcost", "opcost.SIG_EXTRACTORS", ops,
+          set(opcost.SIG_EXTRACTORS), out)
+    _diff("opcost", "opcost.COST_MODELS", ops,
+          set(opcost.COST_MODELS), out)
+    _diff("dispatch", "dispatch.OP_NOTES", ops,
+          set(dispatch.OP_NOTES), out)
+
+    # committed autotune caches: a cache is allowed to be partial
+    # (entries are measured on demand) but must never key an orphan op.
+    cache_dir = ctx.repo_root / ".autotune"
+    if cache_dir.is_dir():
+        for path in sorted(cache_dir.glob("*.json")):
+            try:
+                payload = json.loads(path.read_text())
+            except (OSError, ValueError) as e:
+                out.append(lint.Violation(
+                    "table-coherence", f"autotune:{path.name}",
+                    f"unreadable cache file: {e}"))
+                continue
+            cache_ops = set()
+            for entry in payload.get("entries", {}).values():
+                cache_ops.add(entry.get("sig", {}).get("op"))
+            cache_ops.discard(None)
+            _diff(f"autotune:{path.name}", f"cache {path.name}", ops,
+                  cache_ops, out, extra_only=True)
+
+    # generated doc matrices must be the verbatim render of the table
+    # (python -m repro.core.dispatch regenerates both)
+    rst = dispatch.render_op_table("rst")
+    if rst not in (policies.__doc__ or ""):
+        out.append(lint.Violation(
+            "table-coherence", "policies-docstring",
+            "policies module docstring does not embed the current "
+            "rst op matrix (regenerate with python -m "
+            "repro.core.dispatch)"))
+    md = dispatch.render_op_table("md")
+    readme = ctx.repo_root / "README.md"
+    if not readme.is_file() or md not in readme.read_text():
+        out.append(lint.Violation(
+            "table-coherence", "README",
+            "README.md does not embed the current markdown op matrix "
+            "(regenerate with python -m repro.core.dispatch)"))
+    return out

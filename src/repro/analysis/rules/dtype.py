@@ -1,0 +1,49 @@
+"""dtype-drift: no float-width changes inside the Newton hot loops.
+
+SUNDIALS realtype semantics: the working precision is chosen once and
+nothing silently promotes (a weak f64 step-size coefficient must not
+upcast an f32 state) or demotes (an f32 literal must not truncate the
+f64 iterate).  This rule walks the innermost Newton ``while_loop``
+bodies and flags every ``convert_element_type`` between floating
+dtypes of different widths.  ``ctx.dtype_allowlist`` — a set of
+``(src_dtype, dst_dtype)`` string pairs — is the seam for the planned
+mixed-precision mode: its deliberate casts get allowlisted here
+instead of sprinkling suppressions.
+"""
+import jax.numpy as jnp
+
+from repro.analysis import lint
+
+_FLOATS = {"float16", "bfloat16", "float32", "float64"}
+
+
+@lint.register(
+    "dtype-drift",
+    "no f64<->f32 promotion/truncation inside Newton while bodies "
+    "(allowlist = the mixed-precision seam)")
+def check(ctx):
+    out = []
+    for tgt in ctx.hot_loop_targets:
+        bodies = lint.innermost_while_bodies(tgt.jaxpr(),
+                                             ctx.opaque_names)
+        for bi, body in enumerate(bodies):
+            where = f"{tgt.name}:newton_body[{bi}]"
+            for eqn in lint.iter_eqns(body, ctx.opaque_names):
+                if eqn.primitive.name != "convert_element_type":
+                    continue
+                src_dt = str(eqn.invars[0].aval.dtype)
+                dst_dt = str(jnp.dtype(eqn.params["new_dtype"]))
+                if (src_dt in _FLOATS and dst_dt in _FLOATS
+                        and src_dt != dst_dt
+                        and (src_dt, dst_dt)
+                        not in ctx.dtype_allowlist):
+                    kind = ("promotion" if jnp.dtype(dst_dt).itemsize
+                            > jnp.dtype(src_dt).itemsize
+                            else "truncation")
+                    out.append(lint.Violation(
+                        "dtype-drift", where,
+                        f"float {kind} {src_dt} -> {dst_dt} inside a "
+                        f"Newton while_loop body (allowlist the pair "
+                        f"if deliberate)",
+                        src=lint.eqn_src(eqn)))
+    return out

@@ -1,0 +1,43 @@
+"""hot-loop-layout: no layout conversions inside the Newton loops.
+
+The PR 5 guarantee — the ensemble-BDF/DIRK Newton iteration performs
+ZERO layout conversions — used to be a source grep, which a
+commented-out ``.T`` satisfies and a helper-function transpose evades.
+This rule checks the *trace*: it walks the innermost ``while_loop``
+bodies (the Newton loops) of each hot-loop target jaxpr, descending
+into ``scan``/``while``/``cond`` sub-jaxprs but not into opaque kernel
+boundaries, and flags every ``transpose`` equation and every copying
+``reshape`` (one with ``dimensions`` set — a plain reshape is a free
+metadata change; a dimensions-permuting reshape materializes a copy).
+"""
+from repro.analysis import lint
+
+
+@lint.register(
+    "hot-loop-layout",
+    "no transpose / copying reshape inside ensemble Newton while bodies")
+def check(ctx):
+    out = []
+    for tgt in ctx.hot_loop_targets:
+        bodies = lint.innermost_while_bodies(tgt.jaxpr(),
+                                             ctx.opaque_names)
+        for bi, body in enumerate(bodies):
+            where = f"{tgt.name}:newton_body[{bi}]"
+            for eqn in lint.iter_eqns(body, ctx.opaque_names):
+                prim = eqn.primitive.name
+                if prim == "transpose":
+                    out.append(lint.Violation(
+                        "hot-loop-layout", where,
+                        f"transpose(permutation="
+                        f"{eqn.params.get('permutation')}) inside a "
+                        f"Newton while_loop body",
+                        src=lint.eqn_src(eqn)))
+                elif (prim == "reshape"
+                      and eqn.params.get("dimensions") is not None):
+                    out.append(lint.Violation(
+                        "hot-loop-layout", where,
+                        f"copying reshape (dimensions="
+                        f"{eqn.params['dimensions']}) inside a Newton "
+                        f"while_loop body",
+                        src=lint.eqn_src(eqn)))
+    return out

@@ -1,0 +1,42 @@
+"""trace-purity: every public entry point traces abstractly.
+
+The sunmatrix/spsolve subsystems split work into a concrete *symbolic*
+phase (host-side pattern analysis) and a traced *numeric* phase; the
+integrators must likewise trace end to end under ``jax.eval_shape``.
+A Python ``if`` on a tracer, an ``int()``/``bool()`` of an abstract
+value, or an unhashable static pattern all raise during abstract
+evaluation — this rule runs every purity target (each canonical
+``IVP.integrate`` method string plus a symbolic-LU solve) and converts
+those failures into violations.  Harness bugs (anything that is not a
+concretization/hashability error) propagate, so a broken target cannot
+masquerade as a clean pass.
+"""
+import jax
+
+from repro.analysis import lint
+
+
+@lint.register(
+    "trace-purity",
+    "integrate() method strings and sunmatrix/spsolve numeric phases "
+    "trace abstractly (no concrete-value leaks)")
+def check(ctx):
+    out = []
+    for tgt in ctx.purity_targets:
+        try:
+            tgt.jaxpr()
+        except jax.errors.ConcretizationTypeError as e:
+            out.append(lint.Violation(
+                "trace-purity", tgt.name,
+                f"concrete-value leak while tracing: "
+                f"{type(e).__name__}: {str(e).splitlines()[0]}"))
+        except TypeError as e:
+            msg = str(e)
+            if "hash" in msg or "Tracer" in msg:
+                out.append(lint.Violation(
+                    "trace-purity", tgt.name,
+                    f"non-hashable static / tracer misuse while "
+                    f"tracing: {msg.splitlines()[0]}"))
+            else:
+                raise
+    return out

@@ -27,9 +27,7 @@ analog of the paper's GPU-GPU NVLink point-to-point transfers.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

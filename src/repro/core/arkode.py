@@ -17,7 +17,6 @@ scalars + the solution pytree; loops are ``lax.while_loop``/``scan``.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

@@ -28,7 +28,7 @@ import json
 import math
 import os
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 from repro.analysis import opcost
 from repro.analysis.opcost import OpSig

@@ -16,7 +16,8 @@ Gauss-Jordan / Pallas block-solve kernel.
 Three integrators share the masked-while_loop pattern:
 
 * :func:`ensemble_erk_integrate`  — adaptive explicit RK (nonstiff);
-* :func:`ensemble_dirk_integrate` — adaptive DIRK, fixed-unroll Newton;
+* :func:`ensemble_dirk_integrate` — adaptive DIRK, fixed-count Newton
+  ``while_loop`` per stage;
 * :func:`ensemble_bdf_integrate`  — the CVODE-style subsystem: adaptive
   order (BDF 1-5) + step per system, convergence-tested modified Newton
   with Jacobian reuse and gamma-refresh (lsetup/lsolve split), linear
@@ -256,15 +257,26 @@ def ensemble_dirk_integrate(fi: Callable, jac: Callable, y0: jnp.ndarray,
                 # ---- SoA stage Newton (shared hot-loop layout) ----
                 gam = hs * aii                            # (nsys,)
                 rs = r.T                                  # (n, nsys), once
-                z_s = rs
-                for _ in range(newton_iters):
+                # a real while_loop (not a Python unroll) so the body is
+                # a single jaxpr sunlint's hot-loop-layout rule audits,
+                # exactly like the BDF Newton loop
+                def nl_cond(nc, _k=newton_iters):
+                    _z, it, _nni = nc
+                    return it < _k
+
+                def nl_body(nc, ti=ti, rs=rs, gam=gam):
+                    z_s, it, nni_s = nc
                     rhs = dv.newton_residual_soa(z_s, f_s(ti, z_s), rs,
                                                  gam, policy, negate=True)
                     M = newton_blocks_soa(jac_s(ti, z_s), gam)
                     z_s = z_s + dv.block_solve_soa(M, rhs, policy)
                     # nni counts per ACTIVE system: finished systems are
                     # masked no-ops and must not accrue iterations
-                    nni_step = nni_step + active.astype(jnp.int32)
+                    return (z_s, it + 1,
+                            nni_s + active.astype(jnp.int32))
+
+                z_s, _, nni_step = lax.while_loop(
+                    nl_cond, nl_body, (rs, jnp.int32(0), nni_step))
                 fz = f_s(ti, z_s)          # final RHS: residual AND stage
                 g = dv.newton_residual_soa(z_s, fz, rs, gam, policy)
                 res = dv.wrms_soa(g, unit_w, policy)

@@ -28,7 +28,6 @@ import warnings
 
 from . import controller as ctrl
 from . import dispatch as dv
-from . import vector as nv
 from .nonlinsol import FixedPointSolver, NewtonSolver
 from .policies import ExecPolicy
 from .arkode import ODEOptions, IntegratorStats, _bind_lin_solver

@@ -13,7 +13,7 @@ Two backends, selected by ExecPolicy:
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -35,6 +35,7 @@ them with its single collective exactly as before.
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import Any, Optional, Sequence
 
 import jax.numpy as jnp
@@ -430,6 +431,88 @@ OP_TABLE = {
         "jnp": _jnp_bsr_block_jacobi_inverse_soa,
         "pallas": _pl_bsr_block_jacobi_inverse_soa},
 }
+
+
+def op_names() -> frozenset:
+    """The canonical dispatch op set — the single source of truth that
+    :class:`~repro.core.policies.ExecPolicy` override validation and
+    sunlint's table-coherence rule check against."""
+    return frozenset(OP_TABLE)
+
+
+def _positional_arity(fn):
+    """Number of positional parameters, following ``functools.wraps``
+    chains (so ``_ignore_policy(nv.axpy)`` reports nv.axpy's arity).
+    ``None`` for variadic implementations."""
+    sig = inspect.signature(fn)
+    n = 0
+    for p in sig.parameters.values():
+        if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD):
+            n += 1
+        elif p.kind is p.VAR_POSITIONAL:
+            return None
+    return n
+
+
+def _accepts_policy(fn) -> bool:
+    # the dispatch contract is on the callable actually invoked, so do
+    # NOT follow __wrapped__ here: _ignore_policy's wrapper adds the
+    # policy kwarg that its wrapped oracle lacks.
+    sig = inspect.signature(fn, follow_wrapped=False)
+    return ("policy" in sig.parameters
+            or any(p.kind is p.VAR_KEYWORD
+                   for p in sig.parameters.values()))
+
+
+def validate_op_table(table=None):
+    """Fail fast on a half-registered op.
+
+    Checks every entry of ``table`` (default :data:`OP_TABLE`) for: a
+    callable ``'jnp'`` oracle AND a callable ``'pallas'`` kernel, no
+    stray backend keys, matching positional arities between the two
+    implementations, and the keyword-only ``policy`` argument the
+    dispatcher passes.  All offenders are collected and reported in ONE
+    aggregated ``ValueError`` — previously a half-registered op
+    surfaced as a late ``AttributeError`` at first dispatch.
+    """
+    table = OP_TABLE if table is None else table
+    problems = []
+    for op in sorted(table):
+        impls = table[op]
+        if not isinstance(impls, dict):
+            problems.append(f"{op}: entry is {type(impls).__name__}, "
+                            f"expected a {{'jnp', 'pallas'}} dict")
+            continue
+        stray = sorted(set(impls) - {"jnp", "pallas"})
+        if stray:
+            problems.append(f"{op}: unknown backend keys {stray}")
+        for backend in ("jnp", "pallas"):
+            fn = impls.get(backend)
+            if fn is None:
+                problems.append(f"{op}: missing {backend!r} "
+                                f"implementation")
+            elif not callable(fn):
+                problems.append(f"{op}: {backend!r} implementation is "
+                                f"not callable")
+            elif not _accepts_policy(fn):
+                problems.append(f"{op}: {backend!r} implementation does "
+                                f"not accept the keyword-only `policy` "
+                                f"argument")
+        jnp_fn, pl_fn = impls.get("jnp"), impls.get("pallas")
+        if callable(jnp_fn) and callable(pl_fn):
+            a_j, a_p = _positional_arity(jnp_fn), _positional_arity(pl_fn)
+            if a_j is not None and a_p is not None and a_j != a_p:
+                problems.append(f"{op}: arity mismatch — jnp oracle "
+                                f"takes {a_j} positional args, pallas "
+                                f"kernel takes {a_p}")
+    if problems:
+        raise ValueError(
+            "OP_TABLE validation failed (%d problem%s):\n  - %s"
+            % (len(problems), "" if len(problems) == 1 else "s",
+               "\n  - ".join(problems)))
+
+
+validate_op_table()
 
 
 def dispatch(op: str, policy: Optional[ExecPolicy] = None):

@@ -60,7 +60,6 @@ def erk_integrate_with_events(f: Callable, g: Callable, y0, t0, tf,
                    _initial_h(f, t0, y0, tf, opts.rtol, opts.atol))
     p = max(table.emb_order + 1, 2)
     g0 = jnp.atleast_1d(g(t0, y0))
-    ng = g0.shape[0]
 
     class Carry(NamedTuple):
         t: jnp.ndarray

@@ -48,7 +48,6 @@ from dataclasses import dataclass
 from typing import Callable, Optional
 
 import jax.numpy as jnp
-import numpy as np
 
 from . import dispatch as dv
 from . import spsolve

@@ -21,15 +21,14 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro import configs
 from repro.analysis import roofline as rf

@@ -11,13 +11,10 @@ Features exercised: sharded state, data pipeline, checkpoint/restart
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.data import pipeline

@@ -22,7 +22,7 @@ oracle ``moe_dense_apply`` in tests (tokens under capacity -> exact).
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -74,7 +74,6 @@ def _moe_local(cfg: ArchConfig, ep: int, cap: int, cap_e: int,
     """
     T, d = x_loc.shape
     E_loc = w1.shape[0]
-    E = E_loc * ep
     k = cfg.experts_per_tok
     my_shard = lax.axis_index(axis_name)
 

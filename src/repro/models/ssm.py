@@ -13,7 +13,7 @@ compactly (one scan body) for the dry-run.  Sharding: heads over 'model'.
 from __future__ import annotations
 
 import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp

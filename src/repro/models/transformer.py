@@ -19,8 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -172,7 +171,6 @@ def _embed_inputs(cfg: ArchConfig, params, batch, pctx):
     """Token (+ vision/audio stub) embedding -> (B, S, d), vis_len."""
     cst = pctx.cst
     tokens = batch["tokens"]
-    B = tokens.shape[0]
     x = params["embed"][tokens]  # gather
     vis_len = 0
     if cfg.mrope and "vis_embeds" in batch:

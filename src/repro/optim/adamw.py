@@ -7,7 +7,7 @@ inherit the parameter shardings (FSDP'd optimizer state = ZeRO).
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ import math
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 try:  # jax>=0.6 exposes shard_map at top level

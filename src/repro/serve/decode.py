@@ -6,8 +6,7 @@ a host loop (greedy or temperature sampling) for the examples.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,7 @@
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

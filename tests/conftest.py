@@ -1,5 +1,4 @@
 import jax
-import pytest
 
 # x64 for the numerical-analysis tests (integrators, solvers).  Model smoke
 # tests run in default precision; they opt out via their own fixtures.

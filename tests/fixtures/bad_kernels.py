@@ -1,0 +1,155 @@
+"""Deliberately-broken kernels and traces for the sunlint test suite.
+
+``FIXTURES`` maps a fixture name to ``(expected_rule, setup)`` where
+``setup(ctx)`` mutates a :class:`repro.analysis.lint.LintContext` so
+that exactly the targeted invariant is violated.  The lint CLI seeds
+one with ``--fixture <name>`` (expected exit status: 1), and
+``tests/test_sunlint.py`` asserts each expected rule actually fires.
+
+These are *negative controls*: if a rule rewrite stops flagging its
+fixture, the rule has gone blind.
+"""
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.analysis import lint
+from repro.analysis.opcost import OpSig
+
+
+# --- hot-loop-layout -------------------------------------------------------
+# A transpose smuggled into the Newton-style while body through a
+# lax.cond branch.  The retired source grep would never see it (the
+# transpose lives in a helper lambda, and conversely the grep DID trip
+# on commented-out code like the next line):
+# z = z.T   # noqa — inert text; the jaxpr rule must not flag comments
+
+
+def _hidden_transpose_target():
+    def thunk():
+        def flip(a):
+            return a.T @ a          # the hidden layout conversion
+
+        def keep(a):
+            return a @ a
+
+        def body(c):
+            z, it = c
+            z = lax.cond(it % 2 == 0, flip, keep, z)
+            return z, it + 1
+
+        def run(z):
+            return lax.while_loop(lambda c: c[1] < jnp.int32(3),
+                                  body, (z, jnp.int32(0)))[0]
+
+        return jax.make_jaxpr(run)(jnp.ones((4, 4))).jaxpr
+    return lint.TraceTarget("bad:hidden_transpose", thunk)
+
+
+def _setup_hidden_transpose(ctx):
+    ctx.hot_loop_targets = [_hidden_transpose_target()]
+
+
+# --- donation-aliasing -----------------------------------------------------
+# A donated call whose "carry" binds the same buffer twice, and whose
+# donated buffer is read again after the call.
+
+
+def _aliased_donation_target():
+    def thunk():
+        donated = jax.jit(lambda c: c[0] + c[1], donate_argnums=0)
+
+        def run(x):
+            s = donated((x, x))     # aliased leaves, both donated
+            return s + x            # read-after-donation
+
+        return jax.make_jaxpr(run)(jnp.ones(8)).jaxpr
+    return lint.TraceTarget("bad:aliased_donation", thunk)
+
+
+def _setup_aliased_donation(ctx):
+    ctx.donation_targets = [_aliased_donation_target()]
+
+
+# --- dtype-drift -----------------------------------------------------------
+# A Newton-style while body that silently round-trips the f64 iterate
+# through f32 (the truncation AND the re-promotion are both drift).
+
+
+def _silent_upcast_target():
+    def thunk():
+        def body(c):
+            z, it = c
+            z32 = z.astype(jnp.float32)
+            z = (2.0 * z32).astype(jnp.float64)
+            return z, it + 1
+
+        def run(z):
+            return lax.while_loop(lambda c: c[1] < jnp.int32(3),
+                                  body, (z, jnp.int32(0)))[0]
+
+        return jax.make_jaxpr(run)(jnp.ones(8, jnp.float64)).jaxpr
+    return lint.TraceTarget("bad:silent_upcast", thunk)
+
+
+def _setup_silent_upcast(ctx):
+    ctx.hot_loop_targets = [_silent_upcast_target()]
+
+
+# --- kernel-contract -------------------------------------------------------
+# An OpSig whose minimum lane tile already exceeds the compiled
+# devices' VMEM budget: b=64 float64 block solve needs
+# b*(b+1) * 128 * 8 bytes ~ 4.3 MB of working set per grid step.
+
+
+def _setup_oversize_tile(ctx):
+    sigs = dict(ctx.contract_sigs)
+    sigs["block_solve_soa"] = sigs["block_solve_soa"] + [
+        OpSig("block_solve_soa", "float64", n=64, nsys=256, b=64)]
+    ctx.contract_sigs = sigs
+
+
+# --- table-coherence -------------------------------------------------------
+# An op registered in the table with no opcost model, no OP_NOTES row,
+# and no autotune coverage — the half-wired-op drift the rule exists
+# to catch.
+
+
+def _setup_orphan_op(ctx):
+    def frob(x, *, policy=None):
+        return x
+
+    table = dict(ctx.op_table)
+    table["frobnicate_soa"] = {"jnp": frob, "pallas": frob}
+    ctx.op_table = table
+
+
+# --- trace-purity ----------------------------------------------------------
+# A Python branch on a traced value: abstract evaluation cannot know
+# `sum(x) > 0`, so tracing raises a concretization error.
+
+
+def _tracer_leak_target():
+    def thunk():
+        def leaky(x):
+            if jnp.sum(x) > 0:      # concrete-value leak
+                return x * 2
+            return x
+
+        return jax.eval_shape(leaky,
+                              jax.ShapeDtypeStruct((8,), jnp.float64))
+    return lint.TraceTarget("bad:tracer_leak", thunk)
+
+
+def _setup_tracer_leak(ctx):
+    ctx.purity_targets = [_tracer_leak_target()]
+
+
+FIXTURES = {
+    "hidden_transpose": ("hot-loop-layout", _setup_hidden_transpose),
+    "aliased_donation": ("donation-aliasing", _setup_aliased_donation),
+    "silent_upcast": ("dtype-drift", _setup_silent_upcast),
+    "oversize_tile": ("kernel-contract", _setup_oversize_tile),
+    "orphan_op": ("table-coherence", _setup_orphan_op),
+    "tracer_leak": ("trace-purity", _setup_tracer_leak),
+}

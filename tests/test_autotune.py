@@ -4,7 +4,6 @@ fallback), the ``backend='auto'`` resolver, the regenerated op-table
 docs, and the acceptance criteria (auto trajectory parity, BENCH-winner
 agreement, >=80% model-vs-measurement agreement on the committed
 cache)."""
-import dataclasses
 import json
 import os
 
@@ -17,7 +16,7 @@ from repro.analysis import opcost, roofline
 from repro.core import autotune
 from repro.core import dispatch as dp
 from repro.core import policies
-from repro.core.policies import AUTO, ExecPolicy, GRID_STRIDE, XLA_FUSED
+from repro.core.policies import AUTO, XLA_FUSED
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -3,7 +3,6 @@ configurations + the properties the paper claims."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.apps import brusselator as br
 from repro.configs.brusselator import BrusselatorConfig

@@ -1,7 +1,6 @@
 """Distribution tests: sharding rules, MoE EP vs dense oracle, small-mesh
 dry-run — multi-device paths run in subprocesses with their own XLA_FLAGS
 (this process must keep seeing 1 device)."""
-import json
 import os
 import subprocess
 import sys

@@ -78,7 +78,6 @@ def test_blockdiag_spmv_sweep(nb, b):
 def test_kernels_match_core_vector_semantics():
     """The fused kernels implement exactly the N_Vector ops they replace."""
     from repro.core import vector as nv
-    key = jax.random.PRNGKey(9)
     vecs = [jax.random.normal(jax.random.PRNGKey(i), (777,))
             for i in range(3)]
     coeffs = jnp.asarray([0.3, -1.2, 2.5])

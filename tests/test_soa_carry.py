@@ -10,14 +10,15 @@
    wrapped AoS forms.
 2. jnp-vs-pallas(interpret) parity at 1e-10 for the three new fused
    Newton ops (+ the per-system ``wrms_soa``) with ragged batches.
-3. Grep gate: the Newton loop body (``nl_body``) contains no layout
-   transposes of iteration-sized arrays.
+3. Layout gate: sunlint's ``hot-loop-layout`` jaxpr rule proves the
+   traced Newton ``while_loop`` bodies (BDF and DIRK) contain no
+   transposes or copying reshapes — replacing the old source grep,
+   which a commented-out ``.T`` tripped and a helper-function
+   transpose evaded.
 4. MemoryHelper: back-to-back ensemble integrations on one Context do
    not double-buffer the history (donated carry; labels released per
    call, high-water flat across repeats).
 """
-import inspect
-import re
 from typing import NamedTuple
 
 import jax
@@ -287,20 +288,18 @@ def test_fused_newton_ops_parity_ragged(nb, tile):
 
 
 # ---------------------------------------------------------------------------
-# 3. grep gate: no layout transposes inside the Newton loop body
+# 3. layout gate: no layout conversions inside the Newton loop bodies
+# (the sunlint jaxpr rule — the retired source grep passed on
+# commented-out transposes and missed helper-function ones)
 # ---------------------------------------------------------------------------
 
 
 def test_newton_loop_body_has_no_transposes():
-    src = inspect.getsource(batched.ensemble_bdf_integrate)
-    # capture to the DEDENT boundary (nl_body is nested at 8 spaces,
-    # its body at >= 12), so internal blank lines can't truncate the
-    # checked region and hide a reintroduced transpose
-    m = re.search(r"def nl_body\(s\):\n((?:[ ]{12}.*\n|[ \t]*\n)+)", src)
-    assert m, "nl_body not found"
-    body = m.group(1)
-    assert "return" in body, "nl_body capture truncated"
-    assert ".T" not in body and "transpose" not in body, body
+    from repro.analysis import lint
+    ctx = lint.LintContext()
+    violations = lint.run_rules(ctx, ["hot-loop-layout"])
+    assert violations == [], "\n".join(
+        f"{v.where}: {v.message}" for v in violations)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,220 @@
+"""sunlint — the static verifier itself.
+
+Covers, per ISSUE 7:
+
+1. every rule flags its seeded bad-kernel fixture (negative controls
+   from tests/fixtures/bad_kernels.py, via BOTH the API and the CLI);
+2. every rule passes clean over the real repo (one shared default
+   LintContext so the integrator traces happen once);
+3. the suppression machinery: source-comment `# sunlint: disable=`,
+   baseline exact and prefix entries;
+4. the jaxpr walkers: opaque kernel boundaries, innermost-while
+   selection, copying-reshape vs free-reshape discrimination;
+5. the CLI contract: `--check` exits 0 on the repo, `--list` names
+   every rule, unknown rules/fixtures exit 1.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+
+from repro.analysis import lint
+
+FIXTURES = lint.load_fixtures()
+RULE_NAMES = sorted(lint.load_rules())
+
+
+@pytest.fixture(scope="module")
+def clean_ctx():
+    """One shared default context: traces are cached per TraceTarget,
+    so the expensive integrator traces happen once for the module."""
+    return lint.LintContext()
+
+
+# ---------------------------------------------------------------------------
+# 1. every rule flags its fixture
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_fixture_flagged_by_expected_rule(name):
+    expected_rule, setup = FIXTURES[name]
+    ctx = lint.LintContext()
+    setup(ctx)
+    violations = lint.run_rules(ctx, [expected_rule])
+    assert violations, (name, expected_rule)
+    assert all(v.rule == expected_rule for v in violations)
+
+
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_fixture_cli_exits_nonzero(name):
+    assert lint.main(["--fixture", name, "--no-baseline"]) == 1
+
+
+def test_every_rule_has_a_fixture():
+    covered = {rule for rule, _ in FIXTURES.values()}
+    assert covered == set(RULE_NAMES)
+
+
+def test_hidden_transpose_not_flagged_when_commented():
+    """The retired source grep tripped on commented-out `.T` text; the
+    jaxpr rule must flag only *traced* transposes."""
+    def thunk():
+        def body(c):
+            z, it = c
+            # z = z.T  (inert comment — the old grep's false positive)
+            return z * 2.0, it + 1
+
+        def run(z):
+            return lax.while_loop(lambda c: c[1] < jnp.int32(3),
+                                  body, (z, jnp.int32(0)))[0]
+        return jax.make_jaxpr(run)(jnp.ones((4, 4))).jaxpr
+
+    ctx = lint.LintContext()
+    ctx.hot_loop_targets = [lint.TraceTarget("commented", thunk)]
+    assert lint.run_rules(ctx, ["hot-loop-layout"]) == []
+
+
+# ---------------------------------------------------------------------------
+# 2. clean pass over the real repo, per rule
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rule", RULE_NAMES)
+def test_rule_clean_on_repo(clean_ctx, rule):
+    assert lint.run_rules(clean_ctx, [rule]) == []
+
+
+def test_check_cli_clean_on_repo():
+    assert lint.main(["--check"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# 3. suppression
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_exact_and_prefix_matching():
+    v = lint.Violation("dtype-drift", "ensemble_bdf:newton_body[0]",
+                       "msg")
+    assert lint.is_suppressed(v, ["dtype-drift|ensemble_bdf:"
+                                  "newton_body[0]"])
+    assert lint.is_suppressed(v, ["dtype-drift|ensemble_bdf*"])
+    assert not lint.is_suppressed(v, ["dtype-drift|ensemble_dirk*"])
+    assert not lint.is_suppressed(v, ["hot-loop-layout|ensemble_bdf*"])
+
+
+def test_source_comment_suppression(tmp_path):
+    src = tmp_path / "mod.py"
+    src.write_text("x = 1\n"
+                   "y = x.T  # sunlint: disable=hot-loop-layout\n"
+                   "z = y.T  # sunlint: disable=dtype-drift\n")
+    flagged = lint.Violation("hot-loop-layout", "t", "m",
+                             src=(str(src), 2))
+    other = lint.Violation("hot-loop-layout", "t", "m",
+                           src=(str(src), 3))
+    lint._SRC_CACHE.clear()
+    assert lint.is_suppressed(flagged, [])
+    assert not lint.is_suppressed(other, [])
+
+
+def test_baseline_file_parsing(tmp_path):
+    p = tmp_path / ".sunlint-baseline"
+    p.write_text("# comment only\n\n"
+                 "dtype-drift|ensemble_bdf*  # trailing comment\n")
+    assert lint.load_baseline(p) == ["dtype-drift|ensemble_bdf*"]
+    assert lint.load_baseline(tmp_path / "missing") == []
+
+
+# ---------------------------------------------------------------------------
+# 4. the jaxpr walkers
+# ---------------------------------------------------------------------------
+
+
+def test_innermost_while_selection():
+    """Nested whiles: only the inner body qualifies as innermost."""
+    def inner_step(z):
+        return lax.while_loop(lambda c: c[1] < jnp.int32(2),
+                              lambda c: (c[0] * 2.0, c[1] + 1),
+                              (z, jnp.int32(0)))[0]
+
+    def run(z):
+        return lax.while_loop(
+            lambda c: c[1] < jnp.int32(3),
+            lambda c: (inner_step(c[0]), c[1] + 1),
+            (z, jnp.int32(0)))[0]
+
+    jpr = jax.make_jaxpr(run)(jnp.ones(4)).jaxpr
+    bodies = lint.innermost_while_bodies(jpr)
+    assert len(bodies) == 1
+    prims = {e.primitive.name for e in lint.iter_eqns(bodies[0])}
+    assert "while" not in prims and "mul" in prims
+
+
+def test_opaque_pjit_boundary_not_walked():
+    """A transpose hidden behind a named-opaque pjit is invisible; the
+    same trace walked without the opaque set exposes it."""
+    @jax.jit
+    def secret_kernel(z):
+        return z.T @ z
+
+    def run(z):
+        return lax.while_loop(
+            lambda c: c[1] < jnp.int32(2),
+            lambda c: (secret_kernel(c[0]), c[1] + 1),
+            (z, jnp.int32(0)))[0]
+
+    jpr = jax.make_jaxpr(run)(jnp.ones((3, 3))).jaxpr
+    opaque = frozenset({"secret_kernel"})
+
+    def transposes(opaque_names):
+        return [e for b in lint.innermost_while_bodies(jpr,
+                                                       opaque_names)
+                for e in lint.iter_eqns(b, opaque_names)
+                if e.primitive.name == "transpose"]
+
+    assert transposes(opaque) == []
+    assert transposes(frozenset())  # visible without the boundary
+
+
+def test_plain_reshape_is_not_a_copy():
+    """ravel/reshape without a dimensions permutation is free and must
+    not be flagged as a layout conversion."""
+    def thunk():
+        def body(c):
+            z, it = c
+            flat = z.reshape(-1)                # free
+            return flat.reshape(z.shape), it + 1
+
+        def run(z):
+            return lax.while_loop(lambda c: c[1] < jnp.int32(2),
+                                  body, (z, jnp.int32(0)))[0]
+        return jax.make_jaxpr(run)(jnp.ones((4, 2))).jaxpr
+
+    ctx = lint.LintContext()
+    ctx.hot_loop_targets = [lint.TraceTarget("free_reshape", thunk)]
+    assert lint.run_rules(ctx, ["hot-loop-layout"]) == []
+
+
+def test_kernel_wrapper_names_cover_dispatch_kernels():
+    names = lint.kernel_wrapper_names()
+    assert "block_solve_soa" in names
+    assert "wrms_norm" in names
+    assert len(names) >= 19
+
+
+# ---------------------------------------------------------------------------
+# 5. CLI contract
+# ---------------------------------------------------------------------------
+
+
+def test_cli_list_names_every_rule(capsys):
+    assert lint.main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for rule in RULE_NAMES:
+        assert rule in out
+
+
+def test_cli_unknown_rule_and_fixture_exit_1():
+    assert lint.main(["--rule", "no-such-rule"]) == 1
+    assert lint.main(["--fixture", "no-such-fixture"]) == 1

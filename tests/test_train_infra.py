@@ -1,13 +1,11 @@
 """Training-infrastructure tests: optimizer, microbatching, checkpoint
 restart semantics, fault logic, data determinism, gradflow, hlocost."""
-import math
 import os
 import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import configs
 from repro.data import pipeline

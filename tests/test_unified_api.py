@@ -13,7 +13,6 @@
 * NewtonSolver tolerances sourced from ODEOptions;
 * Context counters and MemoryHelper workspace accounting.
 """
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -24,8 +23,7 @@ from repro.core import arkode, batched, butcher, cvode, krylov
 from repro.core.arkode import ODEOptions
 from repro.core.context import Context
 from repro.core.ivp import IVP, METHOD_STRINGS, Solution, integrate
-from repro.core.linsol import (PCG, SPBCGS, SPFGMR, SPGMR, SPTFQMR,
-                               BlockDiagGJ, DenseGJ)
+from repro.core.linsol import SPGMR, BlockDiagGJ, DenseGJ
 from repro.core.memory import MemoryHelper
 from repro.core.nonlinsol import FixedPointSolver, NewtonSolver
 

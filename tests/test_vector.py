@@ -53,7 +53,6 @@ def test_ops_over_pytrees():
 
 
 def test_linear_combination_fused_equals_pairwise():
-    key = jax.random.PRNGKey(0)
     vecs = [jax.random.normal(jax.random.PRNGKey(i), (32,)) for i in range(4)]
     coeffs = [0.5, -1.5, 2.0, 0.25]
     fused = nv.linear_combination(coeffs, vecs)
