@@ -244,8 +244,31 @@ def default_hot_loop_targets() -> List[TraceTarget]:
                 policy=_hot_policy(), f_soa=f_soa,
                 jac_soa=jac_soa)[0])(y0).jaxpr
 
+    def bdf_warm():
+        # the warm-start re-entry path: a session whose lanes carry
+        # nonzero h/order/history enters the loop through the copy-
+        # before-donate branch — the donation-aliasing rule audits that
+        # the caller's session leaves are never donated directly and
+        # the exported session never aliases the donated carry
+        import jax.numpy as jnp
+
+        from repro.core import batched
+        from repro.core.problems import (batched_robertson,
+                                         batched_robertson_soa)
+        f, jac, y0 = batched_robertson(8)
+        f_soa, jac_soa = batched_robertson_soa(8)
+        sess = batched.SolverSession.cold(y0, 0.0)._replace(
+            h=jnp.full((8,), 1e-5), q=jnp.full((8,), 2, jnp.int32),
+            steps=jnp.full((8,), 3, jnp.int32))
+        return jax.make_jaxpr(
+            lambda s: batched.ensemble_bdf_integrate(
+                f, jac, None, None, 1e-3, policy=_hot_policy(),
+                f_soa=f_soa, jac_soa=jac_soa, session=s,
+                return_session=True)[0])(sess).jaxpr
+
     return [TraceTarget("ensemble_bdf", bdf),
-            TraceTarget("ensemble_dirk", dirk)]
+            TraceTarget("ensemble_dirk", dirk),
+            TraceTarget("ensemble_bdf_warm_restart", bdf_warm)]
 
 
 def default_contract_sigs() -> Dict[str, list]:

@@ -105,6 +105,95 @@ class EnsembleStats(NamedTuple):
     npsolves: Optional[jnp.ndarray] = None  # (nsys,) preconditioner solves,
     # broadcast like nli (0 without a Preconditioner object)
 
+    def masked(self, live) -> "EnsembleStats":
+        """Stats restricted to the ``live`` lanes of a padded bundle.
+
+        A serving bundle padded to a bucket size carries dead lanes
+        (``tf == t0`` no-op systems) whose mere presence must not leak
+        into aggregates: a dead lane did no work, so its per-lane
+        counters are zeroed and it reports success (sums and means over
+        the batch then describe live systems only).  The solver-level
+        broadcast counters (``nli``, ``npsolves``) are GLOBAL totals of
+        the batched inner solves — they are not per-lane attributable
+        and pass through unchanged.
+        """
+        live = jnp.asarray(live, bool)
+
+        def z(x):
+            return None if x is None else jnp.where(live, x, 0)
+
+        return self._replace(
+            steps=z(self.steps), attempts=z(self.attempts),
+            netf=z(self.netf), nni=z(self.nni),
+            success=self.success | ~live,
+            nsetups=z(self.nsetups), ncfn=z(self.ncfn))
+
+
+class SolverSession(NamedTuple):
+    """Opaque warm-start continuation state for ``ensemble_bdf``.
+
+    The final SoA step-loop carry of one integration, exported with
+    ``return_session=True`` and accepted back via ``session=`` so a
+    repeat/streaming client re-enters the BDF loop at its terminal
+    order and step size instead of paying the cold order-1 restart.
+    Every leaf keeps the system axis LAST (the hot-loop layout), so
+    per-lane slicing (``lanes``) and bundle assembly (``concat``) are
+    uniform ``[..., idx]`` / concatenate-on-last-axis operations — the
+    serving layer composes mixed warm/cold bundles this way.
+
+    ``h <= 0`` is the cold-lane sentinel: re-entry substitutes the
+    default ``h0`` there, which is how :meth:`cold` sessions reproduce
+    the plain ``y0`` start exactly (one trace serves any warm/cold lane
+    mix).  The exported leaves are fresh loop outputs and NEVER alias
+    the donated step-loop carry; on re-entry the session is copied into
+    fresh buffers before donation so the caller's handle stays valid
+    (audited by sunlint's donation-aliasing rule).
+    """
+
+    t: jnp.ndarray        # (nsys,) time reached
+    h: jnp.ndarray        # (nsys,) step size; <= 0 marks a cold lane
+    q: jnp.ndarray        # (nsys,) int32 current BDF order
+    Z: jnp.ndarray        # (QMAX+1, n, nsys) uniform-grid history, SoA
+    e1: jnp.ndarray       # (nsys,) controller err_prev
+    e2: jnp.ndarray       # (nsys,) controller err_prev2
+    steps: jnp.ndarray    # (nsys,) int32 cumulative accepted steps
+    #                       (bounds how much of Z is valid history)
+
+    @property
+    def nsys(self) -> int:
+        return self.Z.shape[-1]
+
+    @property
+    def n(self) -> int:
+        return self.Z.shape[-2]
+
+    @classmethod
+    def cold(cls, y0: jnp.ndarray, t0) -> "SolverSession":
+        """A cold-start session for ``y0`` (nsys, n) at ``t0`` — the
+        value-exact equivalent of passing ``y0`` without a session."""
+        nsys, n = y0.shape
+        dtype = y0.dtype
+        return cls(
+            t=jnp.broadcast_to(jnp.asarray(t0, dtype), (nsys,)),
+            h=jnp.zeros((nsys,), dtype),                   # cold sentinel
+            q=jnp.ones((nsys,), jnp.int32),
+            Z=jnp.zeros((_cv.QMAX + 1, n, nsys), dtype).at[0].set(y0.T),
+            e1=jnp.ones((nsys,), dtype), e2=jnp.ones((nsys,), dtype),
+            steps=jnp.zeros((nsys,), jnp.int32))
+
+    def lanes(self, idx) -> "SolverSession":
+        """The session restricted to lane(s) ``idx`` (kept as an nsys
+        axis: pass a slice/array so the result can be re-concatenated)."""
+        return jax.tree_util.tree_map(lambda x: x[..., idx], self)
+
+    @staticmethod
+    def concat(sessions) -> "SolverSession":
+        """Stack per-lane sessions into one bundle along the system
+        axis (the serving layer's mixed warm/cold bundle assembly)."""
+        sessions = list(sessions)
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=-1), *sessions)
+
 
 def ensemble_erk_integrate(f: Callable, y0: jnp.ndarray, t0, tf,
                            table: ButcherTable,
@@ -369,7 +458,9 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
                            msbp: int = 20, dgmax: float = 0.3,
                            mem=None,
                            f_soa: Optional[Callable] = None,
-                           jac_soa: Optional[Callable] = None):
+                           jac_soa: Optional[Callable] = None,
+                           session: Optional[SolverSession] = None,
+                           return_session: bool = False):
     """Adaptive batched BDF (orders 1-``order``) over ``nsys`` independent
     stiff systems — the CVODE submodel pipeline, TPU-native.
 
@@ -455,6 +546,26 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
     ``lin_mode='setup' | 'direct'`` is the deprecated string form of the
     two ``BlockDiagGJ`` configurations (kept as a compat shim).
 
+    **Warm-start continuation.**  ``session=`` re-enters the step loop
+    from a :class:`SolverSession` exported by a previous call with
+    ``return_session=True`` (the return value becomes ``(y, stats,
+    session)``): history window, per-system order, step size, and
+    controller memory all resume, so a streaming client skips the cold
+    BDF order-1 ramp entirely.  With a session, ``y0``/``t0`` may be
+    ``None`` (shapes and start times come from the session; a non-None
+    ``y0`` is shape-checked against it).  ``h <= 0`` lanes are cold
+    (default ``h0`` is substituted), so :meth:`SolverSession.cold`
+    lanes and warm lanes mix freely in one bundle under ONE trace.  The
+    saved linear object (``MJ``) is deliberately NOT part of the
+    session — the first warm step trips the ``gam_saved == 0`` lsetup
+    trigger and refreshes the Jacobian at the re-entry point.  Session
+    leaves are copied into fresh buffers before the carry is donated
+    (the caller's session handle must survive the call), and the
+    exported session is built from the loop *outputs* — it never
+    aliases a donated buffer.  ``stats.steps`` counts THIS call's
+    accepted steps; the exported ``session.steps`` stays cumulative
+    (it bounds the valid history depth).
+
     The block kernels pad the system batch to the policy's
     ``batch_tile`` internally, so ``nsys`` need not be a multiple of
     128.  ``mem`` (a :class:`~repro.core.memory.MemoryHelper`) registers
@@ -482,8 +593,19 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
     if jac_sparsity is not None:
         from .linsol import encode_sparsity
         ls = ls.with_sparsity(encode_sparsity(jac_sparsity))
-    nsys, n = y0.shape
-    dtype = y0.dtype
+    if session is not None:
+        n, nsys = session.n, session.nsys
+        dtype = session.Z.dtype
+        if y0 is not None and tuple(y0.shape) != (nsys, n):
+            raise ValueError(
+                f"y0 shape {tuple(y0.shape)} disagrees with the session "
+                f"({(nsys, n)}); pass y0=None to resume from the session")
+    else:
+        if y0 is None:
+            raise ValueError("ensemble_bdf_integrate needs y0 (or a "
+                             "session= to resume from)")
+        nsys, n = y0.shape
+        dtype = y0.dtype
     QMAX = _cv.QMAX
     f_s, jac_s = _wrap_soa(f, jac, f_soa, jac_soa)
     if mem is not None:
@@ -492,6 +614,8 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
         # Newton blocks, sparse values, preconditioner data, ...
         for suffix, shape in ls.soa_workspace_shapes(n, nsys):
             mem.register(f"ensemble_bdf.{suffix}", shape, dtype)
+    if session is not None:
+        t0 = session.t          # per-lane resume times
     t0 = jnp.broadcast_to(jnp.asarray(t0, dtype), (nsys,))
     tf = jnp.broadcast_to(jnp.asarray(tf, dtype), (nsys,))
     h0 = jnp.where(opts.h0 > 0, jnp.full((nsys,), opts.h0, dtype),
@@ -654,27 +778,54 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
     # owned buffer: each counter gets its own zeros, and t is an
     # explicit copy — broadcast_to/asarray short-circuit when the
     # caller already passes an (nsys,) array of the right dtype, and
-    # donating that alias would delete the CALLER's t0
+    # donating that alias would delete the CALLER's t0.  The session
+    # re-entry leaves (t, Z, e1, e2, steps) are copied for the same
+    # reason: donating them would invalidate the caller's session
+    # handle (h and q pass through `where`/`clip`, which already
+    # produce fresh buffers).
     zero = lambda: jnp.zeros((nsys,), jnp.int32)
-    Z0 = jnp.zeros((QMAX + 1, n, nsys), dtype).at[0].set(y0.T)
+    if session is None:
+        steps0 = jnp.zeros((nsys,), jnp.int32)
+        Z0 = jnp.zeros((QMAX + 1, n, nsys), dtype).at[0].set(y0.T)
+        h_init = h0
+        q_init = jnp.ones((nsys,), jnp.int32)
+        e1_init = jnp.ones((nsys,), dtype)
+        e2_init = jnp.ones((nsys,), dtype)
+        steps_init = zero()
+    else:
+        steps0 = jnp.asarray(session.steps, jnp.int32)
+        Z0 = jnp.array(session.Z, copy=True)
+        # h <= 0 marks a cold lane: substitute the default h0 there so
+        # cold sessions reproduce the plain-y0 start exactly
+        h_init = jnp.where(session.h > 0, session.h, h0)
+        q_init = jnp.clip(jnp.asarray(session.q, jnp.int32), 1, order)
+        e1_init = jnp.array(session.e1, copy=True)
+        e2_init = jnp.array(session.e2, copy=True)
+        steps_init = jnp.array(steps0, copy=True)
     c = _BdfCarry(
-        t=jnp.array(t0, copy=True), h=h0,
-        q=jnp.ones((nsys,), jnp.int32), Z=Z0,
-        e1=jnp.ones((nsys,), dtype), e2=jnp.ones((nsys,), dtype),
+        t=jnp.array(t0, copy=True), h=h_init,
+        q=q_init, Z=Z0,
+        e1=e1_init, e2=e2_init,
         MJ=ls.soa_carry_init(n, nsys, dtype),
         gam_saved=jnp.zeros((nsys,), dtype), since_jac=zero(),
-        ncf_prev=jnp.zeros((nsys,), bool), steps=zero(), att=zero(),
+        ncf_prev=jnp.zeros((nsys,), bool), steps=steps_init, att=zero(),
         netf=zero(), nni=zero(), nsetups=zero(), ncfn=zero(),
         nli=jnp.zeros((), jnp.int32), nps=jnp.zeros((), jnp.int32),
         stall=jnp.zeros((nsys,), bool))
     # every carry leaf is freshly allocated above -> donate, so the
     # history window is updated in place across the step loop
     c = _donated_loop(cond, body, c)
-    return c.Z[0].T, EnsembleStats(
-        steps=c.steps, attempts=c.att, netf=c.netf, nni=c.nni,
+    st = EnsembleStats(
+        steps=c.steps - steps0, attempts=c.att, netf=c.netf, nni=c.nni,
         success=c.t >= tf * (1 - 1e-10), nsetups=c.nsetups, ncfn=c.ncfn,
         nli=jnp.broadcast_to(c.nli, (nsys,)),
         npsolves=jnp.broadcast_to(c.nps, (nsys,)))
+    if return_session:
+        # built from the loop OUTPUTS — fresh buffers, never the
+        # donated inputs (sunlint donation-aliasing audits this path)
+        return c.Z[0].T, st, SolverSession(
+            t=c.t, h=c.h, q=c.q, Z=c.Z, e1=c.e1, e2=c.e2, steps=c.steps)
+    return c.Z[0].T, st
 
 
 def ensemble_bdf_integrate_sharded(f: Callable, jac: Callable,
@@ -714,6 +865,14 @@ def ensemble_bdf_integrate_sharded(f: Callable, jac: Callable,
             "native SoA callable would close over unsharded (.., nsys) "
             "arrays; route per-system data through params= instead (the "
             "per-shard SoA wrapping happens inside each device's loop)")
+    if kw.pop("session", None) is not None or kw.pop("return_session",
+                                                    False):
+        raise ValueError(
+            "ensemble_bdf_integrate_sharded takes no session=/"
+            "return_session=: a SolverSession's (.., nsys) leaves would "
+            "close over the shard_map body unsharded; warm-start "
+            "continuation is a serving-layer (single-mesh-shard) "
+            "feature for now")
     if mesh is None:
         mesh = make_ensemble_mesh()
     ndev = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]

@@ -40,6 +40,12 @@ class Context:
     policy: ExecPolicy = XLA_FUSED
     memory: MemoryHelper = field(default_factory=MemoryHelper)
     counters: dict = field(default_factory=_counter_dict)
+    #: the serving front-end's shape-bucketed jit/trace cache
+    #: (:class:`repro.serve.solver.trace_cache.TraceCache`), attached by
+    #: :class:`repro.serve.solver.server.SolverServer` so its hit/miss/
+    #: evict counters surface through :meth:`dispatch_report`; None for
+    #: contexts that never served traffic.
+    trace_cache: Optional[Any] = None
 
     def options(self, **kw) -> Any:
         """Build :class:`~repro.core.arkode.ODEOptions` bound to this
@@ -64,8 +70,15 @@ class Context:
         """Inspectable record of every ``backend='auto'`` decision made
         for this context's device — per-signature backend/tile/source —
         plus the model-vs-measurement audit over the whole autotune
-        cache (agreement fraction and explicit mispredictions)."""
-        return self.autotune.report()
+        cache (agreement fraction and explicit mispredictions).  When a
+        serving front-end owns this context, the report additionally
+        carries its trace-cache counters under ``"trace_cache"``
+        (hits / misses / evictions / size — the no-steady-state-
+        recompiles audit)."""
+        report = dict(self.autotune.report())
+        if self.trace_cache is not None:
+            report["trace_cache"] = self.trace_cache.stats()
+        return report
 
     # -- counter accumulation ------------------------------------------------
 

@@ -148,6 +148,13 @@ class Solution(NamedTuple):
     npsolves: Optional[jnp.ndarray] = None   # preconditioner applications
     npsetups: Optional[jnp.ndarray] = None   # preconditioner setups (ride
     #                                          the lsetup triggers)
+    session: Optional[Any] = None  # ensemble_bdf warm-start continuation
+    #                                state (return_session=True); see
+    #                                repro.core.batched.SolverSession
+    timings: Optional[dict] = None  # wall-clock split when produced via
+    #                                 the serving front-end: {"queue_wait",
+    #                                 "compile", "execute"} seconds (None
+    #                                 for direct integrate() calls)
 
 
 def _split(method: str):
@@ -178,7 +185,7 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
               ctx: Optional[Context] = None,
               opts: Optional[ODEOptions] = None,
               lin_solver=None, nonlin_solver=None,
-              order: int = 5, **method_kw) -> Solution:
+              order: int = 5, live=None, **method_kw) -> Solution:
     """Integrate ``problem`` from t0 to tf with ``method``.
 
     ctx           : :class:`~repro.core.context.Context`; a private one
@@ -193,8 +200,18 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
                     (dirk, imex, bdf, adams); a ValueError elsewhere.
     order         : max BDF order for the ``bdf`` / ``ensemble_bdf``
                     families.
+    live          : optional (nsys,) bool mask for ensemble methods on
+                    bundles padded with dead lanes (a serving bundle
+                    padded to its bucket size): the Solution's stats and
+                    aggregates (nni, nsetups, success, ...) then count
+                    LIVE lanes only (:meth:`~repro.core.batched.
+                    EnsembleStats.masked`); a ValueError for scalar
+                    methods.
     method_kw     : passed through to the underlying integrator
-                    (``dense_jac``, ``msbp``, ``m_aa``, ...).
+                    (``dense_jac``, ``msbp``, ``m_aa``, ...;
+                    ``ensemble_bdf`` additionally takes ``session=`` /
+                    ``return_session=`` for warm-start continuation —
+                    the exported session lands in ``Solution.session``).
     """
     ctx = ctx if ctx is not None else Context()
     opts = opts if opts is not None else ctx.options()
@@ -206,6 +223,10 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
     nsetups = None
     npsolves = None
     npsetups = None
+    session = None
+    if live is not None and not fam.startswith("ensemble"):
+        raise ValueError(f"method {method!r} takes no live= mask (dead-"
+                         "lane masking applies to ensemble bundles only)")
     # a solver object passed to a family that cannot consume it is an
     # error, not a silent no-op (Solution must never report a swap that
     # did not happen)
@@ -274,12 +295,17 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
     elif fam == "ensemble_bdf":
         f = _need(problem, "f", method)
         jac = _need(problem, "jac", method)
-        y, st = batched.ensemble_bdf_integrate(
+        return_session = bool(method_kw.pop("return_session", False))
+        out = batched.ensemble_bdf_integrate(
             f, jac, problem.y0, t0, tf, order=order, opts=opts,
             policy=opts.policy, linear_solver=lin_solver,
             jac_sparsity=problem.jac_sparsity, mem=mem,
             f_soa=problem.f_soa, jac_soa=problem.jac_soa,
-            **method_kw)
+            return_session=return_session, **method_kw)
+        if return_session:
+            y, st, session = out
+        else:
+            (y, st), session = out, None
         lname = lname or "blockdiag_gj"
         nli = st.nli[0] if st.nli is not None else None
         nsetups = st.nsetups
@@ -298,6 +324,13 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
             f"(canonical strings: {', '.join(METHOD_STRINGS)})")
 
     is_ensemble = fam.startswith("ensemble")
+    if live is not None:
+        # padded-bundle hygiene: dead lanes are zeroed out of the stats
+        # BEFORE any aggregate below (success, nni sum, nsetups), so a
+        # bundle padded to its bucket size reports live-lane work only
+        st = st.masked(jnp.asarray(live, bool))
+        if nsetups is not None:
+            nsetups = st.nsetups
     success = jnp.all(st.success) if is_ensemble else st.success
     t_reached = getattr(st, "t", None)
     if t_reached is None:
@@ -317,4 +350,5 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
                     nonlin_solver=nlname, nni=nni, nli=nli,
                     nsetups=nsetups, workspace_bytes=workspace,
                     high_water_bytes=mem.high_water_bytes,
-                    npsolves=npsolves, npsetups=npsetups)
+                    npsolves=npsolves, npsetups=npsetups,
+                    session=session)

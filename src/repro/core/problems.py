@@ -79,6 +79,84 @@ def batched_robertson_soa(nsys: int):
     return f_soa, jac_soa
 
 
+def robertson_family():
+    """Parametric Robertson kinetics for the serving front-end: the same
+    3-species problem as :func:`batched_robertson`, but with the rate
+    constants supplied as *per-request data* instead of closed over —
+    ``params = {"k1": (nsys,), "k2": (nsys,), "k3": (nsys,)}`` rides the
+    bundle as a traced argument, so requests with different chemistry
+    share ONE trace-cache entry (the shape-bucketed jit cache never
+    recompiles on new rate constants).
+
+    Returns ``(f, jac, f_soa, jac_soa)`` with signatures
+    ``f(t:(nsys,), y:(nsys,3), params) -> (nsys,3)`` etc.; state size
+    n = 3.
+    """
+
+    def f(t, y, p):  # y: (nsys, 3)
+        a, b, c = y[:, 0], y[:, 1], y[:, 2]
+        r1, r2, r3 = p["k1"] * a, p["k2"] * b * c, p["k3"] * b * b
+        return jnp.stack([-r1 + r2, r1 - r2 - r3, r3], axis=1)
+
+    def jac(t, y, p):
+        a, b, c = y[:, 0], y[:, 1], y[:, 2]
+        k1, k2, k3 = p["k1"], p["k2"], p["k3"]
+        z = jnp.zeros_like(a)
+        return jnp.stack([
+            jnp.stack([-k1, k2 * c, k2 * b], axis=1),
+            jnp.stack([k1, -k2 * c - 2 * k3 * b, -k2 * b], axis=1),
+            jnp.stack([z, 2 * k3 * b, z], axis=1)], axis=1)
+
+    def f_soa(t, y, p):  # y: (3, nsys)
+        a, b, c = y[0], y[1], y[2]
+        r1, r2, r3 = p["k1"] * a, p["k2"] * b * c, p["k3"] * b * b
+        return jnp.stack([-r1 + r2, r1 - r2 - r3, r3], axis=0)
+
+    def jac_soa(t, y, p):  # -> (3, 3, nsys)
+        a, b, c = y[0], y[1], y[2]
+        k1, k2, k3 = p["k1"], p["k2"], p["k3"]
+        z = jnp.zeros_like(a)
+        return jnp.stack([
+            jnp.stack([-k1, k2 * c, k2 * b], axis=0),
+            jnp.stack([k1, -k2 * c - 2 * k3 * b, -k2 * b], axis=0),
+            jnp.stack([z, 2 * k3 * b, z], axis=0)], axis=0)
+
+    return f, jac, f_soa, jac_soa
+
+
+def decay_chain_family(n: int = 6):
+    """Parametric linear decay chain (n species) — the serving suite's
+    second shape, so mixed-shape traffic exercises distinct buckets:
+    ``dy_0/dt = -k_0 y_0``, ``dy_i/dt = k_{i-1} y_{i-1} - k_i y_i``,
+    with per-request decay rates ``params = {"k": (nsys, n)}``.  Mildly
+    stiff when the rates span decades; the Jacobian is lower bidiagonal.
+
+    Returns ``(f, jac, f_soa, jac_soa)`` in the batch conventions of
+    :func:`robertson_family`.
+    """
+
+    def f(t, y, p):  # y: (nsys, n)
+        r = p["k"] * y
+        return -r + jnp.concatenate(
+            [jnp.zeros_like(r[:, :1]), r[:, :-1]], axis=1)
+
+    def jac(t, y, p):  # -> (nsys, n, n)
+        k = p["k"]
+        J = -jax.vmap(jnp.diag)(k)
+        sub = jax.vmap(lambda kk: jnp.diag(kk, k=-1))(k[:, :-1])
+        return J + sub
+
+    def f_soa(t, y, p):  # y: (n, nsys)
+        r = p["k"].T * y
+        return -r + jnp.concatenate(
+            [jnp.zeros_like(r[:1]), r[:-1]], axis=0)
+
+    def jac_soa(t, y, p):  # -> (n, n, nsys)
+        return jnp.transpose(jac(t, y.T, p), (1, 2, 0))
+
+    return f, jac, f_soa, jac_soa
+
+
 def ensemble_brusselator(nsys: int, nx: int = 16, du: float = 0.02,
                          dv: float = 0.02, a: float = 1.0):
     """An ensemble of 1-D Brusselator reaction-diffusion systems — the

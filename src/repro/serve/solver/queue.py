@@ -1,0 +1,264 @@
+"""Admission queue: shape-bucketed dynamic batching for IVP requests.
+
+The batching decision is where serving throughput is won or lost (the
+many-independent-ODE-systems follow-up, arXiv:2405.01713): independent
+systems only amortize the per-step dispatch cost when they ride one
+bundle, but a bundle is one trace — so only requests that agree on
+everything the trace is specialized on may share one.  The bucket key
+is exactly that specialization set:
+
+* ``family`` + ``n`` — the RHS/Jacobian callables and the state size;
+* ``method`` — the integrator the bundle runs;
+* ``tol_class`` — the tolerance decade ``(floor(log10 rtol),
+  floor(log10 atol))``: requests are served at their class
+  representative ``10**class`` (at least as tight as asked);
+* ``dtype`` — trace input dtypes.
+
+Flush policy is the classic dynamic-batching pair: a bucket flushes
+when it holds ``max_batch`` requests (full bundle) or when its oldest
+request has waited ``max_wait`` seconds (latency bound).  Flushed
+groups are padded up to the nearest *bucket size* — the lane-friendly
+batch shapes the committed ``BENCH_ensemble.json`` sweep says are
+throughput sweet spots (:func:`bucket_sizes_from_bench`) — so the
+trace cache sees a tiny, fixed set of shapes no matter what sizes
+traffic arrives in.
+
+Backpressure is bounded-depth admission: when ``max_depth`` requests
+are queued, :meth:`AdmissionQueue.offer` raises :class:`RetryAfter`
+(carrying a suggested retry delay) instead of growing without bound —
+the reject-with-retry-after contract lets clients shed load while the
+queue drains at the solver's pace.
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+def tolerance_class(rtol: float, atol: float) -> Tuple[int, int]:
+    """The tolerance decade a request is bucketed (and served) at:
+    ``(floor(log10 rtol), floor(log10 atol))``.  Serving at
+    ``10**class`` is at least as tight as the request asked for."""
+    if not (0 < rtol < 1 and 0 < atol < 1):
+        raise ValueError(f"tolerances must be in (0, 1); got "
+                         f"rtol={rtol!r}, atol={atol!r}")
+    return (int(math.floor(math.log10(rtol))),
+            int(math.floor(math.log10(atol))))
+
+
+class RetryAfter(RuntimeError):
+    """Admission rejected: the queue is at ``max_depth``.  ``retry_after``
+    (seconds) is the server's drain-rate hint; resubmit after it."""
+
+    def __init__(self, retry_after: float, depth: int, max_depth: int):
+        self.retry_after = float(retry_after)
+        self.depth = depth
+        self.max_depth = max_depth
+        super().__init__(
+            f"queue at max depth ({depth}/{max_depth}); "
+            f"retry after {retry_after:.3f}s")
+
+
+@dataclass
+class IVPRequest:
+    """One client request: integrate ``y0`` (n,) from t0 to tf.
+
+    ``params`` is a pytree of per-system leaves (scalars or arrays
+    WITHOUT a system axis) handed to the family's RHS/Jacobian as
+    traced data — per-request physics without per-request traces.
+    ``session`` is an optional single-lane
+    :class:`~repro.core.batched.SolverSession` from a previous
+    response: the warm-start continuation handle.
+    """
+
+    family: str
+    y0: Any
+    t0: float
+    tf: float
+    rtol: float = 1e-6
+    atol: float = 1e-9
+    method: str = "ensemble_bdf"
+    params: Any = None
+    session: Any = None
+    # filled in by the queue / server:
+    arrival: float = 0.0
+    future: Any = None
+
+    @property
+    def n(self) -> int:
+        return int(self.y0.shape[-1])
+
+
+@dataclass(frozen=True)
+class BucketKey:
+    """Everything a bundle's trace is specialized on (except nsys,
+    which padding quantizes separately)."""
+
+    family: str
+    n: int
+    method: str
+    tol_class: Tuple[int, int]
+    dtype: str
+
+
+def bucket_key(req: IVPRequest, dtype: str) -> BucketKey:
+    return BucketKey(family=req.family, n=req.n, method=req.method,
+                     tol_class=tolerance_class(req.rtol, req.atol),
+                     dtype=dtype)
+
+
+@dataclass
+class Bundle:
+    """A flushed group of same-bucket requests, to be padded to
+    ``nsys`` lanes (``len(requests) <= nsys``) and executed as one
+    batched integration."""
+
+    key: BucketKey
+    requests: List[IVPRequest]
+    nsys: int                  # padded lane count (the bucket size)
+    flushed: float             # queue-exit timestamp
+
+    @property
+    def live(self) -> int:
+        return len(self.requests)
+
+    @property
+    def occupancy(self) -> float:
+        return self.live / self.nsys
+
+
+DEFAULT_BUCKET_SIZES = (64, 128, 256, 512)
+
+
+def bucket_sizes_from_bench(path: str = "BENCH_ensemble.json",
+                            max_size: int = 512,
+                            fill: Tuple[int, ...] = (64, 128, 256)
+                            ) -> Tuple[int, ...]:
+    """Derive padded bundle sizes from the committed ensemble sweep.
+
+    Every ``nsys`` the benchmark measured where the pallas kernels beat
+    the jnp oracle (ratio >= 1) is a demonstrated sweet spot; sizes
+    above ``max_size`` are dropped (a serving flush should not wait for
+    32768 requests), and the small ``fill`` sizes are merged in so
+    light traffic pads to tens of lanes, not hundreds.  Falls back to
+    :data:`DEFAULT_BUCKET_SIZES` when the file is missing — the queue
+    must admit traffic on a fresh checkout too.
+    """
+    sizes = set(fill)
+    try:
+        with open(path) as fh:
+            bench = json.load(fh)
+        for row in bench.get("results", []):
+            ratio = (row["pallas_interpret_systems_per_sec"]
+                     / row["jnp_systems_per_sec"])
+            if ratio >= 1.0 and row["nsys"] <= max_size:
+                sizes.add(int(row["nsys"]))
+    except (OSError, ValueError, KeyError):
+        return DEFAULT_BUCKET_SIZES
+    return tuple(sorted(sizes))
+
+
+@dataclass
+class _Bucket:
+    requests: List[IVPRequest] = field(default_factory=list)
+    oldest: float = 0.0
+
+
+class AdmissionQueue:
+    """Bucketed admission with max-batch-or-max-wait flushing and
+    bounded-depth backpressure.
+
+    The queue is time-explicit: :meth:`offer` and :meth:`poll` take an
+    optional ``now`` so servers (and tests) can drive it from their own
+    clock; the default is ``time.monotonic``.  Thread safety is the
+    owner's job (:class:`~repro.serve.solver.server.SolverServer` holds
+    one lock around both).
+    """
+
+    def __init__(self, bucket_sizes: Tuple[int, ...] = DEFAULT_BUCKET_SIZES,
+                 max_batch: Optional[int] = None,
+                 max_wait: float = 2e-3,
+                 max_depth: int = 4096,
+                 dtype: str = "float64",
+                 clock: Callable[[], float] = time.monotonic):
+        if not bucket_sizes:
+            raise ValueError("need at least one bucket size")
+        self.bucket_sizes = tuple(sorted(set(int(s) for s in bucket_sizes)))
+        self.max_batch = int(max_batch or self.bucket_sizes[-1])
+        if self.max_batch > self.bucket_sizes[-1]:
+            raise ValueError(
+                f"max_batch={self.max_batch} exceeds the largest bucket "
+                f"size {self.bucket_sizes[-1]} — a full flush could not "
+                "be padded")
+        self.max_wait = float(max_wait)
+        self.max_depth = int(max_depth)
+        self.dtype = dtype
+        self.clock = clock
+        self._buckets: Dict[BucketKey, _Bucket] = {}
+        self._depth = 0
+        self.rejected = 0
+
+    @property
+    def depth(self) -> int:
+        """Total queued (not yet flushed) requests."""
+        return self._depth
+
+    def pad_to(self, count: int) -> int:
+        """The bucket size a ``count``-request group is padded to: the
+        smallest size that fits (groups are capped at ``max_batch``,
+        which is itself capped at the largest size)."""
+        for s in self.bucket_sizes:
+            if count <= s:
+                return s
+        return self.bucket_sizes[-1]
+
+    def offer(self, req: IVPRequest, now: Optional[float] = None) -> None:
+        """Admit one request, or raise :class:`RetryAfter` when the
+        queue is at ``max_depth`` (bounded backpressure)."""
+        now = self.clock() if now is None else now
+        if self._depth >= self.max_depth:
+            self.rejected += 1
+            # drain-rate hint: one max_wait flushes every due bucket,
+            # so a full batch's worth of room opens within ~2 windows
+            raise RetryAfter(2.0 * self.max_wait, self._depth,
+                             self.max_depth)
+        req.arrival = now
+        key = bucket_key(req, self.dtype)
+        bucket = self._buckets.get(key)
+        if bucket is None:
+            bucket = self._buckets[key] = _Bucket()
+        if not bucket.requests:
+            bucket.oldest = now
+        bucket.requests.append(req)
+        self._depth += 1
+
+    def poll(self, now: Optional[float] = None,
+             flush_all: bool = False) -> List[Bundle]:
+        """Flush every due bucket: full (``>= max_batch``) or stale
+        (oldest waited ``>= max_wait``).  ``flush_all=True`` drains
+        everything regardless of age (shutdown / synchronous drive)."""
+        now = self.clock() if now is None else now
+        bundles: List[Bundle] = []
+        for key, bucket in self._buckets.items():
+            while len(bucket.requests) >= self.max_batch:
+                take = bucket.requests[:self.max_batch]
+                bucket.requests = bucket.requests[self.max_batch:]
+                self._depth -= len(take)
+                bundles.append(Bundle(key=key, requests=take,
+                                      nsys=self.pad_to(len(take)),
+                                      flushed=now))
+            if bucket.requests and (flush_all or
+                                    now - bucket.oldest >= self.max_wait):
+                take, bucket.requests = bucket.requests, []
+                self._depth -= len(take)
+                bundles.append(Bundle(key=key, requests=take,
+                                      nsys=self.pad_to(len(take)),
+                                      flushed=now))
+            if bucket.requests:
+                # remaining requests are in arrival order; the clock
+                # for the next stale-flush starts at the new head
+                bucket.oldest = bucket.requests[0].arrival
+        return bundles

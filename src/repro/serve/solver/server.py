@@ -1,0 +1,398 @@
+"""The serving driver: a synchronous core with an async facade.
+
+``SolverServer`` composes the three serving layers over the solver
+stack: the :class:`~repro.serve.solver.queue.AdmissionQueue` groups
+requests into shape buckets, the
+:class:`~repro.serve.solver.trace_cache.TraceCache` maps each padded
+bundle shape to a compiled executable, and every bundle is pumped
+through the unified ``IVP.integrate`` front-end with a
+:class:`~repro.core.batched.SolverSession` carry — so cold requests
+and warm-start continuations mix freely in one bundle under one trace.
+
+The **synchronous core** is :meth:`pump`: flush due bundles, execute
+each, resolve its per-request futures.  Tests and benchmarks drive it
+directly (deterministic, no threads); the **async facade**
+(:meth:`start`/:meth:`stop`) runs the same pump on a background thread
+so :meth:`submit` is a non-blocking enqueue returning a
+``concurrent.futures.Future``.
+
+Every response is a full :class:`~repro.core.ivp.Solution` restricted
+to the request's lane — padded dead lanes never leak into a client's
+stats — extended with the serving wall-clock split
+(``timings = {"queue_wait", "compile", "execute"}``; compile is the
+bundle's trace+compile cost, nonzero only for the bundle that missed
+the trace cache) and the warm-start ``session`` handle for follow-up
+requests.  :meth:`metrics` reports queue depth, batch occupancy
+(live vs padded lanes), p50/p99 latency, and the trace-cache counters.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.batched import SolverSession
+from repro.core.context import Context
+from repro.core.ivp import IVP, Solution, integrate
+
+from .queue import AdmissionQueue, Bundle, IVPRequest, RetryAfter
+from .trace_cache import TraceCache, TraceKey
+
+__all__ = ["ProblemFamily", "SolverServer", "RetryAfter"]
+
+
+@dataclass(frozen=True)
+class ProblemFamily:
+    """A served problem class: parametric batched RHS/Jacobian.
+
+    The callables take the bundle's stacked per-request ``params``
+    pytree as a third argument (traced data, so new parameter values
+    never recompile): ``f(t:(nsys,), y:(nsys,n), params) -> (nsys,n)``,
+    ``jac -> (nsys,n,n)``; the optional SoA forms follow the hot-loop
+    convention (``f_soa(t, y:(n,nsys), params) -> (n,nsys)``,
+    ``jac_soa -> (n,n,nsys)``).  ``params=None`` families close over
+    everything.
+    """
+
+    name: str
+    n: int
+    f: Callable
+    jac: Callable
+    f_soa: Optional[Callable] = None
+    jac_soa: Optional[Callable] = None
+
+
+@dataclass
+class _CompiledBundle:
+    fn: Any            # AOT-compiled (session, tf, params) -> (y, st, sess)
+    compile_s: float   # trace + lower + compile wall clock
+    meta: dict         # trace-time Solution fields (method, solver names,
+    #                    workspace bytes) reused for every hit
+
+
+class SolverServer:
+    """Dynamic-batching IVP server over the ensemble solver stack."""
+
+    def __init__(self, families, ctx: Optional[Context] = None, *,
+                 method: str = "ensemble_bdf", order: int = 5,
+                 lin_solver=None,
+                 bucket_sizes: Optional[Tuple[int, ...]] = None,
+                 max_batch: Optional[int] = None,
+                 max_wait: float = 2e-3, max_depth: int = 4096,
+                 cache_size: int = 32, max_steps: int = 100_000,
+                 warmup_bundles: int = 16,
+                 clock: Callable[[], float] = time.monotonic):
+        if isinstance(families, ProblemFamily):
+            families = [families]
+        self.families: Dict[str, ProblemFamily] = {
+            fam.name: fam for fam in families}
+        if not self.families:
+            raise ValueError("SolverServer needs at least one ProblemFamily")
+        self.ctx = ctx if ctx is not None else Context()
+        self.method = method
+        self.order = order
+        self.lin_solver = lin_solver
+        self.max_steps = max_steps
+        self.clock = clock
+        self.dtype = str(jnp.asarray(0.0).dtype)
+        if bucket_sizes is None:
+            from .queue import bucket_sizes_from_bench
+            bucket_sizes = bucket_sizes_from_bench()
+        self.queue = AdmissionQueue(bucket_sizes=bucket_sizes,
+                                    max_batch=max_batch,
+                                    max_wait=max_wait,
+                                    max_depth=max_depth,
+                                    dtype=self.dtype, clock=clock)
+        self.cache = TraceCache(maxsize=cache_size)
+        # surface the cache counters through ctx.dispatch_report()
+        self.ctx.trace_cache = self.cache
+        self.warmup_bundles = int(warmup_bundles)
+        self._lock = threading.Lock()       # queue admission/flush
+        self._mlock = threading.Lock()      # metrics accumulators
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._latencies: List[float] = []
+        self._requests = 0
+        self._bundles = 0
+        self._live_lanes = 0
+        self._padded_lanes = 0
+        self._steady_misses = 0
+
+    # ------------------------------------------------------------------
+    # submission (async facade surface)
+    # ------------------------------------------------------------------
+
+    def submit(self, family: str, y0, t0: float, tf: float, *,
+               rtol: float = 1e-6, atol: float = 1e-9,
+               params: Any = None, session: Any = None,
+               method: Optional[str] = None) -> Future:
+        """Enqueue one IVP; returns a Future resolving to its
+        :class:`~repro.core.ivp.Solution` (with ``timings`` and a
+        warm-start ``session``).  Raises :class:`RetryAfter` when the
+        queue is at depth — resubmit after ``exc.retry_after`` seconds.
+        """
+        fam = self.families.get(family)
+        if fam is None:
+            raise ValueError(f"unknown family {family!r}; registered: "
+                             f"{sorted(self.families)}")
+        y0 = jnp.asarray(y0, self.dtype)
+        if y0.shape != (fam.n,):
+            raise ValueError(f"family {family!r} serves n={fam.n} "
+                             f"systems; got y0 shape {tuple(y0.shape)}")
+        if session is not None and (session.n != fam.n or
+                                    session.nsys != 1):
+            raise ValueError(
+                f"session must be a single-lane handle for n={fam.n} "
+                f"(got n={session.n}, nsys={session.nsys})")
+        req = IVPRequest(family=family, y0=y0, t0=float(t0),
+                         tf=float(tf), rtol=rtol, atol=atol,
+                         method=method or self.method, params=params,
+                         session=session, future=Future())
+        with self._lock:
+            self.queue.offer(req)      # may raise RetryAfter
+        self._wake.set()
+        return req.future
+
+    # ------------------------------------------------------------------
+    # the synchronous core
+    # ------------------------------------------------------------------
+
+    def pump(self, now: Optional[float] = None,
+             flush_all: bool = False) -> int:
+        """Flush due bundles and execute them; returns bundles run.
+        The deterministic core — tests drive it directly."""
+        with self._lock:
+            bundles = self.queue.poll(now, flush_all=flush_all)
+        for bundle in bundles:
+            self._execute(bundle)
+        return len(bundles)
+
+    def drain(self) -> int:
+        """Pump (flushing partial buckets) until the queue is empty."""
+        total = 0
+        while self.queue.depth:
+            total += self.pump(flush_all=True)
+        return total
+
+    # ------------------------------------------------------------------
+    # async facade
+    # ------------------------------------------------------------------
+
+    def start(self) -> "SolverServer":
+        """Run the pump loop on a daemon thread (idempotent)."""
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                self._wake.wait(timeout=0.5 * self.queue.max_wait)
+                self._wake.clear()
+                self.pump()
+            self.pump(flush_all=True)   # don't strand queued futures
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="solver-serve-pump")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._wake.set()
+        self._thread.join()
+        self._thread = None
+
+    def __enter__(self) -> "SolverServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------------
+    # bundle execution
+    # ------------------------------------------------------------------
+
+    def _assemble(self, bundle: Bundle):
+        """Gather per-request lane sessions (warm handles as-is, cold
+        lanes built from y0) into one SoA bundle session, pad dead
+        lanes by replicating the last live lane with ``tf = t`` (a
+        masked no-op from step one), and stack the params pytree."""
+        lanes = []
+        for req in bundle.requests:
+            if req.session is not None:
+                lanes.append(req.session)
+            else:
+                lanes.append(SolverSession.cold(req.y0[None, :], req.t0))
+        npad = bundle.nsys - bundle.live
+        if npad:
+            lanes.extend([lanes[-1]] * npad)
+        sess = SolverSession.concat(lanes)
+        tf_live = [req.tf for req in bundle.requests]
+        # dead lanes: tf == the replicated lane's current t -> inactive
+        tfa = jnp.concatenate([
+            jnp.asarray(tf_live, sess.t.dtype),
+            jnp.broadcast_to(sess.t[-1], (npad,))]) if npad else \
+            jnp.asarray(tf_live, sess.t.dtype)
+        p0 = bundle.requests[0].params
+        if p0 is None:
+            if any(r.params is not None for r in bundle.requests):
+                raise ValueError("mixed params/None requests in one "
+                                 "family bundle")
+            params = None
+        else:
+            stacked = [r.params for r in bundle.requests]
+            stacked.extend([stacked[-1]] * npad)
+            params = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(
+                    [jnp.asarray(x, self.dtype) for x in xs]), *stacked)
+        return sess, tfa, params
+
+    def _compile(self, key: TraceKey, sess, tfa, params) -> _CompiledBundle:
+        """Trace, lower, and AOT-compile one bundle shape (the cache
+        miss path); records the compile wall clock and the trace-time
+        Solution metadata reused for every subsequent hit."""
+        fam = self.families[key.bucket.family]
+        rtol = 10.0 ** key.bucket.tol_class[0]
+        atol = 10.0 ** key.bucket.tol_class[1]
+        opts = self.ctx.options(rtol=rtol, atol=atol,
+                                max_steps=self.max_steps)
+        method = key.bucket.method
+        meta: dict = {}
+
+        def run(sess, tfa, params):
+            fb = lambda t, y: fam.f(t, y, params)
+            jb = lambda t, y: fam.jac(t, y, params)
+            fs = (lambda t, z: fam.f_soa(t, z, params)) \
+                if fam.f_soa is not None else None
+            js = (lambda t, z: fam.jac_soa(t, z, params)) \
+                if fam.jac_soa is not None else None
+            prob = IVP(f=fb, jac=jb, f_soa=fs, jac_soa=js,
+                       y0=sess.Z[0].T)
+            sol = integrate(prob, sess.t[0], tfa, method, ctx=self.ctx,
+                            opts=opts, order=self.order,
+                            lin_solver=self.lin_solver,
+                            session=sess, return_session=True)
+            # trace-time capture: these Solution fields are concrete
+            # Python values (strings / host ints) even under tracing
+            meta.update(method=sol.method, lin_solver=sol.lin_solver,
+                        nonlin_solver=sol.nonlin_solver,
+                        workspace_bytes=sol.workspace_bytes)
+            return sol.y, sol.stats, sol.session
+
+        t0 = time.perf_counter()
+        compiled = jax.jit(run).lower(sess, tfa, params).compile()
+        return _CompiledBundle(fn=compiled,
+                               compile_s=time.perf_counter() - t0,
+                               meta=dict(meta))
+
+    def _execute(self, bundle: Bundle) -> None:
+        try:
+            sess, tfa, params = self._assemble(bundle)
+            key = TraceKey(bucket=bundle.key, nsys=bundle.nsys,
+                           policy=self.ctx.policy)
+            entry, hit = self.cache.get(
+                key, lambda: self._compile(key, sess, tfa, params))
+            if not hit and self._bundles >= self.warmup_bundles:
+                with self._mlock:
+                    self._steady_misses += 1
+            t0 = time.perf_counter()
+            y, st, sess_out = entry.fn(sess, tfa, params)
+            jax.block_until_ready(y)
+            exec_s = time.perf_counter() - t0
+        except Exception as exc:       # resolve, don't strand, futures
+            for req in bundle.requests:
+                if not req.future.set_running_or_notify_cancel():
+                    continue
+                req.future.set_exception(exc)
+            raise
+        done = self.clock()
+        with self._mlock:
+            self._bundles += 1
+            self._requests += bundle.live
+            self._live_lanes += bundle.live
+            self._padded_lanes += bundle.nsys
+            for req in bundle.requests:
+                self._latencies.append(done - req.arrival)
+            if len(self._latencies) > 100_000:
+                del self._latencies[:-100_000]
+        for i, req in enumerate(bundle.requests):
+            sol = self._lane_solution(i, req, bundle, y, st, sess_out,
+                                      entry, hit, exec_s)
+            if req.future.set_running_or_notify_cancel():
+                req.future.set_result(sol)
+
+    def _lane_solution(self, i: int, req: IVPRequest, bundle: Bundle,
+                       y, st, sess_out, entry: _CompiledBundle,
+                       hit: bool, exec_s: float) -> Solution:
+        """One request's Solution: the bundle result restricted to its
+        lane (dead padded lanes never reach a client), plus the serving
+        wall-clock split and the warm-start session handle."""
+        lane_stats = jax.tree_util.tree_map(lambda a: a[..., i], st)
+        meta = entry.meta
+        timings = {"queue_wait": bundle.flushed - req.arrival,
+                   "compile": 0.0 if hit else entry.compile_s,
+                   "execute": exec_s}
+        return Solution(
+            y=y[i], t=sess_out.t[i], success=st.success[i],
+            stats=lane_stats, method=meta["method"],
+            lin_solver=meta["lin_solver"],
+            nonlin_solver=meta["nonlin_solver"],
+            nni=st.nni[i],
+            nli=st.nli[i] if st.nli is not None else None,
+            nsetups=st.nsetups[i] if st.nsetups is not None else None,
+            workspace_bytes=meta["workspace_bytes"],
+            high_water_bytes=self.ctx.memory.high_water_bytes,
+            npsolves=st.npsolves[i] if st.npsolves is not None else None,
+            npsetups=None,
+            session=sess_out.lanes(slice(i, i + 1)),
+            timings=timings)
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _quantile(sorted_vals: List[float], q: float) -> float:
+        if not sorted_vals:
+            return 0.0
+        idx = min(len(sorted_vals) - 1,
+                  max(0, int(round(q * (len(sorted_vals) - 1)))))
+        return sorted_vals[idx]
+
+    def take_latencies(self) -> List[float]:
+        """Return and clear the request-latency window (seconds) — lets
+        a benchmark attribute percentiles to one load point."""
+        with self._mlock:
+            out, self._latencies = self._latencies, []
+        return out
+
+    def metrics(self) -> dict:
+        """Serving health: queue depth, occupancy (live vs padded
+        lanes), latency percentiles, trace-cache counters, and the
+        zero-steady-state-recompiles audit (``steady_misses``)."""
+        with self._mlock:
+            lat = sorted(self._latencies)
+            live, padded = self._live_lanes, self._padded_lanes
+            out = {
+                "queue_depth": self.queue.depth,
+                "rejected": self.queue.rejected,
+                "requests": self._requests,
+                "bundles": self._bundles,
+                "live_lanes": live,
+                "padded_lanes": padded,
+                "occupancy": (live / padded) if padded else 0.0,
+                "latency_p50_s": self._quantile(lat, 0.50),
+                "latency_p99_s": self._quantile(lat, 0.99),
+                "steady_misses": self._steady_misses,
+                "warmup_bundles": self.warmup_bundles,
+                "trace_cache": self.cache.stats(),
+            }
+        return out
