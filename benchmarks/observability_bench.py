@@ -1,0 +1,161 @@
+"""Observability overhead benchmark: the zero/low-cost contract, timed.
+
+The observability subsystem promises two ceilings on the batched-BDF
+hot path (the ``BENCH_ensemble`` end-to-end workload):
+
+* **off** — a constructed-but-disabled ``ObservabilityConfig`` on the
+  context adds <= 2% to execution: structurally it adds *zero
+  equations* (the ``telemetry-purity`` sunlint rule checks the jaxprs
+  are identical), so anything measured here is host-side dispatch
+  noise;
+* **on** — step telemetry (the in-loop ring-buffer carry) plus region
+  profiling adds <= 5%: one ``.at[idx % K].set`` scatter per field per
+  step attempt, amortized over the Newton solves.
+
+Execution time is isolated through the ``timed=True`` AOT path of
+``IVP.integrate`` — the ``timings["execute"]`` stage is a pure run of
+the compiled program, so the ratios compare device work, not trace or
+compile time (each timed call re-lowers; compile cost is reported
+separately as INFO).  The table lands in ``BENCH_observability.json``
+via the ``json_artifact`` contract of ``benchmarks/run.py``.
+
+``check()`` is the ``--check`` gate hook: both ratios gate CI at the
+>= 4096-system configs (best-of-``REPEATS``, one retry), the smaller
+config is informational — same timer-noise rationale as
+``ensemble_bench.GATE_MIN_NSYS``.  ``REPRO_PERF_CHECK=info`` demotes
+timing failures to informational, same escape hatch as the other perf
+gates.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.core.context import Context
+from repro.core.ivp import IVP, integrate
+
+CONFIGS = (
+    # (nsys, tf, telemetry capacity) — the BENCH_ensemble end-to-end
+    # kinetics workload at three ensemble sizes; tf shrinks as nsys
+    # grows so every point stays seconds-scale while execution stays
+    # well above timer granularity
+    (512, 2.0, 1024),
+    (4096, 0.5, 512),
+    (32768, 0.02, 128),
+)
+REPEATS = 3
+OFF_CEILING = 1.02
+ON_CEILING = 1.05
+GATE_MIN_NSYS = 4096
+
+# module-global artifact picked up by benchmarks/run.py after run()
+json_artifact = None
+
+
+def _problem(nsys):
+    from repro.core.problems import batched_robertson, batched_robertson_soa
+    f, jac, y0 = batched_robertson(nsys)
+    f_soa, jac_soa = batched_robertson_soa(nsys)
+    return IVP(f=f, jac=jac, f_soa=f_soa, jac_soa=jac_soa, y0=y0)
+
+
+def _best_execute(prob, tf, repeats=REPEATS, **kw):
+    """Best-of-``repeats`` ``timings["execute"]`` (and the last full
+    Solution, for correctness checks)."""
+    best, sol = float("inf"), None
+    compile_s = 0.0
+    for _ in range(repeats):
+        sol = integrate(prob, 0.0, tf, "ensemble_bdf", timed=True, **kw)
+        best = min(best, sol.timings["execute"])
+        compile_s = sol.timings["compile"]
+    return best, compile_s, sol
+
+
+def _measure(nsys, tf, capacity, repeats=REPEATS) -> dict:
+    from repro.observability import ObservabilityConfig
+    prob = _problem(nsys)
+    base_s, base_c, base_sol = _best_execute(prob, tf, repeats)
+    # disabled-but-constructed config: the structural-zero-cost claim
+    off_ctx = Context(observability=ObservabilityConfig())
+    off_s, _, off_sol = _best_execute(prob, tf, repeats, ctx=off_ctx)
+    # telemetry ring in the carry + profiler regions around the stages
+    on_ctx = Context(observability=ObservabilityConfig(
+        profile=True, profile_sync=False, telemetry=True,
+        telemetry_capacity=capacity))
+    on_s, on_c, on_sol = _best_execute(prob, tf, repeats, ctx=on_ctx)
+    # observability must never perturb the solution
+    assert np.array_equal(np.asarray(base_sol.y), np.asarray(off_sol.y))
+    assert np.array_equal(np.asarray(base_sol.y), np.asarray(on_sol.y))
+    assert on_sol.telemetry is not None
+    steps = int(np.sum(np.asarray(on_sol.stats.steps)))
+    return {"nsys": nsys, "tf": tf, "telemetry_capacity": capacity,
+            "steps_total": steps,
+            "base_execute_s": base_s, "off_execute_s": off_s,
+            "on_execute_s": on_s,
+            "off_ratio": off_s / base_s, "on_ratio": on_s / base_s,
+            "base_compile_s": base_c, "on_compile_s": on_c,
+            "telemetry_truncated": bool(on_sol.telemetry.truncated)}
+
+
+def run():
+    global json_artifact
+    rows = []
+    table = {"workload": "ensemble_bdf robertson kinetics, observability "
+                         "off/on execute-stage overhead",
+             "ceilings": {"off": OFF_CEILING, "on": ON_CEILING},
+             "note": ("ratios compare timed=True AOT execute stages "
+                      "(best-of-%d); compile reported separately"
+                      % REPEATS),
+             "results": []}
+    for nsys, tf, cap in CONFIGS:
+        res = _measure(nsys, tf, cap)
+        table["results"].append(res)
+        rows.append((f"observability.off.n{nsys}",
+                     1e6 * res["off_execute_s"],
+                     f"ratio={res['off_ratio']:.3f},"
+                     f"base_s={res['base_execute_s']:.4f}"))
+        rows.append((f"observability.on.n{nsys}",
+                     1e6 * res["on_execute_s"],
+                     f"ratio={res['on_ratio']:.3f},"
+                     f"steps={res['steps_total']},cap={cap},"
+                     f"compile_s={res['on_compile_s']:.2f}"))
+    json_artifact = ("BENCH_observability.json", table)
+    return rows
+
+
+def check() -> bool:
+    """``benchmarks/run.py --check`` hook: off <= 1.02, on <= 1.05 on
+    the execute stage, gating at >= GATE_MIN_NSYS systems (one retry
+    per failing config; ``REPRO_PERF_CHECK=info`` demotes to INFO)."""
+    import os
+    soft = os.environ.get("REPRO_PERF_CHECK", "").lower() == "info"
+    ok = True
+    for nsys, tf, cap in CONFIGS:
+        gating = nsys >= GATE_MIN_NSYS and not soft
+        good = False
+        for attempt in range(2):
+            res = _measure(nsys, tf, cap)
+            good = (res["off_ratio"] <= OFF_CEILING and
+                    res["on_ratio"] <= ON_CEILING)
+            if good or not gating:
+                break
+        ok &= (good or not gating)
+        verdict = ("PASS" if good else "FAIL") if gating else "INFO"
+        print(f"check.observability.n{nsys},{verdict},"
+              f"off_ratio={res['off_ratio']:.3f}(<= {OFF_CEILING}),"
+              f"on_ratio={res['on_ratio']:.3f}(<= {ON_CEILING})",
+              flush=True)
+    return ok
+
+
+if __name__ == "__main__":
+    import json
+    jax.config.update("jax_enable_x64", True)
+    for row in run():
+        print(",".join(str(x) for x in row))
+    if json_artifact:
+        path, payload = json_artifact
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"wrote {path}")

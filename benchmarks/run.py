@@ -21,11 +21,13 @@ informational) — or if ANY config drifts past the 1e-14 accuracy
 bound.  It then applies the same discipline to every entry in the
 committed autotune cache (``.autotune/interpret.json``): the recorded
 jnp-vs-pallas winner must still win on re-measure
-(autotune_bench.check).  Finally it runs the serving front-end's
+(autotune_bench.check).  It then runs the serving front-end's
 functional invariants (serving_bench.check: trace-cache behavior,
-occupancy, warm-start win; latency informational).  This is the gate
-the CI smoke step runs (ensemble_bench.check documents the cap
-rationale).
+occupancy, warm-start win; latency informational), and finally the
+observability overhead ceilings (observability_bench.check: disabled
+config <= 1.02x, telemetry+profiling <= 1.05x on the execute stage).
+This is the gate the CI smoke step runs (ensemble_bench.check
+documents the cap rationale).
 
 ``--tune`` regenerates the autotune cache: every OP_TABLE op is timed
 on both backends over a grid of shape signatures and the measured
@@ -53,6 +55,7 @@ MODULES = [
     "sparse_bench",          # sparse-vs-dense Newton solve -> BENCH_sparse.json
     "roofline_table",        # EXPERIMENTS §Roofline (derived from dry-run)
     "serving_bench",         # dynamic-batching server -> BENCH_serving.json
+    "observability_bench",   # off/on overhead -> BENCH_observability.json
 ]
 
 
@@ -63,7 +66,8 @@ def main() -> None:
         print(f"tune,{len(cache.entries)},{cache.path}")
         sys.exit(0)
     if "--check" in sys.argv[1:]:
-        from benchmarks import autotune_bench, ensemble_bench, serving_bench
+        from benchmarks import (autotune_bench, ensemble_bench,
+                                observability_bench, serving_bench)
         ok = ensemble_bench.check()
         print(f"perf_check,{'PASS' if ok else 'FAIL'},BENCH_ensemble.json")
         ok_tune = autotune_bench.check()
@@ -72,7 +76,10 @@ def main() -> None:
         ok_serve = serving_bench.check()
         print(f"serving_check,{'PASS' if ok_serve else 'FAIL'},"
               f"serving invariants (latency informational)")
-        sys.exit(0 if (ok and ok_tune and ok_serve) else 1)
+        ok_obs = observability_bench.check()
+        print(f"observability_check,{'PASS' if ok_obs else 'FAIL'},"
+              f"off<=1.02 on<=1.05 execute-stage overhead")
+        sys.exit(0 if (ok and ok_tune and ok_serve and ok_obs) else 1)
     picked = sys.argv[1:] or MODULES
     print("name,us_per_call,derived")
     for name in picked:

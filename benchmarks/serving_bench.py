@@ -19,7 +19,11 @@ requests through one server, asserting the serving invariants —
 trace-cache hit rate >= 95% with ZERO steady-state recompiles after the
 warmup window, batch occupancy >= 80%, warm-start continuations taking
 strictly fewer steps than a cold restart of the same leg, and a short
-pallas-interpret burst solving successfully.
+pallas-interpret burst solving successfully.  It then validates the
+observability surface: the Prometheus text exposition must parse and
+reconcile with ``metrics()``, and a profiled mini-run must produce a
+Chrome-trace/Perfetto timeline carrying queue-wait / compile / execute
+spans for EVERY flushed bundle.
 
 ``check()`` is the ``--check`` gate hook: a scaled-down smoke whose
 functional invariants (hit rate / steady misses / occupancy /
@@ -167,6 +171,78 @@ def run():
     return rows
 
 
+def _validate_prometheus(text: str, m: dict) -> None:
+    """The scrape must be well-formed text exposition AND reconcile
+    with the dict ``metrics()`` reports."""
+    lines = [ln for ln in text.splitlines() if ln]
+    assert lines, "empty Prometheus exposition"
+    seen_types = {}
+    for ln in lines:
+        if ln.startswith("# TYPE "):
+            _, _, name, kind = ln.split(" ", 3)
+            seen_types[name] = kind
+        else:
+            assert ln.startswith("#") or " " in ln, f"malformed: {ln!r}"
+    assert seen_types.get("repro_serve_requests_total") == "counter"
+    assert seen_types.get("repro_serve_latency_seconds") == "histogram"
+    assert seen_types.get("repro_serve_occupancy") == "gauge"
+    assert f"repro_serve_requests_total {m['requests']}" in text
+    assert f"repro_serve_bundles_total {m['bundles']}" in text
+    assert ("repro_serve_latency_seconds_count "
+            f"{m['latency_observed']}") in text
+    assert 'repro_serve_latency_seconds_bucket' in text
+    assert 'le="+Inf"' in text
+    # the Context counters ride the same scrape
+    assert "repro_context_integrations_total" in text
+
+
+def _profiled_trace_smoke(nreq: int = 96, verbose: bool = True) -> None:
+    """A profiled mini-run: every flushed bundle must land queue-wait /
+    compile / execute spans on the profiler timeline, and the exported
+    Chrome trace must be loadable, well-formed JSON."""
+    import json as _json
+    import os
+    import tempfile
+
+    from repro.observability import ObservabilityConfig
+
+    fr = robertson_family()
+    ctx = Context(observability=ObservabilityConfig(
+        profile=True, profile_sync=False))
+    srv = SolverServer(
+        [ProblemFamily("robertson", 3, fr[0], fr[1], fr[2], fr[3])],
+        ctx=ctx, bucket_sizes=(32,), max_batch=32, max_wait=1e-3,
+        warmup_bundles=0)
+    futs = _submit_mixed(srv, nreq, TF_JNP, seed=23, decay_every=0)
+    bundles = srv.drain()
+    assert all(bool(f.result().success) for f in futs)
+    spans = {}
+    for s in srv.ctx.profiler.spans:
+        spans.setdefault(s.name, []).append(s)
+    for name in ("serve.bundle.queue_wait", "serve.bundle.compile",
+                 "serve.bundle.execute"):
+        got = len(spans.get(name, ()))
+        assert got == bundles, \
+            f"{name}: {got} spans for {bundles} flushed bundles"
+    fd, path = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    try:
+        srv.ctx.profiler.export_chrome_trace(path)
+        with open(path) as fh:
+            doc = _json.load(fh)
+        ev = doc["traceEvents"]
+        assert all(e["ph"] == "X" and e["dur"] >= 0 and e["ts"] >= 0
+                   for e in ev)
+        per_bundle = [e for e in ev
+                      if e["name"].startswith("serve.bundle.")]
+        assert len(per_bundle) == 3 * bundles
+    finally:
+        os.unlink(path)
+    if verbose:
+        print(f"serving.perfetto,{bundles},spans_per_bundle=3,"
+              f"trace_events={len(ev)}", flush=True)
+
+
 def smoke(nreq: int = SMOKE_REQUESTS, verbose: bool = True,
           hit_rate_floor: float = SMOKE_HIT_RATE) -> dict:
     """The CI acceptance run: >= 10^4 mixed-shape requests through one
@@ -220,6 +296,12 @@ def smoke(nreq: int = SMOKE_REQUESTS, verbose: bool = True,
     psrv.drain()
     assert all(bool(f.result().success) for f in pfuts), \
         "pallas-interpret burst failed"
+
+    # observability surface: the Prometheus scrape must reconcile with
+    # metrics(), and a profiled run must land per-bundle spans on a
+    # valid Perfetto/Chrome-trace timeline
+    _validate_prometheus(srv.metrics_prometheus(), srv.metrics())
+    _profiled_trace_smoke(verbose=verbose)
     if verbose:
         print(f"serving.smoke,{nreq},hit_rate={cache['hit_rate']:.3f},"
               f"steady_misses={m['steady_misses']},"

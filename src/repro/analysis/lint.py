@@ -373,6 +373,126 @@ def default_purity_targets() -> List[TraceTarget]:
     return targets
 
 
+def default_telemetry_targets() -> List[Tuple[str, TraceTarget,
+                                              TraceTarget]]:
+    """(name, baseline, candidate) trace pairs for telemetry-purity.
+
+    Baseline is the *raw* integrator call — the pre-observability trace
+    with no :class:`~repro.observability.ObservabilityConfig` anywhere
+    near it.  Candidate is the same integration routed through
+    ``IVP.integrate`` with the default (disabled) observability config
+    on the context.  The rule demands the adaptive step-loop bodies be
+    primitive-identical: a disabled config must add ZERO equations to
+    the jitted hot loop."""
+    import jax
+    import jax.numpy as jnp
+
+    def _ensemble_setup():
+        from repro.core.problems import (batched_robertson,
+                                         batched_robertson_soa)
+        f, jac, y0 = batched_robertson(8)
+        f_soa, jac_soa = batched_robertson_soa(8)
+        return f, jac, y0, f_soa, jac_soa
+
+    def bdf_base():
+        from repro.core import batched
+        f, jac, y0, f_soa, jac_soa = _ensemble_setup()
+        return jax.make_jaxpr(
+            lambda y: batched.ensemble_bdf_integrate(
+                f, jac, y, 0.0, 1e-3, f_soa=f_soa,
+                jac_soa=jac_soa)[0])(y0).jaxpr
+
+    def bdf_cand():
+        from repro.core.context import Context
+        from repro.core.ivp import IVP, integrate
+        f, jac, y0, f_soa, jac_soa = _ensemble_setup()
+        return jax.make_jaxpr(
+            lambda y: integrate(
+                IVP(y0=y, f=f, jac=jac, f_soa=f_soa, jac_soa=jac_soa),
+                0.0, 1e-3, "ensemble_bdf", ctx=Context()).y)(y0).jaxpr
+
+    def dirk_base():
+        from repro.core import batched
+        from repro.core.butcher import DIRK_TABLES
+        f, jac, y0, f_soa, jac_soa = _ensemble_setup()
+        return jax.make_jaxpr(
+            lambda y: batched.ensemble_dirk_integrate(
+                f, jac, y, 0.0, 1e-3, DIRK_TABLES["sdirk2"],
+                f_soa=f_soa, jac_soa=jac_soa)[0])(y0).jaxpr
+
+    def dirk_cand():
+        from repro.core.context import Context
+        from repro.core.ivp import IVP, integrate
+        f, jac, y0, f_soa, jac_soa = _ensemble_setup()
+        return jax.make_jaxpr(
+            lambda y: integrate(
+                IVP(y0=y, f=f, jac=jac, f_soa=f_soa, jac_soa=jac_soa),
+                0.0, 1e-3, "ensemble_dirk:sdirk2",
+                ctx=Context()).y)(y0).jaxpr
+
+    def _scalar_setup():
+        import numpy as np
+        from repro.core.problems import batched_robertson
+        f, jac, y0b = batched_robertson(1)
+        y0 = np.asarray(y0b)[0]
+        sf = lambda t, y: f(jnp.asarray(t)[None], y[None, :])[0]
+        sjac = lambda t, y: jac(jnp.asarray(t)[None], y[None, :])[0]
+        return sf, sjac, y0
+
+    def scalar_base():
+        from repro.core import cvode
+        sf, _, y0 = _scalar_setup()
+        return jax.make_jaxpr(
+            lambda y: cvode.bdf_integrate(sf, y, 0.0, 1e-3)[0])(
+                y0).jaxpr
+
+    def scalar_cand():
+        from repro.core.context import Context
+        from repro.core.ivp import IVP, integrate
+        sf, sjac, y0 = _scalar_setup()
+        return jax.make_jaxpr(
+            lambda y: integrate(
+                IVP(y0=y, f=sf, jac=sjac), 0.0, 1e-3, "bdf",
+                ctx=Context()).y)(y0).jaxpr
+
+    return [
+        ("ensemble_bdf", TraceTarget("ensemble_bdf[raw]", bdf_base),
+         TraceTarget("ensemble_bdf[integrate,obs-off]", bdf_cand)),
+        ("ensemble_dirk", TraceTarget("ensemble_dirk[raw]", dirk_base),
+         TraceTarget("ensemble_dirk[integrate,obs-off]", dirk_cand)),
+        ("bdf", TraceTarget("bdf[raw]", scalar_base),
+         TraceTarget("bdf[integrate,obs-off]", scalar_cand)),
+    ]
+
+
+def default_telemetry_enabled_targets() -> List[TraceTarget]:
+    """Traces with step telemetry switched ON, scanned for host
+    callback primitives — the enabled path must record through the
+    in-graph ring buffer, never ``io_callback`` and friends."""
+    import jax
+
+    def enabled():
+        from repro.core.context import Context
+        from repro.core.ivp import IVP, integrate
+        from repro.core.problems import (batched_robertson,
+                                         batched_robertson_soa)
+        from repro.observability import ObservabilityConfig
+        f, jac, y0 = batched_robertson(8)
+        f_soa, jac_soa = batched_robertson_soa(8)
+        ctx = Context(observability=ObservabilityConfig(
+            telemetry=True, telemetry_capacity=16))
+
+        def run(y):
+            sol = integrate(
+                IVP(y0=y, f=f, jac=jac, f_soa=f_soa, jac_soa=jac_soa),
+                0.0, 1e-3, "ensemble_bdf", ctx=ctx)
+            return sol.y, sol.telemetry
+        return jax.make_jaxpr(run)(y0).jaxpr
+
+    return [TraceTarget("ensemble_bdf[integrate,telemetry=16]",
+                        enabled)]
+
+
 class LintContext:
     """What the rules inspect.  Every field has a lazy default built
     from the real repo; fixtures override via the setters."""
@@ -390,6 +510,8 @@ class LintContext:
         self._donation_targets = None
         self._contract_sigs = None
         self._purity_targets = None
+        self._telemetry_targets = None
+        self._telemetry_enabled_targets = None
 
     @property
     def op_table(self) -> dict:
@@ -453,6 +575,28 @@ class LintContext:
     @purity_targets.setter
     def purity_targets(self, targets):
         self._purity_targets = list(targets)
+
+    @property
+    def telemetry_targets(self) -> List[Tuple[str, TraceTarget,
+                                              TraceTarget]]:
+        if self._telemetry_targets is None:
+            self._telemetry_targets = default_telemetry_targets()
+        return self._telemetry_targets
+
+    @telemetry_targets.setter
+    def telemetry_targets(self, targets):
+        self._telemetry_targets = list(targets)
+
+    @property
+    def telemetry_enabled_targets(self) -> List[TraceTarget]:
+        if self._telemetry_enabled_targets is None:
+            self._telemetry_enabled_targets = \
+                default_telemetry_enabled_targets()
+        return self._telemetry_enabled_targets
+
+    @telemetry_enabled_targets.setter
+    def telemetry_enabled_targets(self, targets):
+        self._telemetry_enabled_targets = list(targets)
 
 
 # ---------------------------------------------------------------------------

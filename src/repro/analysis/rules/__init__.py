@@ -7,3 +7,4 @@ from . import donation      # noqa: F401
 from . import dtype         # noqa: F401
 from . import layout        # noqa: F401
 from . import purity        # noqa: F401
+from . import telemetry     # noqa: F401

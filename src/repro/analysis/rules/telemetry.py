@@ -1,0 +1,114 @@
+"""telemetry-purity: observability OFF adds nothing to the hot loop.
+
+The overhead contract of :mod:`repro.observability` is structural, not
+statistical: with the default (disabled) ``ObservabilityConfig``, the
+``integrate()`` front-end must hand the integrators a trace that is
+*equation-for-equation identical* to the raw integrator call — the step
+telemetry threading lives entirely in an enabled-only loop-body wrapper,
+so when it is off the adaptive step loop DCEs back to the original
+program.  This rule checks that statically, two ways:
+
+1. For every ``(name, baseline, candidate)`` pair in
+   ``ctx.telemetry_targets`` it locates the *largest* ``while`` body in
+   each trace (the adaptive step loop — it encloses the Newton
+   iteration) and compares equation counts and the full recursive
+   primitive sequence.  Any drift — one extra ``add``, a reordered
+   ``select_n`` — is a violation naming the primitive-count delta.
+2. Every trace in ``ctx.telemetry_enabled_targets`` (telemetry ON) is
+   scanned for host-callback primitives: recording must go through the
+   in-graph ring buffer, never ``io_callback``/``debug_callback`` —
+   a callback in the hot loop is a device-host sync per step, exactly
+   the overhead the paper's profiler/logger design avoids.
+"""
+from collections import Counter
+
+from repro.analysis import lint
+
+#: primitives that punch through to the host mid-graph — forbidden in
+#: telemetry-enabled integrator traces
+CALLBACK_PRIMS = frozenset({"io_callback", "pure_callback",
+                            "debug_callback", "callback"})
+
+
+def _eqn_count(jaxpr, opaque_names) -> int:
+    return sum(1 for _ in lint.iter_eqns(jaxpr, opaque_names))
+
+
+def _largest_while_body(jaxpr, opaque_names):
+    """The body jaxpr of the while equation with the most (recursive)
+    equations — for the integrators this is the adaptive step loop."""
+    best, best_n = None, -1
+    for eqn in lint.iter_eqns(jaxpr, opaque_names):
+        if eqn.primitive.name != "while":
+            continue
+        body = eqn.params["body_jaxpr"].jaxpr
+        n = _eqn_count(body, opaque_names)
+        if n > best_n:
+            best, best_n = body, n
+    return best
+
+
+def _prim_seq(jaxpr, opaque_names):
+    return [e.primitive.name
+            for e in lint.iter_eqns(jaxpr, opaque_names)]
+
+
+def _delta_msg(base_seq, cand_seq) -> str:
+    delta = Counter(cand_seq) - Counter(base_seq)
+    missing = Counter(base_seq) - Counter(cand_seq)
+    parts = []
+    if delta:
+        parts.append("extra " + ", ".join(
+            f"{p} x{n}" for p, n in sorted(delta.items())))
+    if missing:
+        parts.append("missing " + ", ".join(
+            f"{p} x{n}" for p, n in sorted(missing.items())))
+    if not parts:
+        parts.append("same multiset, different order")
+    return "; ".join(parts)
+
+
+@lint.register(
+    "telemetry-purity",
+    "disabled observability leaves the integrator step-loop jaxpr "
+    "identical to the raw call; enabled telemetry uses no host "
+    "callbacks")
+def check(ctx):
+    out = []
+    for name, base, cand in ctx.telemetry_targets:
+        bb = _largest_while_body(base.jaxpr(), ctx.opaque_names)
+        cb = _largest_while_body(cand.jaxpr(), ctx.opaque_names)
+        if bb is None or cb is None:
+            out.append(lint.Violation(
+                "telemetry-purity", name,
+                f"no while loop found in "
+                f"{'baseline' if bb is None else 'candidate'} trace "
+                f"({base.name if bb is None else cand.name})"))
+            continue
+        base_seq = _prim_seq(bb, ctx.opaque_names)
+        cand_seq = _prim_seq(cb, ctx.opaque_names)
+        if len(base_seq) != len(cand_seq):
+            out.append(lint.Violation(
+                "telemetry-purity", name,
+                f"step-loop op count drifted with observability "
+                f"disabled: {len(base_seq)} eqns (raw) vs "
+                f"{len(cand_seq)} (integrate); "
+                f"{_delta_msg(base_seq, cand_seq)}"))
+        elif base_seq != cand_seq:
+            i = next(j for j, (a, b)
+                     in enumerate(zip(base_seq, cand_seq)) if a != b)
+            out.append(lint.Violation(
+                "telemetry-purity", name,
+                f"step-loop primitive sequence drifted at eqn {i}: "
+                f"{base_seq[i]} (raw) vs {cand_seq[i]} (integrate); "
+                f"{_delta_msg(base_seq, cand_seq)}"))
+    for tgt in ctx.telemetry_enabled_targets:
+        for eqn in lint.iter_eqns(tgt.jaxpr(), ctx.opaque_names):
+            if eqn.primitive.name in CALLBACK_PRIMS:
+                out.append(lint.Violation(
+                    "telemetry-purity", tgt.name,
+                    f"host callback {eqn.primitive.name!r} in a "
+                    f"telemetry-enabled trace — step telemetry must "
+                    f"record through the in-graph ring buffer",
+                    src=lint.eqn_src(eqn)))
+    return out

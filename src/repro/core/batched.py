@@ -292,7 +292,8 @@ def ensemble_dirk_integrate(fi: Callable, jac: Callable, y0: jnp.ndarray,
                             policy: ExecPolicy = XLA_FUSED,
                             newton_iters: int = 4,
                             f_soa: Optional[Callable] = None,
-                            jac_soa: Optional[Callable] = None):
+                            jac_soa: Optional[Callable] = None,
+                            telemetry: Optional[int] = None):
     """Adaptive DIRK over a batch of independent *stiff* systems with the
     batched block-diagonal Newton solve (the paper's submodel solver).
 
@@ -326,7 +327,7 @@ def ensemble_dirk_integrate(fi: Callable, jac: Callable, y0: jnp.ndarray,
         return jnp.any((t < tf * (1 - 1e-12)) & (~stall)) & \
             jnp.all(att < opts.max_steps)
 
-    def body(c):
+    def step(c):
         t, y, h, e1, steps, att, netf, nni, stall = c
         active = (t < tf * (1 - 1e-12)) & (~stall)
         hs = jnp.minimum(h, tf - t)
@@ -400,24 +401,52 @@ def ensemble_dirk_integrate(fi: Callable, jac: Callable, y0: jnp.ndarray,
         eta = jnp.clip(eta, opts.controller.eta_min, opts.controller.eta_max)
         eta = jnp.where(accept | ~active, eta, jnp.minimum(eta, 0.3))
         eta = jnp.where(nl_ok | ~active, eta, opts.eta_cf)
-        t = jnp.where(accept, t + hs, t)
+        t_new = t + hs
+        t = jnp.where(accept, t_new, t)
         y = jnp.where(accept[:, None], y_new, y)
         h_next = jnp.where(active, jnp.clip(hs * eta, 1e-14, None), h)
         stall = stall | (active & (h_next < 1e-13))
         e1 = jnp.where(accept, e, e1)
-        return (t, y, h_next, e1,
-                steps + accept.astype(jnp.int32),
-                att + active.astype(jnp.int32),
-                netf + (active & ~accept).astype(jnp.int32),
-                nni + nni_step, stall)
+        carry = (t, y, h_next, e1,
+                 steps + accept.astype(jnp.int32),
+                 att + active.astype(jnp.int32),
+                 netf + (active & ~accept).astype(jnp.int32),
+                 nni + nni_step, stall)
+        # telemetry record: existing intermediates only (DIRK has no
+        # order ramp and no lsetup trigger — those fields are constants
+        # filled in by the telemetry-enabled wrapper below, so the
+        # disabled trace gains no equations)
+        rec = (t_new, hs, nni_step, err, nl_ok, accept, active)
+        return carry, rec
+
+    def body(c):
+        return step(c)[0]
 
     zero = jnp.zeros((nsys,), jnp.int32)
     c = (t0, y0, h, jnp.ones((nsys,), dtype), zero, zero, zero,
          zero, jnp.zeros((nsys,), bool))
-    t, y, h, e1, steps, att, netf, nni, stall = lax.while_loop(cond, body, c)
-    return y, EnsembleStats(steps=steps, attempts=att, netf=netf,
-                            nni=nni,
-                            success=t >= tf * (1 - 1e-10))
+    ring = None
+    if telemetry is None:
+        c = lax.while_loop(cond, body, c)
+    else:
+        from ..observability.telemetry import ring_init, ring_record
+
+        def tel_body(cr):
+            new_c, (t_new, hs, nni_step, err, nl_ok, accept,
+                    active) = step(cr[0])
+            rec = (t_new, hs, jnp.full((nsys,), p, jnp.int32), nni_step,
+                   err, jnp.zeros((nsys,), bool), nl_ok, accept, active)
+            return new_c, ring_record(cr[1], rec)
+
+        c, ring = lax.while_loop(
+            lambda cr: cond(cr[0]), tel_body,
+            (c, ring_init(telemetry, (nsys,), dtype)))
+    t, y, h, e1, steps, att, netf, nni, stall = c
+    st = EnsembleStats(steps=steps, attempts=att, netf=netf, nni=nni,
+                       success=t >= tf * (1 - 1e-10))
+    if ring is not None:
+        return y, st, ring
+    return y, st
 
 
 # ---------------------------------------------------------------------------
@@ -460,7 +489,8 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
                            f_soa: Optional[Callable] = None,
                            jac_soa: Optional[Callable] = None,
                            session: Optional[SolverSession] = None,
-                           return_session: bool = False):
+                           return_session: bool = False,
+                           telemetry: Optional[int] = None):
     """Adaptive batched BDF (orders 1-``order``) over ``nsys`` independent
     stiff systems — the CVODE submodel pipeline, TPU-native.
 
@@ -576,6 +606,15 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
     lowered, and every lsetup re-evaluates the Jacobian (no ``jok``
     fast path — the batched analytic ``jac`` is one fused elementwise
     pass, cheaper than the bookkeeping).
+
+    **Step telemetry.**  ``telemetry=K`` threads a K-slot
+    :class:`~repro.observability.telemetry.TelemetryRing` through the
+    step-loop carry, recording one ``(t, h, q, newton_iters, err_ratio,
+    lsetup_fired, converged, accepted, active)`` record per step attempt
+    per system; the ring is appended LAST to the return tuple.  Every
+    recorded value is an intermediate the step already computes, so with
+    ``telemetry=None`` (the default) the loop trace is *identical* to a
+    build without this feature (sunlint ``telemetry-purity``).
     """
     from .linsol import BlockDiagGJ
 
@@ -626,7 +665,7 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
         return jnp.any((c.t < tf * (1 - 1e-12)) & (~c.stall)) & \
             jnp.all(c.att < opts.max_steps)
 
-    def body(c):
+    def step(c):
         active = (c.t < tf * (1 - 1e-12)) & (~c.stall)
         hs = jnp.where(active, jnp.minimum(c.h, tf - c.t), c.h)
         nvalid = jnp.minimum(c.steps, QMAX)
@@ -762,7 +801,7 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
         stall = c.stall | (active & (hs * eta < 1e-14))
         ncf = active & ~conv
         ai = active.astype(jnp.int32)
-        return _BdfCarry(
+        carry = _BdfCarry(
             t=t_next, h=h_next, q=q_next, Z=Z_next, e1=e1, e2=e2,
             MJ=MJ, gam_saved=gam_saved, since_jac=since_jac + ai,
             ncf_prev=ncf,
@@ -773,6 +812,14 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
             nsetups=c.nsetups + need.astype(jnp.int32),
             ncfn=c.ncfn + ncf.astype(jnp.int32),
             nli=c.nli + nli_s, nps=c.nps + nps_s, stall=stall)
+        # telemetry record: every element is an intermediate the step
+        # computed anyway — with telemetry off the tuple is discarded
+        # and the traced loop is identical to a build without it
+        rec = (t_new, hs, c.q, nni_s, err, need, conv, accept, active)
+        return carry, rec
+
+    def body(c):
+        return step(c)[0]
 
     # donation requires every carry leaf to be a DISTINCT, internally
     # owned buffer: each counter gets its own zeros, and t is an
@@ -814,18 +861,33 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
         stall=jnp.zeros((nsys,), bool))
     # every carry leaf is freshly allocated above -> donate, so the
     # history window is updated in place across the step loop
-    c = _donated_loop(cond, body, c)
+    ring = None
+    if telemetry is None:
+        c = _donated_loop(cond, body, c)
+    else:
+        from ..observability.telemetry import ring_init, ring_record
+
+        def tel_body(cr):
+            new_c, rec = step(cr[0])
+            return new_c, ring_record(cr[1], rec)
+
+        c, ring = _donated_loop(
+            lambda cr: cond(cr[0]), tel_body,
+            (c, ring_init(telemetry, (nsys,), dtype)))
     st = EnsembleStats(
         steps=c.steps - steps0, attempts=c.att, netf=c.netf, nni=c.nni,
         success=c.t >= tf * (1 - 1e-10), nsetups=c.nsetups, ncfn=c.ncfn,
         nli=jnp.broadcast_to(c.nli, (nsys,)),
         npsolves=jnp.broadcast_to(c.nps, (nsys,)))
+    out = [c.Z[0].T, st]
     if return_session:
         # built from the loop OUTPUTS — fresh buffers, never the
         # donated inputs (sunlint donation-aliasing audits this path)
-        return c.Z[0].T, st, SolverSession(
-            t=c.t, h=c.h, q=c.q, Z=c.Z, e1=c.e1, e2=c.e2, steps=c.steps)
-    return c.Z[0].T, st
+        out.append(SolverSession(
+            t=c.t, h=c.h, q=c.q, Z=c.Z, e1=c.e1, e2=c.e2, steps=c.steps))
+    if ring is not None:
+        out.append(ring)
+    return tuple(out)
 
 
 def ensemble_bdf_integrate_sharded(f: Callable, jac: Callable,

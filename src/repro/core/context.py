@@ -24,6 +24,7 @@ from typing import Any, Optional
 
 import jax
 
+from ..observability.config import ObservabilityConfig
 from .memory import MemoryHelper
 from .policies import ExecPolicy, XLA_FUSED
 
@@ -46,6 +47,41 @@ class Context:
     #: evict counters surface through :meth:`dispatch_report`; None for
     #: contexts that never served traffic.
     trace_cache: Optional[Any] = None
+    #: observability switchboard — everything OFF by default; the
+    #: disabled path is jaxpr-identical to a no-observability build
+    #: (sunlint ``telemetry-purity``).
+    observability: ObservabilityConfig = field(
+        default_factory=ObservabilityConfig)
+    _profiler: Optional[Any] = field(default=None, repr=False,
+                                     compare=False)
+    _logger: Optional[Any] = field(default=None, repr=False,
+                                   compare=False)
+
+    # -- observability singletons (SUNProfiler / SUNLogger analogs) ----------
+
+    @property
+    def profiler(self) -> Any:
+        """The context-owned :class:`~repro.observability.profiler.
+        Profiler`, built lazily from :attr:`observability` (a disabled
+        profiler when ``profile=False`` — regions are shared no-ops)."""
+        if self._profiler is None:
+            from ..observability.profiler import Profiler
+            obs = self.observability
+            self._profiler = Profiler(enabled=obs.profile,
+                                      sync=obs.profile_sync)
+        return self._profiler
+
+    @property
+    def logger(self) -> Any:
+        """The context-owned :class:`~repro.observability.logger.
+        EventLogger` (disabled, dropping every event, when
+        ``log_level`` is None)."""
+        if self._logger is None:
+            from ..observability.logger import EventLogger
+            obs = self.observability
+            self._logger = EventLogger(level=obs.log_level,
+                                       path=obs.log_path)
+        return self._logger
 
     def options(self, **kw) -> Any:
         """Build :class:`~repro.core.arkode.ODEOptions` bound to this

@@ -91,7 +91,7 @@ def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
                   lin_solver: Optional[Callable] = None,
                   dense_jac: bool = False,
                   nonlin_solver: Optional[NewtonSolver] = None,
-                  mem=None):
+                  mem=None, telemetry: Optional[int] = None):
     """Integrate stiff y' = f(t, y) with BDF up to ``order``.
 
     ``lin_solver`` is a :class:`repro.core.linsol.LinearSolver` object
@@ -100,6 +100,11 @@ def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
     :class:`~repro.core.linsol.DenseGJ` if ``dense_jac=True``.
     ``nonlin_solver`` defaults to the ODEOptions Newton tolerances;
     ``mem`` registers the BDF history workspace when given.
+    ``telemetry=K`` threads a K-slot step-telemetry ring through the
+    loop carry (one scalar record per step attempt, every value an
+    already-computed intermediate) and appends it to the return tuple;
+    the default ``None`` leaves the traced loop byte-identical to a
+    build without the feature (sunlint ``telemetry-purity``).
     """
     assert 1 <= order <= QMAX
     if lin_solver is None and dense_jac:
@@ -140,7 +145,7 @@ def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
         return ((c.t < tf * (1 - 1e-12) - 1e-300) &
                 (c.stats.attempts < opts.max_steps) & (~c.give_up))
 
-    def body(c):
+    def step(c):
         h = jnp.minimum(c.h, tf - c.t)
         # number of valid history entries is steps+1 -> max usable degree
         nvalid_m1 = jnp.minimum(c.stats.steps, QMAX)
@@ -205,7 +210,13 @@ def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
             netf=st.netf + ((~accept) & nl_ok).astype(jnp.int32),
             ncfn=st.ncfn + (~nl_ok).astype(jnp.int32),
             last_h=h, t=t_n)
-        return Carry(t_n, h_n, q_next, Z_next, cst, st, give_up)
+        carry = Carry(t_n, h_n, q_next, Z_next, cst, st, give_up)
+        # telemetry record: already-computed intermediates only
+        rec = (t_new, h, c.q, nst.iters, err, nl_ok, accept)
+        return carry, rec
+
+    def body(c):
+        return step(c)[0]
 
     Z0 = jnp.zeros((QMAX + 1, n), dtype=y0_flat.dtype).at[0].set(y0_flat)
     zero = jnp.zeros((), jnp.int32)
@@ -213,8 +224,27 @@ def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
                              h0, t0, jnp.zeros((), bool))
     c = Carry(t0, h0, jnp.ones((), jnp.int32), Z0,
               ctrl.init_state(t0.dtype), stats0, jnp.zeros((), bool))
-    c = lax.while_loop(cond, body, c)
+    ring = None
+    if telemetry is None:
+        c = lax.while_loop(cond, body, c)
+    else:
+        from ..observability.telemetry import ring_init, ring_record
+
+        def tel_body(cr):
+            new_c, (t_new, h, q, iters, err, nl_ok, accept) = step(cr[0])
+            # scalar integrator: there is no lsetup trigger (matrix-free
+            # or per-iteration solve) and no masked-lane concept — the
+            # constants are built here, outside the disabled trace
+            rec = (t_new, h, q, iters, err, jnp.zeros((), bool), nl_ok,
+                   accept, jnp.ones((), bool))
+            return new_c, ring_record(cr[1], rec)
+
+        c, ring = lax.while_loop(
+            lambda cr: cond(cr[0]), tel_body,
+            (c, ring_init(telemetry, (), y0_flat.dtype)))
     stats = c.stats._replace(success=c.t >= tf * (1 - 1e-10))
+    if ring is not None:
+        return unravel(c.Z[0]), stats, ring
     return unravel(c.Z[0]), stats
 
 

@@ -151,10 +151,15 @@ class Solution(NamedTuple):
     session: Optional[Any] = None  # ensemble_bdf warm-start continuation
     #                                state (return_session=True); see
     #                                repro.core.batched.SolverSession
-    timings: Optional[dict] = None  # wall-clock split when produced via
-    #                                 the serving front-end: {"queue_wait",
-    #                                 "compile", "execute"} seconds (None
-    #                                 for direct integrate() calls)
+    timings: Optional[dict] = None  # wall-clock split: {"queue_wait",
+    #                                 "compile", "execute"} via the serving
+    #                                 front-end, or {"lower", "compile",
+    #                                 "execute"} from a timed direct
+    #                                 integrate() call (None otherwise)
+    telemetry: Optional[Any] = None  # StepTelemetry (step-level ring
+    #                                  records) when the context enables
+    #                                  observability telemetry or the call
+    #                                  passes telemetry=K; None otherwise
 
 
 def _split(method: str):
@@ -181,11 +186,20 @@ def _need(problem: IVP, attr: str, method: str):
     return v
 
 
+#: families that accept the step-telemetry ring (the implicit adaptive
+#: loops whose per-step behavior the SUNLogger analog records)
+_TELEMETRY_FAMILIES = ("bdf", "ensemble_dirk", "ensemble_bdf")
+
+_KNOWN_FAMILIES = ("erk", "dirk", "imex", "bdf", "adams",
+                   "ensemble_erk", "ensemble_dirk", "ensemble_bdf")
+
+
 def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
               ctx: Optional[Context] = None,
               opts: Optional[ODEOptions] = None,
               lin_solver=None, nonlin_solver=None,
-              order: int = 5, live=None, **method_kw) -> Solution:
+              order: int = 5, live=None,
+              timed: Optional[bool] = None, **method_kw) -> Solution:
     """Integrate ``problem`` from t0 to tf with ``method``.
 
     ctx           : :class:`~repro.core.context.Context`; a private one
@@ -207,11 +221,23 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
                     LIVE lanes only (:meth:`~repro.core.batched.
                     EnsembleStats.masked`); a ValueError for scalar
                     methods.
+    timed         : True runs the dispatch through the AOT pipeline
+                    (``jit(...).lower().compile()``) and reports the
+                    ``{lower, compile, execute}`` wall-time split in
+                    ``Solution.timings`` — the same keys the serving
+                    path populates, so profiler regions and timings
+                    agree.  Defaults to ``ctx.observability.profile``;
+                    falls back to the untimed path under an outer trace.
     method_kw     : passed through to the underlying integrator
                     (``dense_jac``, ``msbp``, ``m_aa``, ...;
                     ``ensemble_bdf`` additionally takes ``session=`` /
                     ``return_session=`` for warm-start continuation —
-                    the exported session lands in ``Solution.session``).
+                    the exported session lands in ``Solution.session``;
+                    ``telemetry=K`` on the ``bdf``/``ensemble_dirk``/
+                    ``ensemble_bdf`` families threads a K-slot step-
+                    telemetry ring through the loop, surfaced as
+                    ``Solution.telemetry`` — also switched on for all
+                    three via ``ctx.observability.telemetry``).
     """
     ctx = ctx if ctx is not None else Context()
     opts = opts if opts is not None else ctx.options()
@@ -219,11 +245,25 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
     live0 = mem.live_bytes
     labels0 = set(mem.workspaces)
     fam, var = _split(method)
+    if fam not in _KNOWN_FAMILIES:
+        raise ValueError(
+            f"unknown method {method!r}; families: {', '.join(_KNOWN_FAMILIES)} "
+            f"(canonical strings: {', '.join(METHOD_STRINGS)})")
     nli = None
     nsetups = None
     npsolves = None
     npsetups = None
-    session = None
+    obs = ctx.observability
+    # -- step telemetry: explicit telemetry=K wins; the context config
+    # switches it on for every telemetry-capable family
+    tel_cap = method_kw.pop("telemetry", None)
+    if tel_cap is not None and fam not in _TELEMETRY_FAMILIES:
+        raise ValueError(
+            f"method {method!r} takes no telemetry= (step telemetry "
+            f"covers the implicit adaptive families: "
+            f"{', '.join(_TELEMETRY_FAMILIES)})")
+    if tel_cap is None and obs.telemetry and fam in _TELEMETRY_FAMILIES:
+        tel_cap = obs.telemetry_capacity
     if live is not None and not fam.startswith("ensemble"):
         raise ValueError(f"method {method!r} takes no live= mask (dead-"
                          "lane masking applies to ensemble bundles only)")
@@ -245,68 +285,122 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
                                  "ensemble_bdf") else \
              "fixed_point" if fam == "adams" else "none"
 
-    if fam == "erk":
-        f = _need(problem, "f", method)
-        y, st = arkode.erk_integrate(f, problem.y0, t0, tf,
-                                     _erk_table(var), opts, mem=mem)
-        lname = lname or "none"
-    elif fam == "dirk":
-        fi = _need(problem, "f", method)   # full RHS, treated implicitly
-        y, st = arkode.dirk_integrate(fi, problem.y0, t0, tf,
-                                      _dirk_table(var), opts,
-                                      lin_solver=lin_solver,
-                                      nonlin_solver=nonlin_solver, mem=mem)
-        lname = lname or "spgmr"
-    elif fam == "imex":
-        fe = _need(problem, "fe", method)
-        fi = _need(problem, "fi", method)
-        tab = butcher.IMEX_TABLES[var or "ark324"]
-        y, st = arkode.imex_integrate(fe, fi, problem.y0, t0, tf, tab,
-                                      opts, lin_solver=lin_solver,
-                                      nonlin_solver=nonlin_solver, mem=mem)
-        lname = lname or "spgmr"
-    elif fam == "bdf":
-        f = _need(problem, "f", method)    # full RHS, treated implicitly
-        y, st = cvode.bdf_integrate(f, problem.y0, t0, tf, order=order,
-                                    opts=opts, lin_solver=lin_solver,
-                                    nonlin_solver=nonlin_solver, mem=mem,
-                                    **method_kw)
-        lname = lname or ("dense_gj" if method_kw.get("dense_jac")
-                          else "spgmr")
-    elif fam == "adams":
-        f = _need(problem, "f", method)
-        y, st = cvode.adams_integrate(f, problem.y0, t0, tf, opts,
-                                      nonlin_solver=nonlin_solver,
-                                      mem=mem, **method_kw)
-        lname = lname or "none"
-    elif fam == "ensemble_erk":
-        f = _need(problem, "f", method)
-        y, st = batched.ensemble_erk_integrate(f, problem.y0, t0, tf,
-                                               _erk_table(var), opts)
-        lname = lname or "none"
-    elif fam == "ensemble_dirk":
-        f = _need(problem, "f", method)
-        jac = _need(problem, "jac", method)
-        y, st = batched.ensemble_dirk_integrate(
-            f, jac, problem.y0, t0, tf, _dirk_table(var), opts,
-            policy=opts.policy, f_soa=problem.f_soa,
-            jac_soa=problem.jac_soa, **method_kw)
-        lname = lname or "blockdiag_gj"
-    elif fam == "ensemble_bdf":
-        f = _need(problem, "f", method)
-        jac = _need(problem, "jac", method)
-        return_session = bool(method_kw.pop("return_session", False))
-        out = batched.ensemble_bdf_integrate(
-            f, jac, problem.y0, t0, tf, order=order, opts=opts,
-            policy=opts.policy, linear_solver=lin_solver,
-            jac_sparsity=problem.jac_sparsity, mem=mem,
-            f_soa=problem.f_soa, jac_soa=problem.jac_soa,
-            return_session=return_session, **method_kw)
-        if return_session:
-            y, st, session = out
+    return_session = bool(method_kw.pop("return_session", False)) \
+        if fam == "ensemble_bdf" else False
+    if lname is None:
+        if fam in ("dirk", "imex"):
+            lname = "spgmr"
+        elif fam == "bdf":
+            lname = "dense_gj" if method_kw.get("dense_jac") else "spgmr"
+        elif fam in ("ensemble_dirk", "ensemble_bdf"):
+            lname = "blockdiag_gj"
         else:
-            (y, st), session = out, None
-        lname = lname or "blockdiag_gj"
+            lname = "none"
+
+    def _dispatch():
+        """The family dispatch as a nullary closure, so the timed path
+        can push the WHOLE call through jit().lower().compile() and
+        report the AOT stage split.  Returns ``(y, st, session, ring)``
+        (session/ring None when not requested)."""
+        session = None
+        ring = None
+        if fam == "erk":
+            f = _need(problem, "f", method)
+            y, st = arkode.erk_integrate(f, problem.y0, t0, tf,
+                                         _erk_table(var), opts, mem=mem)
+        elif fam == "dirk":
+            fi = _need(problem, "f", method)  # full RHS, treated implicitly
+            y, st = arkode.dirk_integrate(fi, problem.y0, t0, tf,
+                                          _dirk_table(var), opts,
+                                          lin_solver=lin_solver,
+                                          nonlin_solver=nonlin_solver,
+                                          mem=mem)
+        elif fam == "imex":
+            fe = _need(problem, "fe", method)
+            fi = _need(problem, "fi", method)
+            tab = butcher.IMEX_TABLES[var or "ark324"]
+            y, st = arkode.imex_integrate(fe, fi, problem.y0, t0, tf, tab,
+                                          opts, lin_solver=lin_solver,
+                                          nonlin_solver=nonlin_solver,
+                                          mem=mem)
+        elif fam == "bdf":
+            f = _need(problem, "f", method)  # full RHS, treated implicitly
+            out = cvode.bdf_integrate(f, problem.y0, t0, tf, order=order,
+                                      opts=opts, lin_solver=lin_solver,
+                                      nonlin_solver=nonlin_solver, mem=mem,
+                                      telemetry=tel_cap, **method_kw)
+            if tel_cap is not None:
+                y, st, ring = out
+            else:
+                y, st = out
+        elif fam == "adams":
+            f = _need(problem, "f", method)
+            y, st = cvode.adams_integrate(f, problem.y0, t0, tf, opts,
+                                          nonlin_solver=nonlin_solver,
+                                          mem=mem, **method_kw)
+        elif fam == "ensemble_erk":
+            f = _need(problem, "f", method)
+            y, st = batched.ensemble_erk_integrate(f, problem.y0, t0, tf,
+                                                   _erk_table(var), opts)
+        elif fam == "ensemble_dirk":
+            f = _need(problem, "f", method)
+            jac = _need(problem, "jac", method)
+            out = batched.ensemble_dirk_integrate(
+                f, jac, problem.y0, t0, tf, _dirk_table(var), opts,
+                policy=opts.policy, f_soa=problem.f_soa,
+                jac_soa=problem.jac_soa, telemetry=tel_cap, **method_kw)
+            if tel_cap is not None:
+                y, st, ring = out
+            else:
+                y, st = out
+        else:  # ensemble_bdf (families validated above)
+            f = _need(problem, "f", method)
+            jac = _need(problem, "jac", method)
+            out = list(batched.ensemble_bdf_integrate(
+                f, jac, problem.y0, t0, tf, order=order, opts=opts,
+                policy=opts.policy, linear_solver=lin_solver,
+                jac_sparsity=problem.jac_sparsity, mem=mem,
+                f_soa=problem.f_soa, jac_soa=problem.jac_soa,
+                return_session=return_session, telemetry=tel_cap,
+                **method_kw))
+            if tel_cap is not None:
+                ring = out.pop()
+            if return_session:
+                session = out.pop()
+            y, st = out
+        return y, st, session, ring
+
+    # -- timed (AOT) vs plain dispatch.  The timed path reports the
+    # {lower, compile, execute} split (same keys the serving path uses)
+    # and brackets each stage in a profiler region; it cannot run under
+    # an outer trace (block_until_ready on tracers), so it degrades to
+    # the plain path there.
+    profile_on = obs.profile if timed is None else bool(timed)
+    if profile_on and any(
+            isinstance(leaf, jax.core.Tracer) for leaf in
+            jax.tree_util.tree_leaves((problem.y0, t0, tf, method_kw))):
+        profile_on = False
+    timings = None
+    if profile_on:
+        import time as _time
+        prof = ctx.profiler
+        t_a = _time.perf_counter()
+        with prof.region("integrate.lower", method=method):
+            lowered = jax.jit(_dispatch).lower()
+        t_b = _time.perf_counter()
+        with prof.region("integrate.compile", method=method):
+            compiled = lowered.compile()
+        t_c = _time.perf_counter()
+        with prof.region("integrate.execute", method=method):
+            out = jax.block_until_ready(compiled())
+        t_d = _time.perf_counter()
+        timings = {"lower": t_b - t_a, "compile": t_c - t_b,
+                   "execute": t_d - t_c}
+    else:
+        out = _dispatch()
+    y, st, session, ring = out
+
+    if fam == "ensemble_bdf":
         nli = st.nli[0] if st.nli is not None else None
         nsetups = st.nsetups
         npsolves = st.npsolves[0] if st.npsolves is not None else None
@@ -317,11 +411,6 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
         from .linsol import _is_precond_obj
         if _is_precond_obj(getattr(lin_solver, "precond", None)):
             npsetups = jnp.sum(st.nsetups)
-    else:
-        raise ValueError(
-            f"unknown method {method!r}; families: erk, dirk, imex, bdf, "
-            f"adams, ensemble_erk, ensemble_dirk, ensemble_bdf "
-            f"(canonical strings: {', '.join(METHOD_STRINGS)})")
 
     is_ensemble = fam.startswith("ensemble")
     if live is not None:
@@ -345,10 +434,28 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
     for label in set(mem.workspaces) - labels0:
         mem.release(label)
     ctx.record(st, nli)
+    tel_obj = None
+    if ring is not None:
+        if any(isinstance(leaf, jax.core.Tracer)
+               for leaf in jax.tree_util.tree_leaves(ring)):
+            # under an outer trace the host-side wrapper cannot be
+            # built; hand the raw (traced) ring through and let the
+            # caller wrap it once values are concrete
+            tel_obj = ring
+        else:
+            from ..observability.telemetry import StepTelemetry
+            tel_obj = StepTelemetry(
+                ring, live=None if live is None else live)
+    if ctx.logger.enabled_for("INFO"):
+        ctx.logger.info(
+            "integrate.done", method=method, lin_solver=lname or "none",
+            steps=Context._concrete(getattr(st, "steps", None)),
+            nni=Context._concrete(nni),
+            success=Context._concrete(success))
     return Solution(y=y, t=t_reached, success=success, stats=st,
                     method=method, lin_solver=lname or "none",
                     nonlin_solver=nlname, nni=nni, nli=nli,
                     nsetups=nsetups, workspace_bytes=workspace,
                     high_water_bytes=mem.high_water_bytes,
                     npsolves=npsolves, npsetups=npsetups,
-                    session=session)
+                    session=session, timings=timings, telemetry=tel_obj)

@@ -1,0 +1,25 @@
+"""repro.observability — SUNLogger/SUNProfiler analogs for the JAX
+SUNDIALS repro: region profiling, structured event logging, in-loop
+step telemetry, and a Prometheus metrics surface.
+
+Everything is opt-in through :class:`ObservabilityConfig` on
+``Context``; the disabled path is contractually free (jaxpr-identical
+hot loops, checked by sunlint's ``telemetry-purity`` rule).
+"""
+from .config import ObservabilityConfig
+from .logger import LEVELS, EventLogger
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      context_metrics)
+from .profiler import Profiler, Span
+from .telemetry import (RECORD_FIELDS, StepTelemetry, TelemetryRing,
+                        ring_init, ring_record)
+
+__all__ = [
+    "ObservabilityConfig",
+    "EventLogger", "LEVELS",
+    "Profiler", "Span",
+    "TelemetryRing", "ring_init", "ring_record", "StepTelemetry",
+    "RECORD_FIELDS",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "context_metrics",
+]

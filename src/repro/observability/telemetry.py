@@ -1,0 +1,217 @@
+"""In-loop step telemetry: a bounded ring buffer threaded through the
+adaptive step-loop carries — pure, jittable, shardable.
+
+SUNLogger's informational channel records what CVODE's adaptive loop
+actually *did* — step sizes taken, orders used, Newton behavior — which
+is exactly what a jitted ``lax.while_loop`` normally discards.  The
+pure-functional version: the loop carry gains a :class:`TelemetryRing`
+(fixed-capacity per-field buffers + one monotone write index) and every
+step attempt appends one record with ``.at[idx % K].set(...)``.  No
+``io_callback``, no host round-trip — the trace stays pure, donation
+stays legal (all ring leaves are fresh buffers), and the sharded path
+shards the ring alongside the rest of the carry.
+
+One record per *step attempt*, per system::
+
+    (t, h, q, newton_iters, err_ratio, lsetup_fired, converged,
+     accepted, active)
+
+where ``t``/``h`` are the attempt's target time and step size, ``q``
+the BDF order (the method order for DIRK), ``err_ratio`` the weighted
+local-error ratio the accept test compared against 1, and the flags
+record the lsetup trigger, Newton convergence, the accept decision, and
+whether the system was active at all (finished systems are masked
+no-ops and record ``active=False``).
+
+The host-side wrapper :class:`StepTelemetry` (what lands in
+``Solution.telemetry``) reorders the ring chronologically, applies the
+padded-bundle ``live`` mask, and reconciles exactly with the Solution
+aggregates while ``records <= capacity``: ``accepted`` sums to
+``stats.steps``, ``newton_iters`` sums to ``stats.nni``,
+``lsetup_fired`` sums to ``stats.nsetups`` (tested in
+``tests/test_observability.py``).
+
+This module must stay import-light (no ``repro.core`` imports): the
+integrators lazy-import it only on the telemetry-enabled path, which is
+how the disabled path keeps a byte-identical trace.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+#: record field order, as passed to :func:`ring_record`
+RECORD_FIELDS = ("t", "h", "q", "nni", "err", "lsetup", "conv",
+                 "accept", "active")
+
+
+class TelemetryRing(NamedTuple):
+    """The in-carry ring: ``idx`` counts records ever written; each
+    field buffer is ``(capacity,) + tail`` where ``tail`` is ``()`` for
+    scalar integrators and ``(nsys,)`` for ensembles."""
+
+    idx: jnp.ndarray        # () int32, monotone
+    t: jnp.ndarray          # attempt target time
+    h: jnp.ndarray          # attempted step size
+    q: jnp.ndarray          # int32 order
+    nni: jnp.ndarray        # int32 Newton iterations this attempt
+    err: jnp.ndarray        # weighted local-error ratio
+    lsetup: jnp.ndarray     # bool: lsetup trigger fired
+    conv: jnp.ndarray       # bool: Newton converged
+    accept: jnp.ndarray     # bool: step accepted
+    active: jnp.ndarray     # bool: system still integrating
+
+    @property
+    def capacity(self) -> int:
+        return int(self.t.shape[0])
+
+
+def ring_init(capacity: int, tail_shape: Tuple[int, ...],
+              dtype) -> TelemetryRing:
+    """A zeroed ring; every leaf is a fresh buffer (donation-safe)."""
+    K = int(capacity)
+    if K < 1:
+        raise ValueError(f"telemetry capacity must be >= 1; got {K}")
+    shape = (K,) + tuple(tail_shape)
+    return TelemetryRing(
+        idx=jnp.zeros((), jnp.int32),
+        t=jnp.zeros(shape, dtype), h=jnp.zeros(shape, dtype),
+        q=jnp.zeros(shape, jnp.int32), nni=jnp.zeros(shape, jnp.int32),
+        err=jnp.zeros(shape, dtype),
+        lsetup=jnp.zeros(shape, bool), conv=jnp.zeros(shape, bool),
+        accept=jnp.zeros(shape, bool), active=jnp.zeros(shape, bool))
+
+
+def ring_record(ring: TelemetryRing, rec: Sequence) -> TelemetryRing:
+    """Append one record (values ordered per :data:`RECORD_FIELDS`),
+    overwriting the oldest slot once the ring is full."""
+    t, h, q, nni, err, lsetup, conv, accept, active = rec
+    slot = jnp.mod(ring.idx, jnp.int32(ring.capacity))
+
+    def put(buf, v):
+        v = jnp.broadcast_to(jnp.asarray(v, buf.dtype), buf.shape[1:])
+        return buf.at[slot].set(v)
+
+    return TelemetryRing(
+        idx=ring.idx + 1,
+        t=put(ring.t, t), h=put(ring.h, h), q=put(ring.q, q),
+        nni=put(ring.nni, nni), err=put(ring.err, err),
+        lsetup=put(ring.lsetup, lsetup), conv=put(ring.conv, conv),
+        accept=put(ring.accept, accept), active=put(ring.active, active))
+
+
+class StepTelemetry:
+    """Host-side view of a completed integration's ring (what
+    ``Solution.telemetry`` holds).
+
+    Records are reordered chronologically; with a ``live`` mask (padded
+    serving bundles) dead lanes are zeroed out of every count exactly
+    like :meth:`~repro.core.batched.EnsembleStats.masked` zeroes the
+    stats, so telemetry and Solution aggregates reconcile per lane.
+
+    Per-record arrays (``t``, ``h``, ``q``, ``newton_iters``,
+    ``err_ratio``, ``lsetup_fired``, ``converged``, ``accepted``,
+    ``active``) have shape ``(records,)`` for scalar integrators or
+    ``(records, nsys)`` for ensembles.
+    """
+
+    def __init__(self, ring: TelemetryRing, live=None):
+        import numpy as np
+        idx = int(ring.idx)
+        K = ring.capacity
+        self.capacity = K
+        self.total_records = idx
+        self.truncated = idx > K
+        count = min(idx, K)
+        self.records = count
+        if self.truncated:
+            # oldest surviving record lives at slot idx % K
+            order = (np.arange(K) + idx % K) % K
+        else:
+            order = np.arange(count)
+        take = lambda buf: np.asarray(buf)[order]
+        self.t = take(ring.t)
+        self.h = take(ring.h)
+        self.q = take(ring.q)
+        self.newton_iters = take(ring.nni)
+        self.err_ratio = take(ring.err)
+        self.lsetup_fired = take(ring.lsetup)
+        self.converged = take(ring.conv)
+        self.accepted = take(ring.accept)
+        self.active = take(ring.active)
+        self.live = None if live is None else np.asarray(live, bool)
+        if self.live is not None and self.t.ndim == 2:
+            dead = ~self.live[None, :]
+            for name in ("newton_iters",):
+                getattr(self, name)[np.broadcast_to(
+                    dead, getattr(self, name).shape)] = 0
+            for name in ("lsetup_fired", "accepted", "active",
+                         "converged"):
+                getattr(self, name)[np.broadcast_to(
+                    dead, getattr(self, name).shape)] = False
+
+    # -- reconciliation surface (axis 0 = records) -------------------------
+
+    def steps(self):
+        """Accepted steps per system (reconciles with ``stats.steps``
+        while the ring was not truncated)."""
+        return self.accepted.sum(axis=0)
+
+    def attempts(self):
+        return self.active.sum(axis=0)
+
+    def newton_iters_total(self):
+        return self.newton_iters.sum(axis=0)
+
+    def lsetups(self):
+        return self.lsetup_fired.sum(axis=0)
+
+    def summary(self) -> dict:
+        """The SUNLogger-style roll-up: step-size histogram (log10 h
+        over accepted steps), order occupancy, and Newton-failure hot
+        spots (times where active systems failed to converge)."""
+        import numpy as np
+        acc = self.accepted
+        h_acc = self.h[acc]
+        q_acc = self.q[acc]
+        out = {
+            "records": self.records,
+            "capacity": self.capacity,
+            "truncated": self.truncated,
+            "steps": int(acc.sum()),
+            "attempts": int(self.active.sum()),
+            "newton_iters": int(self.newton_iters.sum()),
+            "lsetups": int(self.lsetup_fired.sum()),
+        }
+        if h_acc.size:
+            logh = np.log10(np.maximum(h_acc, 1e-300))
+            lo, hi = float(logh.min()), float(logh.max())
+            if hi - lo < 1e-12:
+                hi = lo + 1e-12
+            counts, edges = np.histogram(logh, bins=12, range=(lo, hi))
+            out["h_hist_log10"] = {"edges": edges.tolist(),
+                                   "counts": counts.tolist()}
+            occ = {int(qv): int(n) for qv, n in
+                   zip(*np.unique(q_acc, return_counts=True))}
+            total = sum(occ.values())
+            out["order_occupancy"] = {q: n / total
+                                      for q, n in occ.items()}
+        else:
+            out["h_hist_log10"] = {"edges": [], "counts": []}
+            out["order_occupancy"] = {}
+        fail = self.active & ~self.converged
+        out["newton_failures"] = int(fail.sum())
+        if fail.any():
+            t_fail = np.unique(np.round(self.t[fail], 12))
+            out["newton_failure_times"] = t_fail[:16].tolist()
+        else:
+            out["newton_failure_times"] = []
+        return out
+
+    def __repr__(self) -> str:
+        s = self.summary()
+        return (f"StepTelemetry(records={s['records']}, "
+                f"steps={s['steps']}, attempts={s['attempts']}, "
+                f"newton_iters={s['newton_iters']}, "
+                f"truncated={self.truncated})")

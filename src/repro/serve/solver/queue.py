@@ -183,7 +183,8 @@ class AdmissionQueue:
                  max_wait: float = 2e-3,
                  max_depth: int = 4096,
                  dtype: str = "float64",
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 on_event: Optional[Callable[[str, dict], None]] = None):
         if not bucket_sizes:
             raise ValueError("need at least one bucket size")
         self.bucket_sizes = tuple(sorted(set(int(s) for s in bucket_sizes)))
@@ -200,6 +201,14 @@ class AdmissionQueue:
         self._buckets: Dict[BucketKey, _Bucket] = {}
         self._depth = 0
         self.rejected = 0
+        #: observability hook — called as ``on_event(name, fields)`` for
+        #: ``queue.admit`` / ``queue.reject`` / ``queue.flush`` (the
+        #: server forwards these into its EventLogger)
+        self.on_event = on_event
+
+    def _emit(self, event: str, **fields) -> None:
+        if self.on_event is not None:
+            self.on_event(event, fields)
 
     @property
     def depth(self) -> int:
@@ -221,6 +230,8 @@ class AdmissionQueue:
         now = self.clock() if now is None else now
         if self._depth >= self.max_depth:
             self.rejected += 1
+            self._emit("queue.reject", depth=self._depth,
+                       retry_after=2.0 * self.max_wait)
             # drain-rate hint: one max_wait flushes every due bucket,
             # so a full batch's worth of room opens within ~2 windows
             raise RetryAfter(2.0 * self.max_wait, self._depth,
@@ -234,6 +245,7 @@ class AdmissionQueue:
             bucket.oldest = now
         bucket.requests.append(req)
         self._depth += 1
+        self._emit("queue.admit", family=req.family, depth=self._depth)
 
     def poll(self, now: Optional[float] = None,
              flush_all: bool = False) -> List[Bundle]:
@@ -261,4 +273,9 @@ class AdmissionQueue:
                 # remaining requests are in arrival order; the clock
                 # for the next stale-flush starts at the new head
                 bucket.oldest = bucket.requests[0].arrival
+        if self.on_event is not None:
+            for b in bundles:
+                self._emit("queue.flush", family=b.key.family,
+                           live=b.live, nsys=b.nsys,
+                           wait_s=now - min(r.arrival for r in b.requests))
         return bundles

@@ -75,6 +75,69 @@ class _CompiledBundle:
     #                    workspace bytes) reused for every hit
 
 
+#: request-latency histogram bucket upper bounds (seconds) — the
+#: Prometheus exposition adds the implicit +Inf bucket
+_LATENCY_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
+                    0.25, 0.5, 1.0, 2.5, 5.0)
+
+
+class _LatencyRing:
+    """Fixed-size latency sample window + lifetime histogram totals.
+
+    Replaces the grow-then-truncate list: observations land in a
+    preallocated ring (O(1) per sample, no 100k-entry spike before the
+    truncate) and percentile reads copy out at most ``size`` samples.
+    The Prometheus accumulators (per-bucket counts / sum / count) are
+    LIFETIME totals and survive :meth:`clear` — scrapes stay monotone
+    even when a benchmark drains the percentile window per load point.
+    """
+
+    def __init__(self, size: int = 8192,
+                 buckets: Tuple[float, ...] = _LATENCY_BUCKETS):
+        self.size = int(size)
+        if self.size < 1:
+            raise ValueError("latency window must hold >= 1 sample")
+        self.buckets = tuple(buckets)
+        self._slots = [0.0] * self.size
+        self._pos = 0
+        self._n = 0
+        self.total = 0                  # lifetime observation count
+        self.sum_s = 0.0                # lifetime latency sum
+        # non-cumulative per-bucket counts, last slot = +Inf overflow
+        self.bucket_counts = [0] * (len(self.buckets) + 1)
+
+    def observe(self, v: float) -> None:
+        self._slots[self._pos] = v
+        self._pos = (self._pos + 1) % self.size
+        self._n = min(self._n + 1, self.size)
+        self.total += 1
+        self.sum_s += v
+        for i, ub in enumerate(self.buckets):
+            if v <= ub:
+                self.bucket_counts[i] += 1
+                break
+        else:
+            self.bucket_counts[-1] += 1
+
+    @property
+    def count(self) -> int:
+        """Samples currently in the percentile window."""
+        return self._n
+
+    def window(self) -> List[float]:
+        """The window's samples, oldest first."""
+        if self._n < self.size:
+            return self._slots[:self._n]
+        return self._slots[self._pos:] + self._slots[:self._pos]
+
+    def clear(self) -> List[float]:
+        """Return the window and reset it (lifetime totals persist)."""
+        out = self.window()
+        self._pos = 0
+        self._n = 0
+        return out
+
+
 class SolverServer:
     """Dynamic-batching IVP server over the ensemble solver stack."""
 
@@ -86,7 +149,8 @@ class SolverServer:
                  max_wait: float = 2e-3, max_depth: int = 4096,
                  cache_size: int = 32, max_steps: int = 100_000,
                  warmup_bundles: int = 16,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 latency_window: int = 8192):
         if isinstance(families, ProblemFamily):
             families = [families]
         self.families: Dict[str, ProblemFamily] = {
@@ -107,7 +171,8 @@ class SolverServer:
                                     max_batch=max_batch,
                                     max_wait=max_wait,
                                     max_depth=max_depth,
-                                    dtype=self.dtype, clock=clock)
+                                    dtype=self.dtype, clock=clock,
+                                    on_event=self._queue_event)
         self.cache = TraceCache(maxsize=cache_size)
         # surface the cache counters through ctx.dispatch_report()
         self.ctx.trace_cache = self.cache
@@ -117,12 +182,25 @@ class SolverServer:
         self._wake = threading.Event()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        self._latencies: List[float] = []
+        self._lat = _LatencyRing(latency_window)
         self._requests = 0
         self._bundles = 0
         self._live_lanes = 0
         self._padded_lanes = 0
         self._steady_misses = 0
+        # per-bucket throughput: (family, n, nsys) -> accumulators
+        self._bucket_stats: Dict[Tuple[str, int, int], dict] = {}
+
+    def _queue_event(self, event: str, fields: dict) -> None:
+        """AdmissionQueue observability hook -> the context logger
+        (rejects are WARNING — they shed client load; the rest DEBUG)."""
+        log = self.ctx.logger
+        if not log.enabled:
+            return
+        if event == "queue.reject":
+            log.warning(event, **fields)
+        else:
+            log.debug(event, **fields)
 
     # ------------------------------------------------------------------
     # submission (async facade surface)
@@ -169,8 +247,12 @@ class SolverServer:
         The deterministic core — tests drive it directly."""
         with self._lock:
             bundles = self.queue.poll(now, flush_all=flush_all)
-        for bundle in bundles:
-            self._execute(bundle)
+        if not bundles:
+            return 0
+        with self.ctx.profiler.region("serve.pump", cat="serve",
+                                      sync=False, bundles=len(bundles)):
+            for bundle in bundles:
+                self._execute(bundle)
         return len(bundles)
 
     def drain(self) -> int:
@@ -288,14 +370,25 @@ class SolverServer:
             return sol.y, sol.stats, sol.session
 
         t0 = time.perf_counter()
-        compiled = jax.jit(run).lower(sess, tfa, params).compile()
+        with self.ctx.profiler.region("serve.compile", cat="serve",
+                                      family=key.bucket.family,
+                                      nsys=key.nsys):
+            compiled = jax.jit(run).lower(sess, tfa, params).compile()
         return _CompiledBundle(fn=compiled,
                                compile_s=time.perf_counter() - t0,
                                meta=dict(meta))
 
     def _execute(self, bundle: Bundle) -> None:
+        prof = self.ctx.profiler
+        if prof.enabled:
+            # the queue stamps arrival/flushed on the SERVER clock
+            # (time.monotonic by default); capture both clocks at one
+            # instant so queue events can be mapped onto the profiler
+            # timebase and merged into the Chrome trace
+            p_anchor, s_anchor = prof.now(), self.clock()
         try:
-            sess, tfa, params = self._assemble(bundle)
+            with prof.region("serve.assemble", cat="serve", sync=False):
+                sess, tfa, params = self._assemble(bundle)
             key = TraceKey(bucket=bundle.key, nsys=bundle.nsys,
                            policy=self.ctx.policy)
             entry, hit = self.cache.get(
@@ -306,7 +399,8 @@ class SolverServer:
             t0 = time.perf_counter()
             y, st, sess_out = entry.fn(sess, tfa, params)
             jax.block_until_ready(y)
-            exec_s = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            exec_s = t1 - t0
         except Exception as exc:       # resolve, don't strand, futures
             for req in bundle.requests:
                 if not req.future.set_running_or_notify_cancel():
@@ -314,15 +408,41 @@ class SolverServer:
                 req.future.set_exception(exc)
             raise
         done = self.clock()
+        bkey = (bundle.key.family, bundle.key.n, bundle.nsys)
         with self._mlock:
             self._bundles += 1
             self._requests += bundle.live
             self._live_lanes += bundle.live
             self._padded_lanes += bundle.nsys
             for req in bundle.requests:
-                self._latencies.append(done - req.arrival)
-            if len(self._latencies) > 100_000:
-                del self._latencies[:-100_000]
+                self._lat.observe(done - req.arrival)
+            row = self._bucket_stats.setdefault(
+                bkey, {"requests": 0, "bundles": 0, "exec_s": 0.0})
+            row["requests"] += bundle.live
+            row["bundles"] += 1
+            row["exec_s"] += exec_s
+        if prof.enabled:
+            # per-bundle serving timeline (arrival -> flush -> compile
+            # -> execute), mapped onto the profiler timebase; profiler
+            # clock defaults to perf_counter, the execute stamps' base
+            pmap = lambda ts: p_anchor + (ts - s_anchor)
+            wait0 = pmap(min(r.arrival for r in bundle.requests))
+            flush = pmap(bundle.flushed)
+            args = {"family": bundle.key.family, "live": bundle.live,
+                    "nsys": bundle.nsys}
+            prof.add_span("serve.bundle.queue_wait", wait0, flush,
+                          cat="serve", args=args)
+            prof.add_span("serve.bundle.compile", flush,
+                          flush + (0.0 if hit else entry.compile_s),
+                          cat="serve", args={**args, "cached": hit})
+            prof.add_span("serve.bundle.execute", t0, t1,
+                          cat="serve", args=args)
+        log = self.ctx.logger
+        if log.enabled_for("INFO"):
+            log.info("serve.bundle", family=bundle.key.family,
+                     live=bundle.live, nsys=bundle.nsys, cached=hit,
+                     compile_s=0.0 if hit else entry.compile_s,
+                     exec_s=exec_s)
         for i, req in enumerate(bundle.requests):
             sol = self._lane_solution(i, req, bundle, y, st, sess_out,
                                       entry, hit, exec_s)
@@ -369,17 +489,20 @@ class SolverServer:
 
     def take_latencies(self) -> List[float]:
         """Return and clear the request-latency window (seconds) — lets
-        a benchmark attribute percentiles to one load point."""
+        a benchmark attribute percentiles to one load point.  The
+        lifetime histogram accumulators behind ``metrics_prometheus()``
+        are unaffected (scrapes stay monotone)."""
         with self._mlock:
-            out, self._latencies = self._latencies, []
-        return out
+            return self._lat.clear()
 
     def metrics(self) -> dict:
         """Serving health: queue depth, occupancy (live vs padded
-        lanes), latency percentiles, trace-cache counters, and the
+        lanes), latency percentiles over the bounded sample window
+        (``latency_samples`` of ``latency_observed`` lifetime
+        observations), trace-cache counters, and the
         zero-steady-state-recompiles audit (``steady_misses``)."""
         with self._mlock:
-            lat = sorted(self._latencies)
+            lat = sorted(self._lat.window())
             live, padded = self._live_lanes, self._padded_lanes
             out = {
                 "queue_depth": self.queue.depth,
@@ -391,8 +514,72 @@ class SolverServer:
                 "occupancy": (live / padded) if padded else 0.0,
                 "latency_p50_s": self._quantile(lat, 0.50),
                 "latency_p99_s": self._quantile(lat, 0.99),
+                "latency_samples": self._lat.count,
+                "latency_observed": self._lat.total,
                 "steady_misses": self._steady_misses,
                 "warmup_bundles": self.warmup_bundles,
                 "trace_cache": self.cache.stats(),
             }
         return out
+
+    def metrics_prometheus(self) -> str:
+        """The same serving health as :meth:`metrics`, rendered in
+        Prometheus text exposition format, plus the context counters and
+        autotune/trace-cache report (one scrape covers the serving tier
+        AND the solver core).  Metric names: ``repro_serve_*`` for the
+        serving tier (per-bucket throughput labeled ``{family, n,
+        nsys}``), ``repro_context_*`` / ``repro_trace_cache_*`` /
+        ``repro_autotune_*`` from :func:`repro.observability.metrics.
+        context_metrics`."""
+        from repro.observability.metrics import (MetricsRegistry,
+                                                 context_metrics)
+        reg = MetricsRegistry()
+        m = self.metrics()
+        reg.counter("repro_serve_requests",
+                    "Requests served").set_cumulative(m["requests"])
+        reg.counter("repro_serve_bundles",
+                    "Bundles executed").set_cumulative(m["bundles"])
+        reg.counter("repro_serve_rejected",
+                    "Requests rejected at max queue depth"
+                    ).set_cumulative(m["rejected"])
+        reg.counter("repro_serve_steady_misses",
+                    "Trace-cache misses after warmup"
+                    ).set_cumulative(m["steady_misses"])
+        reg.counter("repro_serve_live_lanes",
+                    "Live lanes executed").set_cumulative(m["live_lanes"])
+        reg.counter("repro_serve_padded_lanes",
+                    "Total lanes executed incl. padding"
+                    ).set_cumulative(m["padded_lanes"])
+        reg.gauge("repro_serve_queue_depth",
+                  "Queued, unflushed requests").set(m["queue_depth"])
+        reg.gauge("repro_serve_occupancy",
+                  "Live / padded lane ratio").set(m["occupancy"])
+        reg.gauge("repro_serve_latency_p50_seconds",
+                  "Window median request latency"
+                  ).set(m["latency_p50_s"])
+        reg.gauge("repro_serve_latency_p99_seconds",
+                  "Window p99 request latency").set(m["latency_p99_s"])
+        reg.gauge("repro_serve_latency_samples",
+                  "Samples in the percentile window"
+                  ).set(m["latency_samples"])
+        with self._mlock:
+            hist = reg.histogram("repro_serve_latency_seconds",
+                                 "Request latency (admission to result)",
+                                 buckets=self._lat.buckets)
+            hist.set_counts(list(self._lat.bucket_counts),
+                            self._lat.sum_s, self._lat.total)
+            bucket_rows = {k: dict(v)
+                           for k, v in self._bucket_stats.items()}
+        breq = reg.counter("repro_serve_bucket_requests",
+                           "Requests served per shape bucket")
+        bbun = reg.counter("repro_serve_bucket_bundles",
+                           "Bundles executed per shape bucket")
+        bexe = reg.counter("repro_serve_bucket_exec_seconds",
+                           "Execute wall-clock per shape bucket")
+        for (family, n, nsys), row in sorted(bucket_rows.items()):
+            labels = {"family": family, "n": str(n), "nsys": str(nsys)}
+            breq.set_cumulative(row["requests"], **labels)
+            bbun.set_cumulative(row["bundles"], **labels)
+            bexe.set_cumulative(row["exec_s"], **labels)
+        context_metrics(reg, self.ctx)
+        return reg.render()

@@ -145,6 +145,47 @@ def _setup_tracer_leak(ctx):
     ctx.purity_targets = [_tracer_leak_target()]
 
 
+# --- telemetry-purity ------------------------------------------------------
+# A "disabled observability" candidate whose step loop carries one more
+# equation than the raw baseline — the exact drift the zero-overhead
+# contract forbids (e.g. a telemetry counter that failed to DCE).
+
+
+def _leaky_telemetry_pair():
+    def base_thunk():
+        def body(c):
+            z, it = c
+            return z * 0.5 + 1.0, it + 1
+
+        def run(z):
+            return lax.while_loop(lambda c: c[1] < jnp.int32(3),
+                                  body, (z, jnp.int32(0)))[0]
+
+        return jax.make_jaxpr(run)(jnp.ones(8)).jaxpr
+
+    def cand_thunk():
+        def body(c):
+            z, it = c
+            z = z * 0.5 + 1.0
+            z = z + jnp.float64(0.0)   # the leaked telemetry op
+            return z, it + 1
+
+        def run(z):
+            return lax.while_loop(lambda c: c[1] < jnp.int32(3),
+                                  body, (z, jnp.int32(0)))[0]
+
+        return jax.make_jaxpr(run)(jnp.ones(8)).jaxpr
+
+    return ("bad:leaky_telemetry",
+            lint.TraceTarget("bad:leaky_telemetry[raw]", base_thunk),
+            lint.TraceTarget("bad:leaky_telemetry[obs-off]", cand_thunk))
+
+
+def _setup_leaky_telemetry(ctx):
+    ctx.telemetry_targets = [_leaky_telemetry_pair()]
+    ctx.telemetry_enabled_targets = []
+
+
 FIXTURES = {
     "hidden_transpose": ("hot-loop-layout", _setup_hidden_transpose),
     "aliased_donation": ("donation-aliasing", _setup_aliased_donation),
@@ -152,4 +193,5 @@ FIXTURES = {
     "oversize_tile": ("kernel-contract", _setup_oversize_tile),
     "orphan_op": ("table-coherence", _setup_orphan_op),
     "tracer_leak": ("trace-purity", _setup_tracer_leak),
+    "leaky_telemetry": ("telemetry-purity", _setup_leaky_telemetry),
 }
