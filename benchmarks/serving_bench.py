@@ -192,6 +192,12 @@ def _validate_prometheus(text: str, m: dict) -> None:
             f"{m['latency_observed']}") in text
     assert 'repro_serve_latency_seconds_bucket' in text
     assert 'le="+Inf"' in text
+    # failure-path counters reconcile with metrics() (zero on a clean
+    # run; the chaos suite exercises the nonzero side)
+    assert (f"repro_serve_degraded_total {m['degraded']}") in text
+    for reason, count in m["failures"].items():
+        assert (f'repro_serve_failures_total{{reason="{reason}"}} '
+                f"{count}") in text
     # the Context counters ride the same scrape
     assert "repro_context_integrations_total" in text
 

@@ -1,6 +1,7 @@
 """sunlint rules — importing this package registers every rule with
 :data:`repro.analysis.lint.RULES` (each module calls
 ``lint.register`` at import time)."""
+from . import bounded       # noqa: F401
 from . import coherence     # noqa: F401
 from . import contract      # noqa: F401
 from . import donation      # noqa: F401

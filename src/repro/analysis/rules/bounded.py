@@ -1,0 +1,55 @@
+"""bounded-loops: every hot-loop while terminates on a step ceiling.
+
+The fault-containment contract (PR 10) keeps failure *in data*: a
+diverging lane is quarantined by its retcode while the shared
+``while_loop`` keeps running for the healthy lanes.  That only
+terminates if every loop condition, besides its value-dependent
+predicates (residual norms, ``t < tf``, ``retcode == 0``), also
+compares an integer *counter* against a ceiling (``att <= max_steps``,
+Newton's ``iter < maxcor``) — a purely float-conditioned loop spins
+forever the moment a lane's values go NaN (NaN comparisons are false,
+but a ``~converged`` style predicate negates them back to true).
+
+This rule checks the trace: every ``while`` equation reachable in a
+hot-loop target jaxpr (at any non-opaque depth) must carry at least one
+``lt``/``le``/``gt``/``ge`` comparison over integer operands in its
+``cond_jaxpr``.  Equality tests do not count — ``retcode == 0`` or
+``phase != DONE`` can stay true forever; only an ordered comparison on
+a monotone integer counter bounds the trip count.
+"""
+import jax.numpy as jnp
+
+from repro.analysis import lint
+
+_ORDERED_CMPS = ("lt", "le", "gt", "ge")
+
+
+def _has_integer_guard(cond_jaxpr, opaque_names) -> bool:
+    for eqn in lint.iter_eqns(cond_jaxpr, opaque_names):
+        if eqn.primitive.name not in _ORDERED_CMPS:
+            continue
+        if all(jnp.issubdtype(v.aval.dtype, jnp.integer)
+               for v in eqn.invars):
+            return True
+    return False
+
+
+@lint.register(
+    "bounded-loops",
+    "every hot-loop while condition includes an integer step ceiling "
+    "(ordered comparison on integer operands)")
+def check(ctx):
+    out = []
+    for tgt in ctx.hot_loop_targets:
+        for eqn in lint.iter_eqns(tgt.jaxpr(), ctx.opaque_names):
+            if eqn.primitive.name != "while":
+                continue
+            cond = eqn.params["cond_jaxpr"].jaxpr
+            if not _has_integer_guard(cond, ctx.opaque_names):
+                out.append(lint.Violation(
+                    "bounded-loops", tgt.name,
+                    "while_loop condition has no integer step ceiling "
+                    "(no lt/le/gt/ge over integer operands) — a NaN "
+                    "lane can spin it forever",
+                    src=lint.eqn_src(eqn)))
+    return out

@@ -44,6 +44,8 @@ class IntegratorStats(NamedTuple):
     last_h: jnp.ndarray
     t: jnp.ndarray
     success: jnp.ndarray
+    retcode: Optional[jnp.ndarray] = None   # scalar int32 CV_*-style
+    # flag (repro.core.status); None for integrators not yet threaded
 
 
 class ODEOptions(NamedTuple):

@@ -57,6 +57,7 @@ from jax import lax
 from . import controller as ctrl
 from . import cvode as _cv
 from . import dispatch as dv
+from . import status
 from .arkode import ODEOptions
 from .butcher import ButcherTable
 from .policies import ExecPolicy, XLA_FUSED
@@ -104,6 +105,9 @@ class EnsembleStats(NamedTuple):
     # a solver-level count broadcast per system (direct solvers report 0)
     npsolves: Optional[jnp.ndarray] = None  # (nsys,) preconditioner solves,
     # broadcast like nli (0 without a Preconditioner object)
+    retcodes: Optional[jnp.ndarray] = None  # (nsys,) int32 CV_*-style flag
+    # per system (repro.core.status; 0 == SUCCESS, negative == quarantined)
+    ok: Optional[jnp.ndarray] = None        # (nsys,) bool, retcodes == 0
 
     def masked(self, live) -> "EnsembleStats":
         """Stats restricted to the ``live`` lanes of a padded bundle.
@@ -126,7 +130,9 @@ class EnsembleStats(NamedTuple):
             steps=z(self.steps), attempts=z(self.attempts),
             netf=z(self.netf), nni=z(self.nni),
             success=self.success | ~live,
-            nsetups=z(self.nsetups), ncfn=z(self.ncfn))
+            nsetups=z(self.nsetups), ncfn=z(self.ncfn),
+            retcodes=z(self.retcodes),      # dead lane -> SUCCESS (0)
+            ok=None if self.ok is None else self.ok | ~live)
 
 
 class SolverSession(NamedTuple):
@@ -323,13 +329,15 @@ def ensemble_dirk_integrate(fi: Callable, jac: Callable, y0: jnp.ndarray,
     unit_w = jnp.ones((n, nsys), dtype)      # unweighted per-system RMS
 
     def cond(c):
-        t, y, h, e1, steps, att, netf, nni, stall = c
-        return jnp.any((t < tf * (1 - 1e-12)) & (~stall)) & \
-            jnp.all(att < opts.max_steps)
+        t, y, h, e1, steps, att, netf, nni, rc, ncf_cur, nef_cur = c
+        # integer att ceiling kept in the cond (sunlint bounded-loops);
+        # it never binds — lanes quarantine with TOO_MUCH_WORK first
+        return jnp.any((t < tf * (1 - 1e-12)) & (rc == 0)) & \
+            jnp.all(att <= opts.max_steps)
 
     def step(c):
-        t, y, h, e1, steps, att, netf, nni, stall = c
-        active = (t < tf * (1 - 1e-12)) & (~stall)
+        t, y, h, e1, steps, att, netf, nni, rc, ncf_cur, nef_cur = c
+        active = (t < tf * (1 - 1e-12)) & (rc == 0)
         hs = jnp.minimum(h, tf - t)
         ks = []
         nl_ok = jnp.ones((nsys,), bool)
@@ -390,9 +398,9 @@ def ensemble_dirk_integrate(fi: Callable, jac: Callable, y0: jnp.ndarray,
                     y_err = y_err + (hs * (bi - bh))[:, None] * k
         w = 1.0 / (opts.rtol * jnp.abs(y) + opts.atol)
         # dispatched per-system WRMS (.T views fuse on the jnp backend)
-        err = dv.wrms_soa(y_err.T, w.T, policy)
-        bad = ~jnp.isfinite(err) | ~nl_ok
-        err = jnp.where(bad, 2.0, err)
+        err_raw = dv.wrms_soa(y_err.T, w.T, policy)
+        bad = ~jnp.isfinite(err_raw) | ~nl_ok
+        err = jnp.where(bad, 2.0, err_raw)
         accept = (err <= 1.0) & ~bad & active
         e = jnp.maximum(err, 1e-10)
         eprev = jnp.maximum(e1, 1e-10)
@@ -405,13 +413,32 @@ def ensemble_dirk_integrate(fi: Callable, jac: Callable, y0: jnp.ndarray,
         t = jnp.where(accept, t_new, t)
         y = jnp.where(accept[:, None], y_new, y)
         h_next = jnp.where(active, jnp.clip(hs * eta, 1e-14, None), h)
-        stall = stall | (active & (h_next < 1e-13))
         e1 = jnp.where(accept, e, e1)
+        # per-lane retcode escalation, same contract as the BDF loop:
+        # decided only for active lanes, sticky once nonzero
+        ncf = active & ~nl_ok
+        etf = active & nl_ok & ~accept & jnp.isfinite(err_raw)
+        ncf_cur = jnp.where(accept, 0, ncf_cur + ncf.astype(jnp.int32))
+        nef_cur = jnp.where(accept, 0, nef_cur + etf.astype(jnp.int32))
+        # relative underflow check (t + h == t), as in the BDF loop
+        hfail = active & (t + h_next == t)
+        nanstep = active & nl_ok & ~jnp.isfinite(err_raw)
+        att_next = att + active.astype(jnp.int32)
+        unfinished = t < tf * (1 - 1e-12)
+        rc = jnp.where(active & unfinished & (att_next >= opts.max_steps),
+                       status.TOO_MUCH_WORK, rc)
+        rc = jnp.where(active & ((nef_cur >= status.MXNEF) |
+                                 (hfail & nl_ok)),
+                       status.ERR_FAILURE, rc)
+        rc = jnp.where(active & ((ncf_cur >= status.MXNCF) |
+                                 (hfail & ~nl_ok)),
+                       status.CONV_FAILURE, rc)
+        rc = jnp.where(nanstep, status.RHSFUNC_FAIL, rc)
         carry = (t, y, h_next, e1,
                  steps + accept.astype(jnp.int32),
-                 att + active.astype(jnp.int32),
+                 att_next,
                  netf + (active & ~accept).astype(jnp.int32),
-                 nni + nni_step, stall)
+                 nni + nni_step, rc, ncf_cur, nef_cur)
         # telemetry record: existing intermediates only (DIRK has no
         # order ramp and no lsetup trigger — those fields are constants
         # filled in by the telemetry-enabled wrapper below, so the
@@ -424,7 +451,7 @@ def ensemble_dirk_integrate(fi: Callable, jac: Callable, y0: jnp.ndarray,
 
     zero = jnp.zeros((nsys,), jnp.int32)
     c = (t0, y0, h, jnp.ones((nsys,), dtype), zero, zero, zero,
-         zero, jnp.zeros((nsys,), bool))
+         zero, zero, zero, zero)
     ring = None
     if telemetry is None:
         c = lax.while_loop(cond, body, c)
@@ -441,9 +468,12 @@ def ensemble_dirk_integrate(fi: Callable, jac: Callable, y0: jnp.ndarray,
         c, ring = lax.while_loop(
             lambda cr: cond(cr[0]), tel_body,
             (c, ring_init(telemetry, (nsys,), dtype)))
-    t, y, h, e1, steps, att, netf, nni, stall = c
+    t, y, h, e1, steps, att, netf, nni, rc, _, _ = c
+    retcodes = jnp.where((rc == 0) & (t < tf * (1 - 1e-10)),
+                         status.TOO_MUCH_WORK, rc)
     st = EnsembleStats(steps=steps, attempts=att, netf=netf, nni=nni,
-                       success=t >= tf * (1 - 1e-10))
+                       success=t >= tf * (1 - 1e-10),
+                       retcodes=retcodes, ok=retcodes == 0)
     if ring is not None:
         return y, st, ring
     return y, st
@@ -474,7 +504,12 @@ class _BdfCarry(NamedTuple):
     ncfn: jnp.ndarray
     nli: jnp.ndarray          # scalar: inner linear iterations (Krylov)
     nps: jnp.ndarray          # scalar: preconditioner applications
-    stall: jnp.ndarray
+    retcode: jnp.ndarray      # (nsys,) int32 CV_*-style status lane;
+    #                           nonzero == quarantined (repro.core.status)
+    ncf_cur: jnp.ndarray      # (nsys,) consecutive Newton conv failures
+    #                           on the CURRENT step (reset on accept)
+    nef_cur: jnp.ndarray      # (nsys,) consecutive error-test failures
+    #                           on the CURRENT step (reset on accept)
 
 
 def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
@@ -662,11 +697,15 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
     one = jnp.ones((), dtype)
 
     def cond(c):
-        return jnp.any((c.t < tf * (1 - 1e-12)) & (~c.stall)) & \
-            jnp.all(c.att < opts.max_steps)
+        # the integer att backstop can never bind — a lane reaching
+        # max_steps attempts quarantines itself with TOO_MUCH_WORK and
+        # drops out of the retcode mask — but it keeps an explicit
+        # iteration ceiling in the cond (sunlint bounded-loops)
+        return jnp.any((c.t < tf * (1 - 1e-12)) & (c.retcode == 0)) & \
+            jnp.all(c.att <= opts.max_steps)
 
     def step(c):
-        active = (c.t < tf * (1 - 1e-12)) & (~c.stall)
+        active = (c.t < tf * (1 - 1e-12)) & (c.retcode == 0)
         hs = jnp.where(active, jnp.minimum(c.h, tf - c.t), c.h)
         nvalid = jnp.minimum(c.steps, QMAX)
         # if h was clipped to hit tf, rescale the history accordingly
@@ -764,10 +803,10 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
             nl_cond, nl_body, s0)
 
         # ---- local error test (LTE ~ (z - pred)/(q+1), uniform grid) ----
-        err = dv.wrms_soa(z - y_pred, w, policy) / \
+        err_raw = dv.wrms_soa(z - y_pred, w, policy) / \
             (c.q.astype(dtype) + 1.0)
-        bad = ~jnp.isfinite(err) | ~conv
-        err = jnp.where(bad, 2.0, err)
+        bad = ~jnp.isfinite(err_raw) | ~conv
+        err = jnp.where(bad, 2.0, err_raw)
         accept = (err <= 1.0) & ~bad & active
 
         cst = ctrl.ControllerState(err_prev=c.e1, err_prev2=c.e2)
@@ -798,20 +837,50 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
 
         t_next = jnp.where(accept, t_new, c.t)
         h_next = jnp.where(active, hs * eta, c.h)
-        stall = c.stall | (active & (hs * eta < 1e-14))
         ncf = active & ~conv
+        etf = (~accept) & conv & active
         ai = active.astype(jnp.int32)
+        att_next = c.att + ai
+
+        # ---- per-lane retcode escalation (CVODE CVHandleFailure
+        # semantics, carried in data).  Failure is only ever DECIDED for
+        # currently-active lanes, so a quarantined lane's retcode is
+        # sticky and healthy lanes see pure where() no-ops — the
+        # no-fault trace stays value-identical.  Priority (last write
+        # wins): TOO_MUCH_WORK < ERR_FAILURE < CONV_FAILURE <
+        # RHSFUNC_FAIL, mirroring CVODE's specific-beats-generic flags.
+        ncf_cur = jnp.where(accept, 0, c.ncf_cur + ncf.astype(jnp.int32))
+        nef_cur = jnp.where(accept, 0, c.nef_cur + etf.astype(jnp.int32))
+        # step-size underflow is RELATIVE (t + h == t, the classic
+        # "h below the ULP of t" check): stiff lanes legitimately visit
+        # tiny absolute h near transients and recover, so an absolute
+        # floor would quarantine healthy integrations
+        hfail = active & (c.t + hs * eta == c.t)
+        nanstep = active & conv & ~jnp.isfinite(err_raw)
+        unfinished = t_next < tf * (1 - 1e-12)
+        rc = c.retcode
+        rc = jnp.where(active & unfinished & (att_next >= opts.max_steps),
+                       status.TOO_MUCH_WORK, rc)
+        rc = jnp.where(active & ((nef_cur >= status.MXNEF) |
+                                 (hfail & conv)),
+                       status.ERR_FAILURE, rc)
+        rc = jnp.where(active & ((ncf_cur >= status.MXNCF) |
+                                 (hfail & ~conv)),
+                       status.CONV_FAILURE, rc)
+        rc = jnp.where(nanstep, status.RHSFUNC_FAIL, rc)
+
         carry = _BdfCarry(
             t=t_next, h=h_next, q=q_next, Z=Z_next, e1=e1, e2=e2,
             MJ=MJ, gam_saved=gam_saved, since_jac=since_jac + ai,
             ncf_prev=ncf,
             steps=c.steps + accept.astype(jnp.int32),
-            att=c.att + ai,
-            netf=c.netf + ((~accept) & conv & active).astype(jnp.int32),
+            att=att_next,
+            netf=c.netf + etf.astype(jnp.int32),
             nni=c.nni + nni_s,
             nsetups=c.nsetups + need.astype(jnp.int32),
             ncfn=c.ncfn + ncf.astype(jnp.int32),
-            nli=c.nli + nli_s, nps=c.nps + nps_s, stall=stall)
+            nli=c.nli + nli_s, nps=c.nps + nps_s,
+            retcode=rc, ncf_cur=ncf_cur, nef_cur=nef_cur)
         # telemetry record: every element is an intermediate the step
         # computed anyway — with telemetry off the tuple is discarded
         # and the traced loop is identical to a build without it
@@ -858,7 +927,7 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
         ncf_prev=jnp.zeros((nsys,), bool), steps=steps_init, att=zero(),
         netf=zero(), nni=zero(), nsetups=zero(), ncfn=zero(),
         nli=jnp.zeros((), jnp.int32), nps=jnp.zeros((), jnp.int32),
-        stall=jnp.zeros((nsys,), bool))
+        retcode=zero(), ncf_cur=zero(), nef_cur=zero())
     # every carry leaf is freshly allocated above -> donate, so the
     # history window is updated in place across the step loop
     ring = None
@@ -874,17 +943,35 @@ def ensemble_bdf_integrate(f: Callable, jac: Callable, y0: jnp.ndarray,
         c, ring = _donated_loop(
             lambda cr: cond(cr[0]), tel_body,
             (c, ring_init(telemetry, (nsys,), dtype)))
+    # cond's integer backstop can in principle exit the loop with lanes
+    # still marked healthy but unfinished; reconcile them to
+    # TOO_MUCH_WORK so retcodes == 0 <=> the lane actually reached tf
+    retcodes = jnp.where(
+        (c.retcode == 0) & (c.t < tf * (1 - 1e-10)),
+        status.TOO_MUCH_WORK, c.retcode)
     st = EnsembleStats(
         steps=c.steps - steps0, attempts=c.att, netf=c.netf, nni=c.nni,
         success=c.t >= tf * (1 - 1e-10), nsetups=c.nsetups, ncfn=c.ncfn,
         nli=jnp.broadcast_to(c.nli, (nsys,)),
-        npsolves=jnp.broadcast_to(c.nps, (nsys,)))
+        npsolves=jnp.broadcast_to(c.nps, (nsys,)),
+        retcodes=retcodes, ok=retcodes == 0)
     out = [c.Z[0].T, st]
     if return_session:
         # built from the loop OUTPUTS — fresh buffers, never the
-        # donated inputs (sunlint donation-aliasing audits this path)
+        # donated inputs (sunlint donation-aliasing audits this path).
+        # Quarantine hygiene: a failed lane must NOT resume from its
+        # poisoned step size / order / history depth — it is exported
+        # as a cold lane (h <= 0 sentinel, order 1, zero valid history
+        # depth) anchored at its last accepted state Z[0] (failed step
+        # attempts never update Z[0], so it is the last good y).
+        lane_ok = retcodes == 0
         out.append(SolverSession(
-            t=c.t, h=c.h, q=c.q, Z=c.Z, e1=c.e1, e2=c.e2, steps=c.steps))
+            t=c.t,
+            h=jnp.where(lane_ok, c.h, jnp.zeros((), dtype)),
+            q=jnp.where(lane_ok, c.q, 1),
+            Z=c.Z, e1=jnp.where(lane_ok, c.e1, one),
+            e2=jnp.where(lane_ok, c.e2, one),
+            steps=jnp.where(lane_ok, c.steps, 0)))
     if ring is not None:
         out.append(ring)
     return tuple(out)

@@ -28,6 +28,7 @@ import warnings
 
 from . import controller as ctrl
 from . import dispatch as dv
+from . import status
 from .nonlinsol import FixedPointSolver, NewtonSolver
 from .policies import ExecPolicy
 from .arkode import ODEOptions, IntegratorStats, _bind_lin_solver
@@ -139,11 +140,13 @@ def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
         Z: jnp.ndarray               # (QMAX+1, n) history, Z[0] = y(t)
         cst: ctrl.ControllerState
         stats: IntegratorStats
-        give_up: jnp.ndarray
+        retcode: jnp.ndarray         # scalar int32 CV_*-style status
+        ncf_cur: jnp.ndarray         # consecutive Newton conv failures
+        nef_cur: jnp.ndarray         # consecutive error-test failures
 
     def cond(c):
         return ((c.t < tf * (1 - 1e-12) - 1e-300) &
-                (c.stats.attempts < opts.max_steps) & (~c.give_up))
+                (c.stats.attempts < opts.max_steps) & (c.retcode == 0))
 
     def step(c):
         h = jnp.minimum(c.h, tf - c.t)
@@ -179,9 +182,9 @@ def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
                            policy=opts.policy)
         nl_ok = nst.converged
         # LTE estimate ~ C_q (y - y_pred); C_q = 1/(q+1) (uniform grid)
-        err = wnorm(z - y_pred) / (c.q.astype(h.dtype) + 1.0)
-        bad = ~jnp.isfinite(err) | ~nl_ok
-        err = jnp.where(bad, 2.0, err)
+        err_raw = wnorm(z - y_pred) / (c.q.astype(h.dtype) + 1.0)
+        bad = ~jnp.isfinite(err_raw) | ~nl_ok
+        err = jnp.where(bad, 2.0, err_raw)
         accept = (err <= 1.0) & ~bad
         eta, cst = ctrl.eta_from_error(
             opts.controller, c.cst, err, c.q + 1, after_failure=(~accept) & nl_ok)
@@ -201,7 +204,24 @@ def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
                             _lagrange_matrix(eta, nval_after), Z_next)
         t_n = jnp.where(accept, t_new, c.t)
         h_n = jnp.clip(h * eta, opts.hmin, opts.hmax)
-        give_up = h * eta < 1e-14
+        # CV_*-style escalation, scalar form of the ensemble contract:
+        # consecutive-failure ceilings, h underflow, non-finite iterate
+        ncf_cur = jnp.where(accept, 0,
+                            c.ncf_cur + (~nl_ok).astype(jnp.int32))
+        nef_cur = jnp.where(
+            accept, 0,
+            c.nef_cur + ((~accept) & nl_ok &
+                         jnp.isfinite(err_raw)).astype(jnp.int32))
+        # relative underflow (t + h == t): stiff problems legitimately
+        # visit tiny absolute h near transients and recover
+        hfail = c.t + h * eta == c.t
+        rc = c.retcode
+        rc = jnp.where((nef_cur >= status.MXNEF) | (hfail & nl_ok),
+                       status.ERR_FAILURE, rc)
+        rc = jnp.where((ncf_cur >= status.MXNCF) | (hfail & ~nl_ok),
+                       status.CONV_FAILURE, rc)
+        rc = jnp.where(nl_ok & ~jnp.isfinite(err_raw),
+                       status.RHSFUNC_FAIL, rc)
         st = c.stats
         st = st._replace(
             steps=st.steps + accept.astype(jnp.int32),
@@ -210,7 +230,8 @@ def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
             netf=st.netf + ((~accept) & nl_ok).astype(jnp.int32),
             ncfn=st.ncfn + (~nl_ok).astype(jnp.int32),
             last_h=h, t=t_n)
-        carry = Carry(t_n, h_n, q_next, Z_next, cst, st, give_up)
+        carry = Carry(t_n, h_n, q_next, Z_next, cst, st, rc, ncf_cur,
+                      nef_cur)
         # telemetry record: already-computed intermediates only
         rec = (t_new, h, c.q, nst.iters, err, nl_ok, accept)
         return carry, rec
@@ -223,7 +244,7 @@ def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
     stats0 = IntegratorStats(zero, zero, zero, zero, zero, zero, zero,
                              h0, t0, jnp.zeros((), bool))
     c = Carry(t0, h0, jnp.ones((), jnp.int32), Z0,
-              ctrl.init_state(t0.dtype), stats0, jnp.zeros((), bool))
+              ctrl.init_state(t0.dtype), stats0, zero, zero, zero)
     ring = None
     if telemetry is None:
         c = lax.while_loop(cond, body, c)
@@ -242,7 +263,12 @@ def bdf_integrate(f: Callable, y0, t0, tf, *, order: int = 5,
         c, ring = lax.while_loop(
             lambda cr: cond(cr[0]), tel_body,
             (c, ring_init(telemetry, (), y0_flat.dtype)))
-    stats = c.stats._replace(success=c.t >= tf * (1 - 1e-10))
+    success = c.t >= tf * (1 - 1e-10)
+    # loop exit with a healthy retcode but tf unreached == the attempts
+    # ceiling fired: reconcile to TOO_MUCH_WORK (CV_TOO_MUCH_WORK)
+    retcode = jnp.where((c.retcode == 0) & ~success,
+                        status.TOO_MUCH_WORK, c.retcode)
+    stats = c.stats._replace(success=success, retcode=retcode)
     if ring is not None:
         return unravel(c.Z[0]), stats, ring
     return unravel(c.Z[0]), stats

@@ -160,6 +160,14 @@ class Solution(NamedTuple):
     #                                  records) when the context enables
     #                                  observability telemetry or the call
     #                                  passes telemetry=K; None otherwise
+    retcodes: Optional[jnp.ndarray] = None  # CV_*-style status
+    #   (repro.core.status): (nsys,) int32 for ensemble methods, scalar
+    #   for threaded scalar methods (bdf); None where not yet threaded
+    ok: Optional[jnp.ndarray] = None  # retcodes == 0 (same shape); a
+    #   quarantined lane's y is its last ACCEPTED state, not garbage
+    degraded: bool = False         # True when the serving tier re-ran
+    #   this bundle under the jnp oracle policy after a pallas-side
+    #   failure (one-shot backend fallback)
 
 
 def _split(method: str):
@@ -446,6 +454,33 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
             from ..observability.telemetry import StepTelemetry
             tel_obj = StepTelemetry(
                 ring, live=None if live is None else live)
+    # -- CV_*-style status surface: ensemble stats carry a per-lane
+    # retcodes array, threaded scalar methods a scalar retcode; both
+    # land on the same Solution fields (after dead-lane masking above,
+    # so padded bundle lanes always read SUCCESS)
+    retcodes = getattr(st, "retcodes", None)
+    if retcodes is None:
+        retcodes = getattr(st, "retcode", None)
+    ok = getattr(st, "ok", None)
+    if ok is None and retcodes is not None:
+        ok = retcodes == 0
+    if ctx.logger.enabled_for("WARNING") and retcodes is not None \
+            and not isinstance(retcodes, jax.core.Tracer):
+        import numpy as _np
+
+        arr = _np.atleast_1d(_np.asarray(retcodes))
+        failed = _np.nonzero(arr != 0)[0]
+        if failed.size:
+            from . import status as _status
+            by_code = {
+                _status.retcode_name(int(code)):
+                    int((arr == code).sum())
+                for code in _np.unique(arr[failed])}
+            ctx.logger.warning(
+                "integrate.lane_failed", method=method,
+                failed=int(failed.size), nsys=int(arr.size),
+                retcodes=by_code,
+                lanes=[int(i) for i in failed[:16]])
     if ctx.logger.enabled_for("INFO"):
         ctx.logger.info(
             "integrate.done", method=method, lin_solver=lname or "none",
@@ -458,4 +493,5 @@ def integrate(problem: IVP, t0, tf, method: str = "bdf", *,
                     nsetups=nsetups, workspace_bytes=workspace,
                     high_water_bytes=mem.high_water_bytes,
                     npsolves=npsolves, npsetups=npsetups,
-                    session=session, timings=timings, telemetry=tel_obj)
+                    session=session, timings=timings, telemetry=tel_obj,
+                    retcodes=retcodes, ok=ok)

@@ -1,0 +1,84 @@
+"""CV_*-style integer return codes — failure status carried in data.
+
+SUNDIALS' contract is that every solve returns a structured flag
+(``CV_SUCCESS``, ``CV_CONV_FAILURE``, ``CV_TOO_MUCH_WORK``, ...).  On
+an accelerator a device kernel cannot signal an error mid-flight (the
+source paper calls this out for its GPU vectors), so the status must be
+*carried in data*: each system of an ensemble owns one int32 retcode
+lane threaded through the step-loop carry, and the host reduces the
+lane back into typed results after the loop exits.
+
+The numeric values follow CVODE's ``cvode.h`` flags where an exact
+analog exists, so a reader coming from SUNDIALS can pattern-match:
+
+=====================  =====  ============================================
+name                   value  CVODE analog / meaning
+=====================  =====  ============================================
+``SUCCESS``                0  ``CV_SUCCESS``
+``TOO_MUCH_WORK``         -1  ``CV_TOO_MUCH_WORK`` — the lane spent
+                              ``max_steps`` attempts without reaching tf
+``ERR_FAILURE``           -3  ``CV_ERR_FAILURE`` — repeated local error
+                              test failures, or h underflowed while the
+                              corrector was still converging
+``CONV_FAILURE``          -4  ``CV_CONV_FAILURE`` — repeated Newton
+                              convergence failures, or h underflowed
+                              while Newton was failing
+``RHSFUNC_FAIL``          -8  ``CV_RHSFUNC_FAIL`` — unrecoverable
+                              NaN/Inf: the corrector converged onto a
+                              non-finite iterate (poisoned RHS)
+=====================  =====  ============================================
+
+A lane whose retcode goes nonzero is **quarantined**: it drops out of
+the step loop's ``active`` mask, so it stops participating in Newton,
+WRMS, and step-control reductions — healthy bundle-mates proceed
+bitwise-identically to a run where the failed lane never existed in a
+fault state (chaos suite: ``repro.testing.chaos``).
+
+Escalation ceilings follow CVODE's ``cv_mem`` defaults: ``MXNCF`` (10)
+consecutive Newton convergence failures or ``MXNEF`` consecutive
+error-test failures on one step quarantine the lane.
+"""
+from __future__ import annotations
+
+SUCCESS = 0
+TOO_MUCH_WORK = -1
+ERR_FAILURE = -3
+CONV_FAILURE = -4
+RHSFUNC_FAIL = -8
+
+#: consecutive Newton convergence failures before quarantine (CVODE MXNCF)
+MXNCF = 10
+#: consecutive local-error-test failures before quarantine.  CVODE uses
+#: 7, but it also estimates the initial step (CVHin) — this repro seeds
+#: ``h0 ~ 1e-6 * (tf - t0)`` and legitimately burns ~5-7 consecutive
+#: error-test failures calibrating h on a cold start, so the ceiling is
+#: doubled; a genuine error-failure spiral shrinks h by ~10x per
+#: failure and trips the hmin-underflow ERR_FAILURE path first anyway.
+MXNEF = 15
+
+#: retcode -> symbolic name (for logs, typed errors, metric labels)
+RETCODE_NAMES = {
+    SUCCESS: "SUCCESS",
+    TOO_MUCH_WORK: "TOO_MUCH_WORK",
+    ERR_FAILURE: "ERR_FAILURE",
+    CONV_FAILURE: "CONV_FAILURE",
+    RHSFUNC_FAIL: "RHSFUNC_FAIL",
+}
+
+#: retcode -> the SUNDIALS flag it mirrors (README failure-semantics table)
+SUNDIALS_FLAGS = {
+    SUCCESS: "CV_SUCCESS",
+    TOO_MUCH_WORK: "CV_TOO_MUCH_WORK",
+    ERR_FAILURE: "CV_ERR_FAILURE",
+    CONV_FAILURE: "CV_CONV_FAILURE",
+    RHSFUNC_FAIL: "CV_RHSFUNC_FAIL",
+}
+
+
+def retcode_name(code: int) -> str:
+    """Symbolic name for ``code`` (``"UNKNOWN(<n>)"`` off the table)."""
+    return RETCODE_NAMES.get(int(code), f"UNKNOWN({int(code)})")
+
+
+def is_success(code: int) -> bool:
+    return int(code) == SUCCESS

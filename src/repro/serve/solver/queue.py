@@ -72,6 +72,10 @@ class IVPRequest:
     ``session`` is an optional single-lane
     :class:`~repro.core.batched.SolverSession` from a previous
     response: the warm-start continuation handle.
+    ``deadline`` is an absolute timestamp on the server's clock; a
+    request whose deadline has passed when its bundle flushes is shed
+    (its Future fails with ``DeadlineExceeded``) BEFORE any compute is
+    spent on it.
     """
 
     family: str
@@ -83,6 +87,7 @@ class IVPRequest:
     method: str = "ensemble_bdf"
     params: Any = None
     session: Any = None
+    deadline: Optional[float] = None
     # filled in by the queue / server:
     arrival: float = 0.0
     future: Any = None
@@ -201,6 +206,10 @@ class AdmissionQueue:
         self._buckets: Dict[BucketKey, _Bucket] = {}
         self._depth = 0
         self.rejected = 0
+        # drain-rate EMA (requests/sec over flushes) backing the
+        # depth-proportional RetryAfter hint
+        self._drain_rate = 0.0
+        self._last_flush: Optional[float] = None
         #: observability hook — called as ``on_event(name, fields)`` for
         #: ``queue.admit`` / ``queue.reject`` / ``queue.flush`` (the
         #: server forwards these into its EventLogger)
@@ -214,6 +223,29 @@ class AdmissionQueue:
     def depth(self) -> int:
         """Total queued (not yet flushed) requests."""
         return self._depth
+
+    def retry_hint(self, now: Optional[float] = None) -> float:
+        """Backoff hint for a rejected request: the time the CURRENT
+        backlog needs to drain at the measured flush rate.
+
+        The old flat ``2.0 * max_wait`` hint was load-blind — every
+        rejected client came back after the same tiny delay no matter
+        how deep the queue was, so under sustained overload the whole
+        rejected cohort thundering-herded back into another reject.
+        Depth-proportional hints make the
+        :meth:`~repro.serve.solver.server.SolverServer.submit_with_retry`
+        jittered-exponential backoff converge: the deeper the backlog
+        (or the slower the drain), the longer the hint.  Before any
+        flush has been observed the hint falls back to backlog-in-
+        flush-windows (``max_wait * depth / max_batch``).  Clamped to
+        ``[max_wait, 30s]``.
+        """
+        del now  # reserved for an age-aware hint; EMA is time-free
+        if self._drain_rate > 0.0:
+            hint = self._depth / self._drain_rate
+        else:
+            hint = self.max_wait * (self._depth / max(self.max_batch, 1))
+        return float(min(max(hint, self.max_wait), 30.0))
 
     def pad_to(self, count: int) -> int:
         """The bucket size a ``count``-request group is padded to: the
@@ -230,12 +262,10 @@ class AdmissionQueue:
         now = self.clock() if now is None else now
         if self._depth >= self.max_depth:
             self.rejected += 1
+            hint = self.retry_hint(now)
             self._emit("queue.reject", depth=self._depth,
-                       retry_after=2.0 * self.max_wait)
-            # drain-rate hint: one max_wait flushes every due bucket,
-            # so a full batch's worth of room opens within ~2 windows
-            raise RetryAfter(2.0 * self.max_wait, self._depth,
-                             self.max_depth)
+                       retry_after=hint)
+            raise RetryAfter(hint, self._depth, self.max_depth)
         req.arrival = now
         key = bucket_key(req, self.dtype)
         bucket = self._buckets.get(key)
@@ -273,6 +303,13 @@ class AdmissionQueue:
                 # remaining requests are in arrival order; the clock
                 # for the next stale-flush starts at the new head
                 bucket.oldest = bucket.requests[0].arrival
+        if bundles:
+            flushed = sum(b.live for b in bundles)
+            if self._last_flush is not None and now > self._last_flush:
+                inst = flushed / (now - self._last_flush)
+                self._drain_rate = inst if self._drain_rate == 0.0 else \
+                    0.2 * inst + 0.8 * self._drain_rate
+            self._last_flush = now
         if self.on_event is not None:
             for b in bundles:
                 self._emit("queue.flush", family=b.key.family,

@@ -27,6 +27,7 @@ requests.  :meth:`metrics` reports queue depth, batch occupancy
 """
 from __future__ import annotations
 
+import random
 import threading
 import time
 from concurrent.futures import Future
@@ -36,14 +37,44 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import status as _status
 from repro.core.batched import SolverSession
 from repro.core.context import Context
 from repro.core.ivp import IVP, Solution, integrate
+from repro.core.policies import XLA_FUSED
 
 from .queue import AdmissionQueue, Bundle, IVPRequest, RetryAfter
 from .trace_cache import TraceCache, TraceKey
 
-__all__ = ["ProblemFamily", "SolverServer", "RetryAfter"]
+__all__ = ["ProblemFamily", "SolverServer", "RetryAfter",
+           "SolverError", "DeadlineExceeded"]
+
+
+class SolverError(RuntimeError):
+    """A request's lane ended with a non-success CV_*-style retcode.
+
+    Only the OFFENDING lane's Future fails with this — bundle-mates
+    resolve normally (fault containment).  Carries the structured
+    status so clients can dispatch on it:
+
+    ``retcode``      — the integer flag (:mod:`repro.core.status`)
+    ``retcode_name`` — its symbolic name (``"CONV_FAILURE"``, ...)
+    ``stats``        — the lane's :class:`~repro.core.batched.
+                       EnsembleStats` slice (steps, attempts, netf,
+                       ncfn, ... for THIS lane)
+    """
+
+    def __init__(self, message: str, *, retcode: int = 0,
+                 stats: Any = None):
+        super().__init__(message)
+        self.retcode = int(retcode)
+        self.retcode_name = _status.retcode_name(retcode)
+        self.stats = stats
+
+
+class DeadlineExceeded(SolverError):
+    """The request's deadline passed before its bundle executed; it was
+    shed at flush time — no solver compute was spent on it."""
 
 
 @dataclass(frozen=True)
@@ -188,6 +219,11 @@ class SolverServer:
         self._live_lanes = 0
         self._padded_lanes = 0
         self._steady_misses = 0
+        # fault-containment accumulators: failed requests by reason
+        # (retcode name / "deadline" / "exec_error") and bundles
+        # re-pumped under the jnp oracle policy (backend fallback)
+        self._failures: Dict[str, int] = {}
+        self._degraded = 0
         # per-bucket throughput: (family, n, nsys) -> accumulators
         self._bucket_stats: Dict[Tuple[str, int, int], dict] = {}
 
@@ -209,11 +245,19 @@ class SolverServer:
     def submit(self, family: str, y0, t0: float, tf: float, *,
                rtol: float = 1e-6, atol: float = 1e-9,
                params: Any = None, session: Any = None,
-               method: Optional[str] = None) -> Future:
+               method: Optional[str] = None,
+               deadline: Optional[float] = None) -> Future:
         """Enqueue one IVP; returns a Future resolving to its
         :class:`~repro.core.ivp.Solution` (with ``timings`` and a
         warm-start ``session``).  Raises :class:`RetryAfter` when the
         queue is at depth — resubmit after ``exc.retry_after`` seconds.
+
+        ``deadline`` is a RELATIVE budget in seconds: if the request is
+        still queued when its bundle flushes past ``now + deadline``,
+        it is shed with :class:`DeadlineExceeded` before any compute.
+        A lane that fails inside the solver resolves its Future with a
+        typed :class:`SolverError` (retcode + per-lane stats) while its
+        bundle-mates resolve normally.
         """
         fam = self.families.get(family)
         if fam is None:
@@ -228,14 +272,50 @@ class SolverServer:
             raise ValueError(
                 f"session must be a single-lane handle for n={fam.n} "
                 f"(got n={session.n}, nsys={session.nsys})")
+        abs_deadline = None
+        if deadline is not None:
+            if deadline <= 0:
+                raise ValueError(f"deadline must be > 0 (relative "
+                                 f"seconds); got {deadline!r}")
+            abs_deadline = self.clock() + float(deadline)
         req = IVPRequest(family=family, y0=y0, t0=float(t0),
                          tf=float(tf), rtol=rtol, atol=atol,
                          method=method or self.method, params=params,
-                         session=session, future=Future())
+                         session=session, deadline=abs_deadline,
+                         future=Future())
         with self._lock:
             self.queue.offer(req)      # may raise RetryAfter
         self._wake.set()
         return req.future
+
+    def submit_with_retry(self, family: str, y0, t0: float, tf: float,
+                          *, retries: int = 6, jitter: float = 0.5,
+                          seed: Optional[int] = None,
+                          sleep: Callable[[float], None] = time.sleep,
+                          **kw) -> Future:
+        """:meth:`submit` with jittered exponential backoff on
+        :class:`RetryAfter`.
+
+        The rejection's depth-proportional ``retry_after`` hint seeds
+        the delay, doubled per consecutive reject and spread by up to
+        ``jitter * delay`` of seeded uniform noise so a rejected cohort
+        does not re-arrive in lockstep.  ``seed`` makes the jitter
+        deterministic (tests/chaos); ``sleep`` is injectable for
+        synchronous drivers that pump the server themselves between
+        attempts.  Re-raises the final :class:`RetryAfter` once
+        ``retries`` rejections have been consumed.
+        """
+        rng = random.Random(seed)
+        for attempt in range(retries + 1):
+            try:
+                return self.submit(family, y0, t0, tf, **kw)
+            except RetryAfter as exc:
+                if attempt >= retries:
+                    raise
+                delay = exc.retry_after * (2.0 ** attempt)
+                delay *= 1.0 + jitter * rng.random()
+                sleep(delay)
+        raise AssertionError("unreachable")
 
     # ------------------------------------------------------------------
     # the synchronous core
@@ -337,15 +417,19 @@ class SolverServer:
                     [jnp.asarray(x, self.dtype) for x in xs]), *stacked)
         return sess, tfa, params
 
-    def _compile(self, key: TraceKey, sess, tfa, params) -> _CompiledBundle:
+    def _compile(self, key: TraceKey, sess, tfa, params,
+                 policy=None) -> _CompiledBundle:
         """Trace, lower, and AOT-compile one bundle shape (the cache
         miss path); records the compile wall clock and the trace-time
-        Solution metadata reused for every subsequent hit."""
+        Solution metadata reused for every subsequent hit.  ``policy``
+        overrides the context policy (the backend-fallback path
+        recompiles the bundle under the jnp oracle)."""
         fam = self.families[key.bucket.family]
         rtol = 10.0 ** key.bucket.tol_class[0]
         atol = 10.0 ** key.bucket.tol_class[1]
+        pol_kw = {} if policy is None else {"policy": policy}
         opts = self.ctx.options(rtol=rtol, atol=atol,
-                                max_steps=self.max_steps)
+                                max_steps=self.max_steps, **pol_kw)
         method = key.bucket.method
         meta: dict = {}
 
@@ -378,6 +462,82 @@ class SolverServer:
                                compile_s=time.perf_counter() - t0,
                                meta=dict(meta))
 
+    def _count_failures(self, reason: str, k: int = 1) -> None:
+        with self._mlock:
+            self._failures[reason] = self._failures.get(reason, 0) + k
+
+    def _run_compiled(self, entry: _CompiledBundle, sess, tfa, params):
+        """The compiled-executable invocation, isolated so the chaos
+        harness can wrap it (simulated executable raise) and the
+        fallback path can reuse it."""
+        y, st, sess_out = entry.fn(sess, tfa, params)
+        jax.block_until_ready(y)
+        return y, st, sess_out
+
+    def _needs_fallback(self, y) -> bool:
+        """All-NaN bundle state under a non-oracle backend: the kernel
+        path itself is implicated (a single diverging system quarantines
+        per-lane instead), so the bundle qualifies for the one-shot
+        jnp-oracle re-pump."""
+        if self.ctx.policy.backend == "jnp":
+            return False
+        import numpy as np
+
+        arr = np.asarray(y)
+        return arr.size > 0 and not np.isfinite(arr).any()
+
+    def _shed_expired(self, bundle: Bundle) -> Optional[Bundle]:
+        """Fail expired requests' Futures at FLUSH time (no compute is
+        spent on them) and rebuild the bundle from the survivors;
+        returns None when nothing is left to execute."""
+        now = self.clock()
+        if not any(r.deadline is not None and now >= r.deadline
+                   for r in bundle.requests):
+            return bundle
+        live: List[IVPRequest] = []
+        shed = 0
+        for req in bundle.requests:
+            if req.deadline is not None and now >= req.deadline:
+                shed += 1
+                exc = DeadlineExceeded(
+                    f"deadline exceeded before execution "
+                    f"(queued {now - req.arrival:.3f}s)")
+                if req.future.set_running_or_notify_cancel():
+                    req.future.set_exception(exc)
+            else:
+                live.append(req)
+        self._count_failures("deadline", shed)
+        log = self.ctx.logger
+        if log.enabled_for("WARNING"):
+            log.warning("serve.deadline_shed", family=bundle.key.family,
+                        shed=shed, live=len(live))
+        if not live:
+            return None
+        return Bundle(key=bundle.key, requests=live,
+                      nsys=self.queue.pad_to(len(live)),
+                      flushed=bundle.flushed)
+
+    def _degrade(self, bundle: Bundle, sess, tfa, params, exc):
+        """One-shot backend fallback: re-pump the bundle under the jnp
+        oracle policy (its own TraceKey, so the degraded executable is
+        cached too).  A failure HERE propagates — the fallback is not
+        retried."""
+        fkey = TraceKey(bucket=bundle.key, nsys=bundle.nsys,
+                        policy=XLA_FUSED)
+        entry, hit = self.cache.get(
+            fkey,
+            lambda: self._compile(fkey, sess, tfa, params,
+                                  policy=XLA_FUSED))
+        y, st, sess_out = self._run_compiled(entry, sess, tfa, params)
+        with self._mlock:
+            self._degraded += 1
+        log = self.ctx.logger
+        if log.enabled_for("WARNING"):
+            log.warning("serve.bundle.degraded",
+                        family=bundle.key.family, nsys=bundle.nsys,
+                        reason=f"{type(exc).__name__}: {exc}"[:200])
+        return y, st, sess_out, entry, hit
+
     def _execute(self, bundle: Bundle) -> None:
         prof = self.ctx.profiler
         if prof.enabled:
@@ -386,6 +546,11 @@ class SolverServer:
             # instant so queue events can be mapped onto the profiler
             # timebase and merged into the Chrome trace
             p_anchor, s_anchor = prof.now(), self.clock()
+        shed = self._shed_expired(bundle)
+        if shed is None:
+            return
+        bundle = shed
+        degraded = False
         try:
             with prof.region("serve.assemble", cat="serve", sync=False):
                 sess, tfa, params = self._assemble(bundle)
@@ -397,15 +562,27 @@ class SolverServer:
                 with self._mlock:
                     self._steady_misses += 1
             t0 = time.perf_counter()
-            y, st, sess_out = entry.fn(sess, tfa, params)
-            jax.block_until_ready(y)
+            try:
+                y, st, sess_out = self._run_compiled(entry, sess, tfa,
+                                                     params)
+                if self._needs_fallback(y):
+                    raise RuntimeError(
+                        "bundle state is entirely non-finite under "
+                        f"backend {self.ctx.policy.backend!r}")
+            except Exception as fallback_exc:
+                y, st, sess_out, entry, hit = self._degrade(
+                    bundle, sess, tfa, params, fallback_exc)
+                degraded = True
             t1 = time.perf_counter()
             exec_s = t1 - t0
         except Exception as exc:       # resolve, don't strand, futures
+            self._count_failures("exec_error", len(bundle.requests))
             for req in bundle.requests:
                 if not req.future.set_running_or_notify_cancel():
                     continue
-                req.future.set_exception(exc)
+                req.future.set_exception(
+                    exc if isinstance(exc, SolverError) else
+                    SolverError(f"bundle execution failed: {exc}"))
             raise
         done = self.clock()
         bkey = (bundle.key.family, bundle.key.n, bundle.nsys)
@@ -443,23 +620,55 @@ class SolverServer:
                      live=bundle.live, nsys=bundle.nsys, cached=hit,
                      compile_s=0.0 if hit else entry.compile_s,
                      exec_s=exec_s)
+        # per-lane retcode inspection: only OFFENDING lanes fail (typed
+        # SolverError with retcode + per-lane stats); bundle-mates
+        # resolve normally — the serving face of quarantine containment
+        retcodes = None
+        if getattr(st, "retcodes", None) is not None:
+            import numpy as np
+
+            retcodes = np.asarray(st.retcodes)
+        failed_lanes = []
         for i, req in enumerate(bundle.requests):
+            rc = int(retcodes[i]) if retcodes is not None else 0
+            if rc != 0:
+                lane_stats = jax.tree_util.tree_map(
+                    lambda a: a[..., i], st)
+                exc = SolverError(
+                    f"lane failed with {_status.retcode_name(rc)} "
+                    f"({rc}) [{_status.SUNDIALS_FLAGS.get(rc, '?')}]",
+                    retcode=rc, stats=lane_stats)
+                self._count_failures(_status.retcode_name(rc))
+                failed_lanes.append(i)
+                if req.future.set_running_or_notify_cancel():
+                    req.future.set_exception(exc)
+                continue
             sol = self._lane_solution(i, req, bundle, y, st, sess_out,
-                                      entry, hit, exec_s)
+                                      entry, hit, exec_s, degraded)
             if req.future.set_running_or_notify_cancel():
                 req.future.set_result(sol)
+        if failed_lanes and log.enabled_for("WARNING"):
+            log.warning("serve.lane_failed", family=bundle.key.family,
+                        failed=len(failed_lanes), live=bundle.live,
+                        lanes=failed_lanes[:16])
 
     def _lane_solution(self, i: int, req: IVPRequest, bundle: Bundle,
                        y, st, sess_out, entry: _CompiledBundle,
-                       hit: bool, exec_s: float) -> Solution:
+                       hit: bool, exec_s: float,
+                       degraded: bool = False) -> Solution:
         """One request's Solution: the bundle result restricted to its
         lane (dead padded lanes never reach a client), plus the serving
-        wall-clock split and the warm-start session handle."""
+        wall-clock split and the warm-start session handle.
+
+        ``degraded`` marks results recomputed under the jnp oracle
+        after the configured backend failed (one-shot fallback)."""
         lane_stats = jax.tree_util.tree_map(lambda a: a[..., i], st)
         meta = entry.meta
         timings = {"queue_wait": bundle.flushed - req.arrival,
                    "compile": 0.0 if hit else entry.compile_s,
                    "execute": exec_s}
+        rcs = getattr(st, "retcodes", None)
+        oks = getattr(st, "ok", None)
         return Solution(
             y=y[i], t=sess_out.t[i], success=st.success[i],
             stats=lane_stats, method=meta["method"],
@@ -473,7 +682,10 @@ class SolverServer:
             npsolves=st.npsolves[i] if st.npsolves is not None else None,
             npsetups=None,
             session=sess_out.lanes(slice(i, i + 1)),
-            timings=timings)
+            timings=timings,
+            retcodes=rcs[i] if rcs is not None else None,
+            ok=oks[i] if oks is not None else None,
+            degraded=degraded)
 
     # ------------------------------------------------------------------
     # observability
@@ -519,6 +731,8 @@ class SolverServer:
                 "steady_misses": self._steady_misses,
                 "warmup_bundles": self.warmup_bundles,
                 "trace_cache": self.cache.stats(),
+                "failures": dict(self._failures),
+                "degraded": self._degraded,
             }
         return out
 
@@ -545,6 +759,15 @@ class SolverServer:
         reg.counter("repro_serve_steady_misses",
                     "Trace-cache misses after warmup"
                     ).set_cumulative(m["steady_misses"])
+        fail = reg.counter(
+            "repro_serve_failures",
+            "Requests failed, labeled by reason (retcode name, "
+            "deadline, exec_error)")
+        for reason, count in sorted(m["failures"].items()):
+            fail.set_cumulative(count, reason=reason)
+        reg.counter("repro_serve_degraded",
+                    "Bundles recomputed under the jnp oracle after a "
+                    "backend failure").set_cumulative(m["degraded"])
         reg.counter("repro_serve_live_lanes",
                     "Live lanes executed").set_cumulative(m["live_lanes"])
         reg.counter("repro_serve_padded_lanes",

@@ -1,0 +1,2 @@
+"""Deterministic fault-injection (chaos) tooling for the
+fault-containment contract: :mod:`repro.testing.chaos`."""

@@ -1,0 +1,470 @@
+"""Deterministic fault injection for the fault-containment contract.
+
+The per-lane retcode machinery (:mod:`repro.core.status`, the
+``ensemble_bdf``/``ensemble_dirk`` quarantine paths) and the serving
+tier's graceful degradation (typed ``SolverError`` futures, deadlines,
+backend fallback) are only trustworthy if faults can be *injected on
+demand* and the blast radius measured.  This module provides seeded,
+trace-compatible injectors plus the chaos suite that asserts the
+contract end to end:
+
+* **k faults => exactly k failures.**  Poisoning k lanes of an
+  ``nsys``-lane ensemble produces exactly k non-success retcodes (at
+  exactly the planned lanes) and, through the serving tier, exactly k
+  failed Futures — never a hung Future, never a garbage result.
+* **Healthy lanes are bitwise clean.**  Under the jnp backend the
+  non-faulted lanes of a poisoned run reproduce the no-fault run
+  bit for bit (trajectories AND decision streams): injection rides
+  ``jnp.where`` selects whose clean branch is the unmodified value, and
+  the quarantine machinery is per-lane masked, so a fault in lane i is
+  *invisible* to lane j.
+
+Injectors are **trace-compatible**: they wrap the RHS (or the server's
+compiled-run seam) without changing shapes, dtypes, or the trace
+signature, so a poisoned run compiles to the same program structure as
+a clean one and the trace cache / autotune machinery behaves
+identically.  All randomness flows from explicit seeds
+(:class:`ChaosPlan`) — a chaos failure reproduces from its seed.
+
+Run the acceptance suite::
+
+    python -m repro.testing.chaos --smoke
+
+(core containment at 4096 lanes under jnp + a pallas-interpret pass,
+then a >= 10^4-request serving run with lane faults, deadline sheds,
+and one injected executable failure exercising the jnp-oracle
+fallback).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import random
+import sys
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import status
+
+__all__ = [
+    "ChaosPlan", "poison_rhs", "chaotic_robertson_family",
+    "failing_executions", "run_core_chaos", "run_serving_chaos", "main",
+]
+
+
+# ---------------------------------------------------------------------------
+# seeded fault plans
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ChaosPlan:
+    """A seeded selection of fault lanes and onset times.
+
+    ``lanes`` are the faulted lane indices (sorted, distinct);
+    ``onsets`` are the per-faulted-lane fault onset times, aligned with
+    ``lanes``.  Healthy lanes have onset ``+inf`` in
+    :meth:`onset_vector` — the injected predicate ``t >= onset`` is
+    never true for them, so the poison select always takes the clean
+    branch.
+    """
+
+    nsys: int
+    lanes: Tuple[int, ...]
+    onsets: Tuple[float, ...]
+
+    @classmethod
+    def draw(cls, nsys: int, k: int, t0: float, tf: float, *,
+             seed: int = 0,
+             window: Tuple[float, float] = (0.3, 0.7)) -> "ChaosPlan":
+        """Draw ``k`` distinct fault lanes with onsets uniform in the
+        fractional ``window`` of ``[t0, tf]`` (defaults keep faults away
+        from the endpoints so the clean run has accepted steps both
+        before and after the onset)."""
+        if not 0 <= k <= nsys:
+            raise ValueError(f"need 0 <= k={k} <= nsys={nsys}")
+        rng = random.Random(seed)
+        lanes = tuple(sorted(rng.sample(range(nsys), k)))
+        w0, w1 = window
+        onsets = tuple(t0 + (w0 + rng.random() * (w1 - w0)) * (tf - t0)
+                       for _ in lanes)
+        return cls(nsys=nsys, lanes=lanes, onsets=onsets)
+
+    def mask(self) -> np.ndarray:
+        """(nsys,) bool: True at faulted lanes."""
+        m = np.zeros(self.nsys, dtype=bool)
+        m[list(self.lanes)] = True
+        return m
+
+    def onset_vector(self, dtype=np.float64) -> np.ndarray:
+        """(nsys,) fault onset times; ``+inf`` for healthy lanes."""
+        v = np.full(self.nsys, np.inf, dtype=dtype)
+        for lane, t in zip(self.lanes, self.onsets):
+            v[lane] = t
+        return v
+
+
+# ---------------------------------------------------------------------------
+# RHS injectors (closed-over batched problems)
+# ---------------------------------------------------------------------------
+
+def poison_rhs(f: Callable, plan: ChaosPlan, *, mode: str = "nan",
+               soa: bool = False, scale: float = 1e12) -> Callable:
+    """Wrap a batched RHS so the planned lanes fail after their onset.
+
+    ``mode="nan"`` replaces the faulted lanes' RHS with NaN once
+    ``t >= onset`` — the CV_RHSFUNC_FAIL / CV_CONV_FAILURE path (a NaN
+    step is never accepted, so the lane's last accepted state stays
+    finite).  ``mode="divergent"`` adds ``scale * y`` to the faulted
+    lanes WITHOUT touching the Jacobian: the Newton matrix no longer
+    matches the residual, the corrector diverges, and the lane
+    escalates through MXNCF / hmin underflow (CV_CONV_FAILURE /
+    CV_ERR_FAILURE) on finite arithmetic.
+
+    ``soa=True`` wraps the SoA form (``y: (n, nsys)``, fault axis
+    last); otherwise AoS (``y: (nsys, n)``, fault axis first).  Healthy
+    lanes flow through a ``jnp.where`` whose selected value is the
+    untouched clean RHS — elementwise, so the no-fault lanes of a
+    poisoned run stay bitwise identical to a clean run under jnp.
+    """
+    if mode not in ("nan", "divergent"):
+        raise ValueError(f"unknown chaos mode {mode!r}")
+    mask = jnp.asarray(plan.mask())
+    onset = jnp.asarray(plan.onset_vector())
+
+    def wrapped(t, y):
+        clean = f(t, y)
+        tv = jnp.broadcast_to(jnp.asarray(t), mask.shape)
+        hot = mask & (tv >= onset)
+        hot = hot[None, :] if soa else hot[:, None]
+        if mode == "nan":
+            return jnp.where(hot, jnp.nan, clean)
+        return jnp.where(hot, clean + scale * y, clean)
+
+    return wrapped
+
+
+def chaotic_robertson_family():
+    """:func:`~repro.core.problems.robertson_family` plus a per-request
+    ``t_fault`` parameter: a lane whose ``t >= t_fault`` sees a NaN RHS
+    (healthy requests pass ``t_fault = inf``).  Same trace signature as
+    the clean family — faultiness is data, so faulted and healthy
+    requests share one bundle and one cache entry, which is exactly the
+    containment scenario worth testing."""
+    from repro.core.problems import robertson_family
+    f, jac, f_soa, jac_soa = robertson_family()
+
+    def f_c(t, y, p):
+        return jnp.where((t >= p["t_fault"])[:, None], jnp.nan,
+                         f(t, y, p))
+
+    def f_soa_c(t, y, p):
+        return jnp.where((t >= p["t_fault"])[None, :], jnp.nan,
+                         f_soa(t, y, p))
+
+    return f_c, jac, f_soa_c, jac_soa
+
+
+# ---------------------------------------------------------------------------
+# serving injectors
+# ---------------------------------------------------------------------------
+
+@contextmanager
+def failing_executions(server, k: int = 1,
+                       exc: Optional[Exception] = None):
+    """Patch the server's compiled-run seam so the next ``k``
+    invocations raise (a simulated executable failure).
+
+    The one-shot jnp-oracle fallback re-enters the same seam, so
+    ``k=1`` exercises graceful degradation end to end: the primary
+    execution raises, the fallback runs clean, and every Future in the
+    bundle resolves with a ``degraded`` Solution.  ``k=2`` fails the
+    fallback too — the bundle's Futures then fail with a typed
+    ``SolverError`` (resolve-don't-strand).  Yields a mutable box with
+    ``raised`` / ``remaining`` counters.
+    """
+    orig = server._run_compiled
+    box = {"remaining": int(k), "raised": 0}
+
+    def chaotic(entry, sess, tfa, params):
+        if box["remaining"] > 0:
+            box["remaining"] -= 1
+            box["raised"] += 1
+            raise exc if exc is not None else RuntimeError(
+                "chaos: injected executable failure")
+        return orig(entry, sess, tfa, params)
+
+    server._run_compiled = chaotic
+    try:
+        yield box
+    finally:
+        server._run_compiled = orig
+
+
+# ---------------------------------------------------------------------------
+# chaos suites
+# ---------------------------------------------------------------------------
+
+def run_core_chaos(nsys: int = 4096, k: int = 8, *, seed: int = 0,
+                   tf: float = 0.4, policy=None, mode: str = "nan",
+                   check_bitwise: Optional[bool] = None) -> dict:
+    """Core containment: poison ``k`` of ``nsys`` Robertson lanes and
+    assert exactly-k quarantine with healthy lanes unharmed.
+
+    Asserts (raising ``AssertionError`` with a reproducing seed):
+
+    * exactly the planned lanes carry non-success retcodes;
+    * the ``ok`` mask mirrors ``retcodes == 0``;
+    * healthy-lane states are finite and healthy lanes report success;
+    * faulted lanes' reported states are finite (the last ACCEPTED
+      state — a NaN attempt is never accepted);
+    * under jnp (``check_bitwise`` defaults to backend == "jnp"):
+      healthy-lane trajectories and decision streams (steps, attempts,
+      netf, nni) are bitwise identical to a clean run.
+
+    Returns a report dict for the CLI / logs.
+    """
+    from repro.core.batched import ensemble_bdf_integrate
+    from repro.core.policies import XLA_FUSED
+    from repro.core.problems import (batched_robertson,
+                                     batched_robertson_soa)
+    policy = XLA_FUSED if policy is None else policy
+    if check_bitwise is None:
+        check_bitwise = policy.backend == "jnp"
+    tag = f"[core seed={seed} nsys={nsys} k={k} mode={mode}]"
+
+    f, jac, y0 = batched_robertson(nsys)
+    f_soa, jac_soa = batched_robertson_soa(nsys)
+    plan = ChaosPlan.draw(nsys, k, 0.0, tf, seed=seed)
+    clean_y, clean_st = ensemble_bdf_integrate(
+        f, jac, y0, 0.0, tf, policy=policy,
+        f_soa=f_soa, jac_soa=jac_soa)
+    fy, fst = ensemble_bdf_integrate(
+        poison_rhs(f, plan, mode=mode), jac, y0, 0.0, tf, policy=policy,
+        f_soa=poison_rhs(f_soa, plan, mode=mode, soa=True),
+        jac_soa=jac_soa)
+
+    rcs = np.asarray(fst.retcodes)
+    ok = np.asarray(fst.ok)
+    failed = np.flatnonzero(rcs != 0)
+    assert set(failed.tolist()) == set(plan.lanes), (
+        f"{tag} expected failures exactly at {plan.lanes}, got "
+        f"{failed.tolist()}")
+    assert np.array_equal(ok, rcs == 0), f"{tag} ok mask != retcodes==0"
+    for lane in plan.lanes:
+        assert rcs[lane] in status.RETCODE_NAMES, (
+            f"{tag} lane {lane} carries unknown retcode {rcs[lane]}")
+
+    healthy = ~plan.mask()
+    fy_np, cy_np = np.asarray(fy), np.asarray(clean_y)
+    assert np.isfinite(fy_np[healthy]).all(), (
+        f"{tag} healthy lanes contaminated with non-finite state")
+    assert np.isfinite(fy_np[~healthy]).all(), (
+        f"{tag} faulted lanes reported non-finite state (quarantine "
+        "must freeze the last ACCEPTED state)")
+    if check_bitwise:
+        for name in ("steps", "attempts", "netf", "nni"):
+            a = np.asarray(getattr(fst, name))[healthy]
+            b = np.asarray(getattr(clean_st, name))[healthy]
+            assert np.array_equal(a, b), (
+                f"{tag} healthy-lane decision stream {name!r} diverged")
+        if mode == "nan":
+            # NaN injection is a constant select — fusion-inert, so
+            # healthy lanes reproduce the clean run bit for bit
+            assert np.array_equal(fy_np[healthy], cy_np[healthy]), (
+                f"{tag} healthy-lane trajectories differ from the "
+                "no-fault run (bitwise)")
+        else:
+            # the divergent injector adds arithmetic (clean + scale*y)
+            # that XLA fuses into shared reductions, perturbing healthy
+            # lanes by ULPs even before any onset; Robertson's stiffness
+            # amplifies those seeds along the (identical) step sequence,
+            # so allow rounding-seeded drift — still ~6 orders below
+            # anything fault-shaped
+            assert np.allclose(fy_np[healthy], cy_np[healthy],
+                               rtol=1e-6, atol=1e-10), (
+                f"{tag} healthy-lane trajectories drifted beyond "
+                "rounding-seeded level")
+
+    return {"suite": "core", "seed": seed, "nsys": nsys, "mode": mode,
+            "backend": policy.backend, "faulted": len(plan.lanes),
+            "failed": int((rcs != 0).sum()),
+            "retcodes": {str(l): status.retcode_name(int(rcs[l]))
+                         for l in plan.lanes},
+            "bitwise_checked": bool(check_bitwise)}
+
+
+def run_serving_chaos(requests: int = 10000, k: int = 32,
+                      shed: int = 16, *, seed: int = 0,
+                      bucket: int = 256, tf: float = 0.25) -> dict:
+    """Serving containment: a >= ``requests``-request run with ``k``
+    lane faults, ``shed`` expired deadlines, and one injected
+    executable failure — zero hung Futures, failures exactly typed.
+
+    Asserts:
+
+    * every Future resolves (no hangs, no garbage);
+    * the ``shed`` deadlined requests fail with ``DeadlineExceeded``
+      (shed at flush, before compute);
+    * the ``k`` faulted requests fail with ``SolverError`` carrying a
+      known retcode and the lane's stats slice;
+    * everyone else succeeds, and the fallback bundle's Solutions are
+      flagged ``degraded``;
+    * ``metrics()`` / ``metrics_prometheus()`` reconcile the failure
+      and degraded counters against the observed Futures.
+    """
+    from repro.serve.solver import ProblemFamily, SolverServer
+    from repro.serve.solver.server import DeadlineExceeded, SolverError
+    tag = f"[serving seed={seed} requests={requests} k={k} shed={shed}]"
+    if k + shed > requests:
+        raise ValueError("k + shed must not exceed requests")
+
+    fam = chaotic_robertson_family()
+    srv = SolverServer(
+        [ProblemFamily("chaos_rob", 3, fam[0], fam[1], fam[2], fam[3])],
+        bucket_sizes=(bucket,), max_batch=bucket, max_wait=1e-3,
+        max_depth=2 * bucket)
+    rng = random.Random(seed)
+    marked = rng.sample(range(requests), k + shed)
+    faulted, deadlined = set(marked[:k]), set(marked[k:])
+
+    def params(i):
+        return {"k1": 0.04, "k2": 1.2e4, "k3": 3e7,
+                "t_fault": (rng.uniform(0.3, 0.7) * tf
+                            if i in faulted else math.inf)}
+
+    futs = []
+    try:
+        for i in range(requests):
+            futs.append(srv.submit(
+                "chaos_rob", [1.0, 0.0, 0.0], 0.0, tf,
+                params=params(i),
+                deadline=1e-9 if i in deadlined else None))
+            if len(futs) % bucket == 0:
+                srv.drain()
+        srv.drain()
+        # one extra healthy bundle through an injected executable
+        # failure: primary raises, the jnp-oracle fallback serves it
+        with failing_executions(srv, k=1) as box:
+            fallback_futs = [
+                srv.submit("chaos_rob", [1.0, 0.0, 0.0], 0.0, tf,
+                           params=params(-1))
+                for _ in range(4)]
+            srv.drain()
+        futs.extend(fallback_futs)
+    finally:
+        srv.stop()
+
+    hung = [i for i, fut in enumerate(futs) if not fut.done()]
+    assert not hung, f"{tag} {len(hung)} hung futures: {hung[:16]}"
+    got_deadline, got_retcode, got_ok, degraded_ok = set(), set(), 0, 0
+    for i, fut in enumerate(futs):
+        exc = fut.exception()
+        if exc is None:
+            sol = fut.result()
+            assert bool(np.asarray(sol.ok).all()), (
+                f"{tag} request {i} resolved with ok=False")
+            got_ok += 1
+            degraded_ok += bool(sol.degraded)
+        elif isinstance(exc, DeadlineExceeded):
+            got_deadline.add(i)
+        elif isinstance(exc, SolverError):
+            assert exc.retcode in status.RETCODE_NAMES and \
+                exc.retcode != status.SUCCESS, (
+                    f"{tag} request {i} failed with untyped retcode "
+                    f"{exc.retcode}")
+            assert exc.stats is not None, (
+                f"{tag} request {i} SolverError carries no lane stats")
+            got_retcode.add(i)
+        else:                               # pragma: no cover
+            raise AssertionError(
+                f"{tag} request {i} failed with non-solver exception "
+                f"{type(exc).__name__}: {exc}")
+    assert got_deadline == deadlined, (
+        f"{tag} deadline sheds {sorted(got_deadline)[:8]}... != planned")
+    assert got_retcode == faulted, (
+        f"{tag} retcode failures != planned faults: "
+        f"extra={sorted(got_retcode - faulted)[:8]} "
+        f"missing={sorted(faulted - got_retcode)[:8]}")
+    assert got_ok == requests - k - shed + len(fallback_futs)
+    assert degraded_ok == len(fallback_futs), (
+        f"{tag} fallback bundle not flagged degraded")
+    assert box["raised"] == 1
+
+    m = srv.metrics()
+    assert m["failures"].get("deadline", 0) == shed, (
+        f"{tag} metrics deadline count {m['failures']} != {shed}")
+    retcode_failures = sum(v for r, v in m["failures"].items()
+                           if r not in ("deadline", "exec_error"))
+    assert retcode_failures == k, (
+        f"{tag} metrics retcode failures {m['failures']} != {k}")
+    assert m["degraded"] == 1
+    prom = srv.metrics_prometheus()
+    assert 'repro_serve_failures_total{reason="deadline"}' in prom
+    assert "repro_serve_degraded_total 1" in prom
+
+    return {"suite": "serving", "seed": seed, "requests": len(futs),
+            "failed_retcode": len(got_retcode),
+            "failed_deadline": len(got_deadline),
+            "succeeded": got_ok, "degraded_bundles": m["degraded"],
+            "failures_by_reason": m["failures"]}
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.testing.chaos",
+        description="Deterministic fault-injection acceptance suite "
+                    "(core quarantine containment + serving graceful "
+                    "degradation).")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the CI-sized acceptance configuration")
+    ap.add_argument("--nsys", type=int, default=4096,
+                    help="ensemble width for the jnp core pass")
+    ap.add_argument("--faults", type=int, default=8,
+                    help="faulted lanes in the core pass")
+    ap.add_argument("--requests", type=int, default=10000,
+                    help="serving-pass request count")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    del args.smoke   # --smoke IS the acceptance run; flag kept for CI
+    import jax
+    jax.config.update("jax_enable_x64", True)
+
+    reports = []
+    try:
+        print(f"[chaos] core jnp: nsys={args.nsys} k={args.faults} "
+              f"seed={args.seed}", flush=True)
+        reports.append(run_core_chaos(args.nsys, args.faults,
+                                      seed=args.seed))
+        print("[chaos] core jnp (divergent mode): nsys=64 k=4",
+              flush=True)
+        reports.append(run_core_chaos(64, 4, seed=args.seed + 1,
+                                      mode="divergent"))
+        from repro.core.policies import ExecPolicy
+        print("[chaos] core pallas-interpret: nsys=64 k=3", flush=True)
+        reports.append(run_core_chaos(
+            64, 3, seed=args.seed + 2,
+            policy=ExecPolicy(backend="pallas", interpret=True,
+                              batch_tile=64),
+            check_bitwise=False))
+        print(f"[chaos] serving: requests={args.requests} k=32 shed=16 "
+              f"seed={args.seed}", flush=True)
+        reports.append(run_serving_chaos(args.requests, 32, 16,
+                                         seed=args.seed))
+    except AssertionError as exc:
+        print(f"[chaos] FAIL: {exc}", file=sys.stderr)
+        return 1
+    print(json.dumps({"ok": True, "reports": reports}, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

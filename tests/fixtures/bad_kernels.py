@@ -96,6 +96,31 @@ def _setup_silent_upcast(ctx):
     ctx.hot_loop_targets = [_silent_upcast_target()]
 
 
+# --- bounded-loops ---------------------------------------------------------
+# A Newton-style while whose condition is purely float: "iterate until
+# the residual is small".  The moment a lane's residual goes NaN the
+# `> tol` comparison is false... but so is every later one, and a
+# `~converged`-style wrapper flips it right back — either way there is
+# no integer ceiling, so the loop's trip count is unbounded.
+
+
+def _unbounded_newton_target():
+    def thunk():
+        def body(z):
+            return z * 0.5 + 1.0
+
+        def run(z):
+            return lax.while_loop(
+                lambda z: jnp.max(jnp.abs(z - 2.0)) > 1e-10, body, z)
+
+        return jax.make_jaxpr(run)(jnp.ones(8)).jaxpr
+    return lint.TraceTarget("bad:unbounded_newton", thunk)
+
+
+def _setup_unbounded_newton(ctx):
+    ctx.hot_loop_targets = [_unbounded_newton_target()]
+
+
 # --- kernel-contract -------------------------------------------------------
 # An OpSig whose minimum lane tile already exceeds the compiled
 # devices' VMEM budget: b=64 float64 block solve needs
@@ -188,6 +213,7 @@ def _setup_leaky_telemetry(ctx):
 
 FIXTURES = {
     "hidden_transpose": ("hot-loop-layout", _setup_hidden_transpose),
+    "unbounded_newton": ("bounded-loops", _setup_unbounded_newton),
     "aliased_donation": ("donation-aliasing", _setup_aliased_donation),
     "silent_upcast": ("dtype-drift", _setup_silent_upcast),
     "oversize_tile": ("kernel-contract", _setup_oversize_tile),

@@ -1,0 +1,394 @@
+"""Fault-containment suite: per-lane retcodes, quarantine masking,
+session hygiene after failure, serving-tier graceful degradation, and
+the deterministic chaos injectors that drive all of it.
+
+The invariants under test (PR 10):
+
+* k injected faults produce EXACTLY k non-success retcodes — at the
+  injected lanes, with the rest of the ensemble bitwise clean (jnp);
+* quarantined lanes freeze at their last ACCEPTED state (finite), and
+  re-enter later legs through the cold-start sentinel;
+* the serving tier fails ONLY the offending requests' Futures, with
+  typed errors (retcode + lane stats / deadline / exec), and can
+  degrade a bundle to the jnp oracle after a backend failure.
+"""
+import numpy as np
+import pytest
+
+from repro.core import status
+from repro.core.batched import (SolverSession, ensemble_bdf_integrate,
+                                ensemble_bdf_integrate_sharded,
+                                ensemble_dirk_integrate)
+from repro.core.butcher import DIRK_TABLES
+from repro.core.context import Context
+from repro.core.ivp import IVP, integrate
+from repro.core.policies import ExecPolicy
+from repro.core.problems import (batched_robertson,
+                                 batched_robertson_soa,
+                                 robertson_family)
+from repro.observability.config import ObservabilityConfig
+from repro.serve.solver import (AdmissionQueue, ProblemFamily,
+                                RetryAfter, SolverServer)
+from repro.serve.solver.queue import IVPRequest
+from repro.serve.solver.server import DeadlineExceeded, SolverError
+from repro.testing.chaos import (ChaosPlan, chaotic_robertson_family,
+                                 failing_executions, poison_rhs,
+                                 run_core_chaos)
+
+ROB_PARAMS = {"k1": 0.04, "k2": 1.2e4, "k3": 3e7}
+
+
+# ---------------------------------------------------------------------------
+# retcode vocabulary
+# ---------------------------------------------------------------------------
+
+class TestStatus:
+    def test_names_and_flags(self):
+        assert status.retcode_name(status.SUCCESS) == "SUCCESS"
+        assert status.retcode_name(status.CONV_FAILURE) == "CONV_FAILURE"
+        assert status.retcode_name(-999) == "UNKNOWN(-999)"
+        assert status.is_success(0) and not status.is_success(-4)
+        # every retcode maps onto a documented SUNDIALS flag
+        assert set(status.SUNDIALS_FLAGS) == set(status.RETCODE_NAMES)
+        assert status.SUNDIALS_FLAGS[status.RHSFUNC_FAIL] == \
+            "CV_RHSFUNC_FAIL"
+
+
+# ---------------------------------------------------------------------------
+# seeded fault plans
+# ---------------------------------------------------------------------------
+
+class TestChaosPlan:
+    def test_deterministic_and_bounded(self):
+        a = ChaosPlan.draw(64, 5, 0.0, 1.0, seed=7)
+        b = ChaosPlan.draw(64, 5, 0.0, 1.0, seed=7)
+        assert a == b
+        assert ChaosPlan.draw(64, 5, 0.0, 1.0, seed=8) != a
+        assert list(a.lanes) == sorted(set(a.lanes))
+        assert all(0 <= l < 64 for l in a.lanes)
+        assert all(0.3 <= t <= 0.7 for t in a.onsets)
+        assert a.mask().sum() == 5
+        v = a.onset_vector()
+        assert np.isinf(v).sum() == 64 - 5
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            ChaosPlan.draw(4, 5, 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# core containment (tentpole part 1)
+# ---------------------------------------------------------------------------
+
+class TestCoreContainment:
+    def test_no_fault_run_is_all_success(self):
+        f, jac, y0 = batched_robertson(4)
+        _, st = ensemble_bdf_integrate(f, jac, y0, 0.0, 0.2)
+        assert np.all(np.asarray(st.retcodes) == 0)
+        assert np.all(np.asarray(st.ok))
+
+    def test_nan_faults_exactly_k_and_bitwise(self):
+        r = run_core_chaos(24, 3, seed=1, tf=0.3)
+        assert r["failed"] == 3 and r["bitwise_checked"]
+
+    def test_divergent_faults_contained(self):
+        r = run_core_chaos(12, 2, seed=2, tf=0.3, mode="divergent")
+        assert r["failed"] == 2
+        assert set(r["retcodes"].values()) <= {"ERR_FAILURE",
+                                               "CONV_FAILURE"}
+
+    def test_pallas_interpret_containment(self):
+        # masked-reduction containment on the kernel path: faults stay
+        # in their lanes through the fused WRMS/Newton reductions too
+        r = run_core_chaos(
+            16, 2, seed=3, tf=0.25,
+            policy=ExecPolicy(backend="pallas", interpret=True,
+                              batch_tile=16),
+            check_bitwise=False)
+        assert r["failed"] == 2
+
+    def test_dirk_lane_quarantine(self):
+        nsys, tf = 6, 0.02
+        f, jac, y0 = batched_robertson(nsys)
+        plan = ChaosPlan.draw(nsys, 1, 0.0, tf, seed=5)
+        y, st = ensemble_dirk_integrate(
+            poison_rhs(f, plan, mode="nan"), jac, y0, 0.0, tf,
+            DIRK_TABLES["sdirk2"])
+        rcs = np.asarray(st.retcodes)
+        assert set(np.flatnonzero(rcs != 0)) == set(plan.lanes)
+        assert np.array_equal(np.asarray(st.ok), rcs == 0)
+        healthy = ~plan.mask()
+        assert np.isfinite(np.asarray(y)[healthy]).all()
+
+    def test_sharded_containment(self):
+        nsys, tf = 8, 0.2
+        f, jac, y0 = batched_robertson(nsys)
+        plan = ChaosPlan.draw(nsys, 2, 0.0, tf, seed=4)
+        y, st = ensemble_bdf_integrate_sharded(
+            poison_rhs(f, plan, mode="nan"), jac, y0, 0.0, tf)
+        rcs = np.asarray(st.retcodes)
+        assert set(np.flatnonzero(rcs != 0)) == set(plan.lanes)
+        assert np.isfinite(np.asarray(y)[~plan.mask()]).all()
+
+    def test_solution_surfaces_retcodes_and_event(self):
+        nsys, tf = 6, 0.2
+        f, jac, y0 = batched_robertson(nsys)
+        plan = ChaosPlan.draw(nsys, 2, 0.0, tf, seed=6)
+        ctx = Context(observability=ObservabilityConfig(
+            log_level="WARNING"))
+        sol = integrate(
+            IVP(f=poison_rhs(f, plan, mode="nan"), jac=jac, y0=y0),
+            0.0, tf, "ensemble_bdf", ctx=ctx)
+        rcs = np.asarray(sol.retcodes)
+        assert set(np.flatnonzero(rcs != 0)) == set(plan.lanes)
+        assert np.array_equal(np.asarray(sol.ok), rcs == 0)
+        assert not sol.degraded
+        ev = [e for e in ctx.logger.events
+              if e["event"] == "integrate.lane_failed"]
+        assert len(ev) == 1 and ev[0]["failed"] == 2
+        assert set(ev[0]["lanes"]) == set(plan.lanes)
+
+
+# ---------------------------------------------------------------------------
+# session hygiene after failure (satellite b)
+# ---------------------------------------------------------------------------
+
+class TestSessionHygiene:
+    def test_mid_leg_nan_lane_cold_restarts(self):
+        nsys, tm, tf = 6, 0.15, 0.4
+        f, jac, y0 = batched_robertson(nsys)
+        f_soa, jac_soa = batched_robertson_soa(nsys)
+        fault_lane = 2
+        plan = ChaosPlan(nsys=nsys, lanes=(fault_lane,), onsets=(0.08,))
+
+        clean = integrate(IVP(f=f, jac=jac, f_soa=f_soa,
+                              jac_soa=jac_soa, y0=y0),
+                          0.0, tf, "ensemble_bdf")
+        leg1_y, leg1_st, sess = ensemble_bdf_integrate(
+            poison_rhs(f, plan, mode="nan"), jac, y0, 0.0, tm,
+            f_soa=poison_rhs(f_soa, plan, mode="nan", soa=True),
+            jac_soa=jac_soa, return_session=True)
+        rcs1 = np.asarray(leg1_st.retcodes)
+        assert rcs1[fault_lane] != 0
+        assert np.all(np.delete(rcs1, fault_lane) == 0)
+        # failed lane exported with the cold-start sentinel: h == 0,
+        # reset order/step counters, last ACCEPTED (finite) state
+        assert float(sess.h[fault_lane]) == 0.0
+        assert int(sess.q[fault_lane]) == 1
+        assert int(sess.steps[fault_lane]) == 0
+        assert float(sess.t[fault_lane]) < tm
+        assert np.isfinite(np.asarray(leg1_y)).all()
+        # healthy lanes keep their warm handles
+        assert np.all(np.asarray(sess.h) > 0.0) or True
+        assert np.all(np.delete(np.asarray(sess.h), fault_lane) > 0.0)
+
+        # leg 2 under the CLEAN rhs: the failed lane re-enters cold
+        # (from its quarantine-time state) and completes; healthy lanes
+        # continue warm — everyone succeeds
+        leg2_y, leg2_st, sess2 = ensemble_bdf_integrate(
+            f, jac, leg1_y, tm, tf, f_soa=f_soa, jac_soa=jac_soa,
+            session=sess, return_session=True)
+        assert np.all(np.asarray(leg2_st.retcodes) == 0)
+        assert np.all(np.asarray(leg2_st.ok))
+        assert np.allclose(np.asarray(sess2.t), tf)
+        # ... with trajectories agreeing with the uninterrupted clean
+        # run at tolerance level
+        rel = np.max(np.abs(np.asarray(leg2_y) - np.asarray(clean.y)) /
+                     (np.abs(np.asarray(clean.y)) + 1e-30))
+        assert rel < 1e-3
+        # cold restart accounting: the failed lane's cumulative session
+        # step count restarts from zero at leg 2
+        assert int(sess2.steps[fault_lane]) == \
+            int(leg2_st.steps[fault_lane])
+
+
+# ---------------------------------------------------------------------------
+# depth-proportional RetryAfter hints (satellite a)
+# ---------------------------------------------------------------------------
+
+def _req(n=3):
+    import jax.numpy as jnp
+    return IVPRequest(family="robertson", y0=jnp.zeros(n), t0=0.0,
+                      tf=0.2)
+
+
+class TestRetryHint:
+    def test_preflush_fallback_scales_with_depth(self):
+        q = AdmissionQueue(bucket_sizes=(64,), max_batch=64,
+                           max_wait=1e-2, max_depth=10_000)
+        assert q.retry_hint() == pytest.approx(1e-2)   # empty: floor
+        for _ in range(640):
+            q.offer(_req(), now=0.0)
+        # 10 flush windows of backlog -> 10x max_wait
+        assert q.retry_hint() == pytest.approx(1e-1)
+
+    def test_drain_rate_ema_drives_hint(self):
+        q = AdmissionQueue(bucket_sizes=(4,), max_batch=4,
+                           max_wait=1e-3, max_depth=10_000)
+        for t in (0.0, 1.0):
+            for _ in range(4):
+                q.offer(_req(), now=t)
+            q.poll(now=t + 0.5, flush_all=True)
+        # second flush observed 4 requests / 1.0 s -> rate 4/s
+        for _ in range(8):
+            q.offer(_req(), now=2.0)
+        assert q.retry_hint() == pytest.approx(8 / 4.0)
+        # deeper backlog -> proportionally longer hint
+        for _ in range(8):
+            q.offer(_req(), now=2.0)
+        assert q.retry_hint() == pytest.approx(16 / 4.0)
+
+    def test_reject_carries_hint_and_clamp(self):
+        q = AdmissionQueue(bucket_sizes=(4,), max_batch=4,
+                           max_wait=1e-3, max_depth=2)
+        q.offer(_req(), now=0.0)
+        q.offer(_req(), now=0.0)
+        with pytest.raises(RetryAfter) as ei:
+            q.offer(_req(), now=0.0)
+        assert ei.value.retry_after == pytest.approx(q.retry_hint())
+        assert 1e-3 <= ei.value.retry_after <= 30.0
+
+
+# ---------------------------------------------------------------------------
+# serving-tier graceful degradation (tentpole part 2)
+# ---------------------------------------------------------------------------
+
+def _chaos_server(**kw):
+    fam = chaotic_robertson_family()
+    ctx = Context(observability=ObservabilityConfig(
+        log_level="WARNING"))
+    kw.setdefault("bucket_sizes", (4,))
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_wait", 1e-3)
+    return SolverServer(
+        [ProblemFamily("chaos_rob", 3, fam[0], fam[1], fam[2],
+                       fam[3])], ctx=ctx, **kw)
+
+
+def _params(t_fault=np.inf):
+    return {**ROB_PARAMS, "t_fault": float(t_fault)}
+
+
+class TestServingFaults:
+    def test_lane_fault_fails_only_offender(self):
+        srv = _chaos_server()
+        try:
+            healthy = [srv.submit("chaos_rob", [1.0, 0.0, 0.0], 0.0,
+                                  0.2, params=_params())
+                       for _ in range(3)]
+            bad = srv.submit("chaos_rob", [1.0, 0.0, 0.0], 0.0, 0.2,
+                             params=_params(t_fault=0.1))
+            srv.drain()
+            with pytest.raises(SolverError) as ei:
+                bad.result(timeout=5)
+            assert ei.value.retcode in (status.CONV_FAILURE,
+                                        status.RHSFUNC_FAIL)
+            assert ei.value.retcode_name in ("CONV_FAILURE",
+                                             "RHSFUNC_FAIL")
+            assert ei.value.stats is not None
+            assert int(ei.value.stats.retcodes) == ei.value.retcode
+            for fut in healthy:
+                sol = fut.result(timeout=5)
+                assert bool(sol.success) and bool(np.asarray(sol.ok))
+                assert int(np.asarray(sol.retcodes)) == 0
+                assert not sol.degraded
+            ev = [e["event"] for e in srv.ctx.logger.events]
+            assert "serve.lane_failed" in ev
+            m = srv.metrics()
+            assert sum(m["failures"].values()) == 1
+            assert 'reason="' in srv.metrics_prometheus()
+        finally:
+            srv.stop()
+
+    def test_deadline_shed_before_compute(self):
+        srv = _chaos_server()
+        try:
+            with pytest.raises(ValueError, match="deadline"):
+                srv.submit("chaos_rob", [1.0, 0.0, 0.0], 0.0, 0.2,
+                           params=_params(), deadline=0.0)
+            doomed = srv.submit("chaos_rob", [1.0, 0.0, 0.0], 0.0,
+                                0.2, params=_params(), deadline=1e-9)
+            ok = srv.submit("chaos_rob", [1.0, 0.0, 0.0], 0.0, 0.2,
+                            params=_params())
+            srv.drain()
+            with pytest.raises(DeadlineExceeded):
+                doomed.result(timeout=5)
+            assert bool(ok.result(timeout=5).success)
+            assert srv.metrics()["failures"]["deadline"] == 1
+            ev = [e["event"] for e in srv.ctx.logger.events]
+            assert "serve.deadline_shed" in ev
+            assert ('repro_serve_failures_total{reason="deadline"} 1'
+                    in srv.metrics_prometheus())
+        finally:
+            srv.stop()
+
+    def test_executable_raise_degrades_to_oracle(self):
+        srv = _chaos_server()
+        try:
+            with failing_executions(srv, k=1) as box:
+                futs = [srv.submit("chaos_rob", [1.0, 0.0, 0.0], 0.0,
+                                   0.2, params=_params())
+                        for _ in range(2)]
+                srv.drain()
+            assert box["raised"] == 1
+            for fut in futs:
+                sol = fut.result(timeout=5)
+                assert bool(sol.success) and sol.degraded
+            m = srv.metrics()
+            assert m["degraded"] == 1 and not m["failures"]
+            ev = [e["event"] for e in srv.ctx.logger.events]
+            assert "serve.bundle.degraded" in ev
+            assert ("repro_serve_degraded_total 1"
+                    in srv.metrics_prometheus())
+        finally:
+            srv.stop()
+
+    def test_fallback_failure_fails_futures_typed(self):
+        srv = _chaos_server()
+        try:
+            with failing_executions(srv, k=2):   # primary AND fallback
+                fut = srv.submit("chaos_rob", [1.0, 0.0, 0.0], 0.0,
+                                 0.2, params=_params())
+                with pytest.raises(RuntimeError):
+                    srv.drain()
+            with pytest.raises(SolverError):
+                fut.result(timeout=5)
+            assert srv.metrics()["failures"]["exec_error"] == 1
+        finally:
+            srv.stop()
+
+    def test_submit_with_retry_backoff(self):
+        srv = _chaos_server(max_depth=1)
+        try:
+            srv.submit("chaos_rob", [1.0, 0.0, 0.0], 0.0, 0.2,
+                       params=_params())           # queue now full
+            sleeps = []
+
+            def sleep(s):
+                sleeps.append(s)
+                srv.drain()                        # frees the queue
+
+            fut = srv.submit_with_retry(
+                "chaos_rob", [1.0, 0.0, 0.0], 0.0, 0.2,
+                params=_params(), seed=0, sleep=sleep)
+            srv.drain()
+            assert bool(fut.result(timeout=5).success)
+            assert len(sleeps) == 1 and sleeps[0] > 0
+        finally:
+            srv.stop()
+
+    def test_submit_with_retry_exhaustion(self):
+        srv = _chaos_server(max_depth=1)
+        try:
+            srv.submit("chaos_rob", [1.0, 0.0, 0.0], 0.0, 0.2,
+                       params=_params())
+            sleeps = []
+            with pytest.raises(RetryAfter):
+                srv.submit_with_retry(
+                    "chaos_rob", [1.0, 0.0, 0.0], 0.0, 0.2,
+                    params=_params(), retries=2, seed=0,
+                    sleep=sleeps.append)
+            # jittered exponential: strictly growing delays
+            assert len(sleeps) == 2 and sleeps[1] > sleeps[0]
+        finally:
+            srv.stop()
